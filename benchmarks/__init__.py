@@ -1,0 +1,10 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bandwidth.py   — Table II bandwidth amplification (claim C1, kernel level)
+  footprint.py   — Tables I/II area analogue (claim C2)
+  engine_bench.py— system-level C1: multi-port vs single-port serving engine
+  kernels_bench.py — per-kernel micro costs (flash attention, fused decode)
+  roofline.py    — §Roofline: three-term model from dry-run artifacts
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``.
+"""

@@ -1,0 +1,64 @@
+"""Paper Tables I/II — area (footprint) analogue, claim C2.
+
+For equal logical capacity (a 16 Kb-scaled macro) and a 1W/3R port mix:
+proposed wrapper (1x storage + port metadata) vs bitcell-widening replication
+(one replica per read port) vs XOR-coded banks (paper ref [11]). The paper's
+8% wrapper overhead maps to port-queue metadata / storage bytes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import MemorySpec, PortConfig, READ, WRITE
+from repro.core.baselines import ReplicatedReads, SinglePortNPass, XorCoded
+
+# a 16 Kb bit-equivalent macro (paper array size), word width 128 f32
+SPEC = MemorySpec(num_words=4096, word_width=128, num_banks=16)
+# queue depth 64: the wrapper metadata (port queues + staging registers)
+# amortizes to single-digit % of the macro, matching the paper's 8% regime;
+# deeper queues trade metadata for fewer macro-cycles (a knob the paper's
+# fixed-function wrapper does not have).
+Q = 64
+CFG = PortConfig(enabled=(True, True, True, True),
+                 roles=(WRITE, READ, READ, READ))
+
+
+def run() -> list[dict]:
+    word_bytes = SPEC.word_width * jnp.dtype(SPEC.dtype).itemsize
+    storage_bytes = SPEC.num_words * word_bytes
+    # wrapper metadata: 4 port queues (addr int32 + mask byte + staging data)
+    meta_bytes = 4 * Q * (4 + 1 + word_bytes)
+    rows = [{
+        "design": "proposed-wrapper(6T)",
+        "footprint_bytes": storage_bytes + meta_bytes,
+        "relative_area": (storage_bytes + meta_bytes) / storage_bytes,
+        "overhead_pct": 100 * meta_bytes / storage_bytes,   # paper: 8%
+        "ports": "4 configurable",
+    }]
+    for name, counters, ports in [
+        ("single-port(bare 6T)", SinglePortNPass(SPEC).counters(CFG, Q), "1 (N-pass)"),
+        ("replicated(8T/12T school)", ReplicatedReads(SPEC, 3).counters(CFG, Q),
+         "1W+3R fixed"),
+        ("xor-coded(ref [11])", XorCoded(SPEC).counters(CFG, Q), "2 eff. fixed"),
+    ]:
+        fb = counters.footprint_words * word_bytes
+        rows.append({
+            "design": name,
+            "footprint_bytes": fb,
+            "relative_area": fb / storage_bytes,
+            "overhead_pct": 100 * (fb - storage_bytes) / storage_bytes,
+            "ports": ports,
+        })
+    return rows
+
+
+def main() -> None:
+    print("# footprint / area analogue (paper Tables I & II, claim C2)")
+    print("design,footprint_bytes,relative_area,overhead_pct,ports")
+    for r in run():
+        print(f"{r['design']},{r['footprint_bytes']},"
+              f"{r['relative_area']:.3f},{r['overhead_pct']:.1f},{r['ports']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md-ready markdown from dry-run artifacts:
+§Roofline table (final code) and the hillclimb before/after comparison.
+
+    PYTHONPATH=src python -m benchmarks.report [--baseline artifacts/dryrun_baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import analyze_record, load_all
+
+
+def table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | MFU@bottleneck |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR ||||||")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_mfu']:.4f} |")
+    return "\n".join(out)
+
+
+def compare(final_dir: str, base_dir: str, cells: list[str]) -> str:
+    out = ["| cell | term | baseline | final | gain |",
+           "|---|---|---|---|---|"]
+    for cell in cells:
+        fp = os.path.join(final_dir, cell + ".json")
+        bp = os.path.join(base_dir, cell + ".json")
+        if not (os.path.exists(fp) and os.path.exists(bp)):
+            continue
+        f = analyze_record(json.load(open(fp)))
+        b = analyze_record(json.load(open(bp)))
+        for term in ("compute_s", "memory_s", "collective_s"):
+            gain = b[term] / max(f[term], 1e-12)
+            out.append(f"| {cell} | {term[:-2]} | {b[term]:.3g} "
+                       f"| {f[term]:.3g} | {gain:.1f}x |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--baseline", default="artifacts/dryrun_baseline")
+    args = ap.parse_args()
+    rows = load_all(args.out)
+    print("## §Roofline (final code)\n")
+    print(table(rows))
+    n_err = sum("error" in r for r in rows)
+    print(f"\n{len(rows) - n_err}/{len(rows)} cells ok\n")
+    if os.path.isdir(args.baseline):
+        print("## Hillclimb before/after (same analyzer where possible)\n")
+        print(compare(args.out, args.baseline, [
+            "zamba2-7b__train_4k__single",
+            "llama3-405b__decode_32k__single",
+            "deepseek-moe-16b__train_4k__single",
+        ]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Run every benchmark. One section per paper table/figure; CSV lines of
+``name,us_per_call,derived`` style. Roofline runs only when dry-run
+artifacts exist (see repro.launch.dryrun)."""
+from __future__ import annotations
+
+import os
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bandwidth, engine_bench, footprint, kernels_bench
+
+    sections = [
+        ("bandwidth (Table II / C1)", bandwidth.main),
+        ("footprint (Tables I-II / C2)", footprint.main),
+        ("engine (system-level C1)", engine_bench.main),
+        ("kernels (micro)", kernels_bench.main),
+    ]
+    if os.path.isdir("artifacts/dryrun") and os.listdir("artifacts/dryrun"):
+        from benchmarks import roofline
+        sections.append(("roofline (from dry-run artifacts)", roofline.main))
+
+    failures = []
+    for name, fn in sections:
+        print(f"\n===== {name} =====")
+        try:
+            fn()
+        except Exception:  # keep the harness going; fail at the end
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fault-tolerance demo: a training run that crashes twice, restarts from
+checkpoints, and finishes with exactly the loss trajectory of an
+uninterrupted run (step-addressable data + atomic checkpoints).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.distributed.fault import FailureInjector
+from repro.models import init_params
+from repro.optim import AdamWConfig
+from repro.train.loop import RunnerConfig, TrainingRunner
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    tcfg = TrainConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60,
+                       adamw=AdamWConfig(weight_decay=0.0))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    loader = ShardedLoader(cfg, DataConfig(seed=0), batch=8, seq=16)
+
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        clean = TrainingRunner(step, state, loader.get,
+                               RunnerConfig(ckpt_dir=d1, ckpt_every=10,
+                                            async_ckpt=False))
+        clean.run(40)
+
+        faulty = TrainingRunner(
+            step, state, loader.get,
+            RunnerConfig(ckpt_dir=d2, ckpt_every=10, async_ckpt=False,
+                         heartbeat_dir=d2 + "/hb"),
+            injector=FailureInjector(fail_at_steps=(13, 27)))
+        faulty.run(40)
+
+        print(f"restarts: {faulty.restarts} (crashed at steps 13 and 27)")
+        a = {h["step"]: h["ce"] for h in clean.history}
+        b = {h["step"]: h["ce"] for h in faulty.history}
+        drift = max(abs(a[s] - b[s]) for s in range(30, 40))
+        print(f"post-restart loss drift vs uninterrupted run: {drift:.2e}")
+        assert drift < 1e-5
+        print("OK: recovery is exact — checkpoint + step-addressable data.")
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

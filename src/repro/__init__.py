@@ -1,0 +1,12 @@
+"""repro: configurable multi-port memory architecture for TPU-native JAX systems.
+
+Reproduction + beyond-paper optimization of:
+  "Configurable Multi-Port Memory Architecture for High-Speed Data Communication"
+  (Dhakad & Vishvakarma, 2024).
+
+The paper's circuit-level insight -- virtualize one physical access channel into N
+configurable logical ports by priority-ordered time multiplexing -- is adapted to the
+TPU memory hierarchy: one HBM<->VMEM tile traversal services N logical port queues.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,157 @@
+"""Checkpointing: sharded-safe, manifest-verified, async, reshardable.
+
+Layout (one directory per step):
+    <root>/step_000123/
+        manifest.json    — tree structure, shapes, dtypes, crc32 per leaf, step
+        arrays.npz       — one entry per leaf (path-encoded keys)
+    <root>/step_000123.tmp/   — staging; atomic rename on completion
+
+Fault-tolerance properties:
+  * atomic: a crashed save never leaves a half-readable step directory;
+  * verified: restore checks crc32 of every leaf against the manifest;
+  * reshardable: restore takes target shardings and device_puts each leaf,
+    so a job restarted on a DIFFERENT mesh (elastic down/up-scale) loads the
+    same checkpoint (tests/distributed/test_elastic.py);
+  * async: ``save_async`` snapshots to host then writes on a worker thread,
+    returning a handle — training continues during the write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save(root: str, step: int, tree: PyTree, *, extra: Optional[dict] = None,
+         keep_last: int = 3) -> str:
+    """Synchronous checkpoint write. Returns the step directory path."""
+    flat = _flatten(tree)
+    return _write(root, step, flat, extra or {}, keep_last)
+
+
+def _write(root: str, step: int, flat: dict[str, np.ndarray], extra: dict,
+           keep_last: int) -> str:
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "extra": extra, "leaves": {}}
+    for k, v in flat.items():
+        manifest["leaves"][k] = {
+            "shape": list(v.shape), "dtype": str(v.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+        }
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _gc(root, keep_last)
+    return final
+
+
+def _gc(root: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(root)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(os.path.join(root, d))
+
+
+class AsyncSaver:
+    """Snapshot-then-write on a background thread (one in flight at a time)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, root: str, step: int, tree: PyTree, *,
+             extra: Optional[dict] = None, keep_last: int = 3) -> None:
+        self.wait()
+        flat = _flatten(tree)                  # snapshot on caller thread
+
+        def work():
+            try:
+                _write(root, step, flat, extra or {}, keep_last)
+            except BaseException as e:         # surfaced on next wait()
+                self._error = e
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(root)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(root: str, template: PyTree, *, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``template``; verify checksums; place
+    leaves per ``shardings`` (same treedef as template) when given."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves_p))
+    out = []
+    for (path, leaf), shd in zip(leaves_p, shard_leaves):
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        meta = manifest["leaves"][key]
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {key}")
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return treedef.unflatten(out), manifest

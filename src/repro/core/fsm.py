@@ -1,0 +1,86 @@
+"""Finite state machine — the port-walk sequencer.
+
+Paper mapping (Fig. 2, §II-A-4): the FSM transitions between enabled ports in
+priority order, one SRAM access per internal slot, and is asynchronously reset
+to the highest-priority enabled port at each external CLK posedge.
+
+Two realizations:
+
+* ``walk_static``   — trace-time unrolled walk (used by ``multiport.step``; the
+  port count is <= 4 so unrolling is free and lets XLA fuse the slot bodies).
+* ``walk_dynamic``  — in-graph walk via ``lax.scan`` over MAX_PORTS slots with a
+  dynamic enable mask; used where the port configuration is itself traced
+  (e.g. the serving engine reconfigures ports per request batch without
+  retracing).
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+from repro.core.ports import MAX_PORTS, PortConfig
+
+S = TypeVar("S")
+
+
+def walk_static(config: PortConfig, state: S,
+                service: Callable[[S, int], S]) -> S:
+    """Visit each enabled port once, in priority order (one macro-cycle).
+
+    Args:
+      config: static port configuration.
+      state: carried state (e.g. (storage, read_outputs)).
+      service: slot body; called as service(state, port_id) for each slot.
+    """
+    for port in config.service_order():
+        state = service(state, port)
+    return state
+
+
+def walk_dynamic(enabled_mask: jax.Array, priority_perm: jax.Array, state: S,
+                 service: Callable[[S, jax.Array, jax.Array], S]) -> S:
+    """In-graph walk: always runs MAX_PORTS slots; disabled slots are no-ops.
+
+    ``service(state, port_id, active)`` must be a no-op when ``active`` is
+    False (the caller typically masks its scatter/gather with ``active``).
+
+    The slot->port mapping is computed exactly as the hardware does it: slot k
+    services the k-th enabled port in priority order; trailing slots (k >= N)
+    are idle (active=False).
+    """
+    ranked_enabled = enabled_mask[priority_perm]                    # bool by rank
+    # slot k -> rank of k-th enabled rank; stable order of enabled ranks first.
+    order = jnp.argsort(~ranked_enabled, stable=True)               # enabled ranks first
+    slot_ports = priority_perm[order]                               # port ids per slot
+    slot_active = ranked_enabled[order]                             # validity per slot
+
+    def body(carry, slot):
+        port_id, active = slot
+        return service(carry, port_id, active), None
+
+    state, _ = jax.lax.scan(body, state, (slot_ports, slot_active))
+    return state
+
+
+def reset_state(enabled_mask: jax.Array, priority_perm: jax.Array) -> jax.Array:
+    """CLKP posedge behaviour: async load of the highest-priority enabled port."""
+    return prio.encode_dynamic(enabled_mask, priority_perm)
+
+
+def transition(current: jax.Array, enabled_mask: jax.Array,
+               priority_perm: jax.Array) -> jax.Array:
+    """CLK2 posedge behaviour: advance to the next enabled port (Fig. 2)."""
+    return prio.next_port_dynamic(current, enabled_mask, priority_perm)
+
+
+def walk_order_dynamic(enabled_mask: jax.Array, priority_perm: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (slot_ports int32[MAX_PORTS], slot_active bool[MAX_PORTS]).
+
+    Convenience used by kernels that need the schedule as arrays.
+    """
+    ranked_enabled = enabled_mask[priority_perm]
+    order = jnp.argsort(~ranked_enabled, stable=True)
+    return priority_perm[order].astype(jnp.int32), ranked_enabled[order]

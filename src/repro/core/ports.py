@@ -1,0 +1,150 @@
+"""Port bundles for the configurable multi-port memory wrapper.
+
+Paper mapping (Fig. 1): each external port carries ``port_en`` (enable), ``w/rb``
+(write / read-bar role), ``addr`` (address lines) and ``w_data`` (write data).
+On TPU a port is *vectorized*: one macro-cycle carries a queue of ``Q`` word
+requests per port (a 65nm SRAM port moves one word per cycle; a TPU lane-vector
+moves many — see DESIGN.md §2, assumption delta 1).
+
+``PortConfig`` is the static part (jit-specialization boundary): which ports are
+enabled, each port's R/W role, and the priority permutation. ``PortRequest`` is
+the traced part: addresses, data, and a per-lane validity mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+MAX_PORTS = 4  # the paper's wrapper exposes four external ports
+
+READ = 0
+WRITE = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PortConfig:
+    """Static configuration of the wrapper (the ``port_en`` / ``w/rb`` wires).
+
+    Attributes:
+      enabled:  per-port enable bits (``port_en``).
+      roles:    per-port READ/WRITE role (``w/rb``); ignored for disabled ports.
+      priority: permutation of range(MAX_PORTS); lower position = higher priority
+                (paper default A > B > C > D == identity permutation).
+    """
+
+    enabled: tuple[bool, ...]
+    roles: tuple[int, ...]
+    priority: tuple[int, ...] = tuple(range(MAX_PORTS))
+
+    def __post_init__(self) -> None:
+        if len(self.enabled) != MAX_PORTS or len(self.roles) != MAX_PORTS:
+            raise ValueError(f"PortConfig requires exactly {MAX_PORTS} port slots")
+        if sorted(self.priority) != list(range(MAX_PORTS)):
+            raise ValueError(f"priority must be a permutation of 0..{MAX_PORTS-1}")
+        if not any(self.enabled):
+            raise ValueError("at least one port must be enabled")
+        for r in self.roles:
+            if r not in (READ, WRITE):
+                raise ValueError("roles must be READ (0) or WRITE (1)")
+
+    # --- the "N ports en" block -------------------------------------------------
+    @property
+    def enabled_count(self) -> int:
+        """Number of enabled ports (the block that drives B1B0)."""
+        return sum(self.enabled)
+
+    @property
+    def b1b0(self) -> int:
+        """The 2-bit enabled-port count fed to the clock generator.
+
+        Paper encoding: 00 => 1-port, 01 => 2-port, 10 => 3-port, 11 => 4-port.
+        """
+        return self.enabled_count - 1
+
+    # --- priority encoder output -------------------------------------------------
+    def service_order(self) -> tuple[int, ...]:
+        """Enabled port indices in service order (highest priority first).
+
+        This is the composition of the priority encoder and the FSM walk of
+        Fig. 2: the FSM starts at the highest-priority enabled port and visits
+        each enabled port once per macro-cycle.
+        """
+        return tuple(p for p in self.priority if self.enabled[p])
+
+    def read_ports(self) -> tuple[int, ...]:
+        return tuple(p for p in range(MAX_PORTS) if self.enabled[p] and self.roles[p] == READ)
+
+    def write_ports(self) -> tuple[int, ...]:
+        return tuple(p for p in range(MAX_PORTS) if self.enabled[p] and self.roles[p] == WRITE)
+
+    def describe(self) -> str:
+        names = "ABCD"
+        parts = []
+        for p in self.priority:
+            if self.enabled[p]:
+                parts.append(f"{names[p]}:{'W' if self.roles[p] == WRITE else 'R'}")
+        return f"{self.enabled_count}-port[{' > '.join(parts)}]"
+
+
+def quad_port(roles: Sequence[int] = (WRITE, WRITE, READ, READ)) -> PortConfig:
+    """All four ports enabled (the paper's flagship 4-port mode)."""
+    return PortConfig(enabled=(True,) * 4, roles=tuple(roles))
+
+
+def single_port(role: int = READ) -> PortConfig:
+    """Degenerate 1-port mode — behaves exactly like the bare SRAM macro."""
+    return PortConfig(enabled=(True, False, False, False), roles=(role, READ, READ, READ))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PortRequest:
+    """One macro-cycle of traffic for one port.
+
+    Attributes:
+      addr: int32[Q]  word addresses.
+      data: dtype[Q, W]  write payload (ignored for read ports; zeros by convention).
+      mask: bool[Q]   lane validity (a disabled lane issues no transaction).
+    """
+
+    addr: jax.Array
+    data: jax.Array
+    mask: jax.Array
+
+    def tree_flatten(self):
+        return (self.addr, self.data, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def queue_len(self) -> int:
+        return self.addr.shape[-1]
+
+
+def empty_request(queue_len: int, word_width: int, dtype=jnp.float32) -> PortRequest:
+    """An all-invalid request bundle (for disabled ports)."""
+    return PortRequest(
+        addr=jnp.zeros((queue_len,), jnp.int32),
+        data=jnp.zeros((queue_len, word_width), dtype),
+        mask=jnp.zeros((queue_len,), bool),
+    )
+
+
+def read_request(addr: jax.Array, word_width: int, dtype=jnp.float32,
+                 mask: jax.Array | None = None) -> PortRequest:
+    addr = jnp.asarray(addr, jnp.int32)
+    if mask is None:
+        mask = jnp.ones(addr.shape, bool)
+    return PortRequest(addr=addr, data=jnp.zeros((*addr.shape, word_width), dtype), mask=mask)
+
+
+def write_request(addr: jax.Array, data: jax.Array, mask: jax.Array | None = None) -> PortRequest:
+    addr = jnp.asarray(addr, jnp.int32)
+    if mask is None:
+        mask = jnp.ones(addr.shape, bool)
+    return PortRequest(addr=addr, data=data, mask=mask)

@@ -1,0 +1,65 @@
+"""Priority encoder — static (trace-time) and dynamic (in-graph) variants.
+
+Paper mapping (Fig. 1, §II-A-3): the priority encoder assigns a fixed priority
+(default A > B > C > D) to the enabled ports; its output asynchronously loads
+the FSM back to the highest-priority enabled port at every external-clock edge.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core.ports import MAX_PORTS
+
+
+def encode_static(enabled: Sequence[bool], priority: Sequence[int]) -> int:
+    """Index of the highest-priority enabled port (trace-time)."""
+    for p in priority:
+        if enabled[p]:
+            return p
+    raise ValueError("no port enabled")
+
+
+def order_static(enabled: Sequence[bool], priority: Sequence[int]) -> tuple[int, ...]:
+    """All enabled ports, highest priority first (trace-time)."""
+    return tuple(p for p in priority if enabled[p])
+
+
+def encode_dynamic(enabled_mask: jnp.ndarray, priority: jnp.ndarray) -> jnp.ndarray:
+    """In-graph priority encoder.
+
+    Args:
+      enabled_mask: bool[MAX_PORTS], indexed by port id.
+      priority: int32[MAX_PORTS] permutation; priority[k] = port id with rank k.
+
+    Returns:
+      int32 scalar: highest-priority enabled port id. If nothing is enabled
+      (cannot happen through PortConfig) returns priority[-1].
+    """
+    ranked_enabled = enabled_mask[priority]                     # bool, rank-indexed
+    rank = jnp.argmax(ranked_enabled)                           # first True rank
+    return priority[rank].astype(jnp.int32)
+
+
+def rank_of(priority: jnp.ndarray) -> jnp.ndarray:
+    """Inverse permutation: rank_of(priority)[port] = rank of that port."""
+    inv = jnp.zeros((MAX_PORTS,), jnp.int32)
+    return inv.at[priority].set(jnp.arange(MAX_PORTS, dtype=jnp.int32))
+
+
+def next_port_dynamic(current: jnp.ndarray, enabled_mask: jnp.ndarray,
+                      priority: jnp.ndarray) -> jnp.ndarray:
+    """In-graph FSM transition: next enabled port after ``current`` in priority
+    order, wrapping to the highest-priority enabled port (Fig. 2)."""
+    ranks = rank_of(priority)
+    cur_rank = ranks[current]
+    ranked_enabled = enabled_mask[priority]
+    idx = jnp.arange(MAX_PORTS)
+    # Candidate ranks strictly after the current rank.
+    later = ranked_enabled & (idx > cur_rank)
+    has_later = jnp.any(later)
+    next_rank_later = jnp.argmax(later)          # first True among later ranks
+    first_rank = jnp.argmax(ranked_enabled)      # wrap target
+    nxt_rank = jnp.where(has_later, next_rank_later, first_rank)
+    return priority[nxt_rank].astype(jnp.int32)

@@ -1,0 +1,40 @@
+"""Activation-sharding hints: a context the launcher installs so model code
+can constrain key intermediates (logits, hidden states, MoE buffers) without
+depending on the mesh at definition time.
+
+Model code calls ``hint(x, "logits")``; outside any context this is a no-op,
+so tests and single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPECS: ContextVar[Optional[dict]] = ContextVar("activation_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_specs(specs: dict):
+    """specs: name -> PartitionSpec (e.g. {"logits": P("data", None, "model")})."""
+    token = _SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _SPECS.reset(token)
+
+
+def hint(x: jax.Array, name: str) -> jax.Array:
+    specs = _SPECS.get()
+    if not specs or name not in specs:
+        return x
+    spec = specs[name]
+    if spec is None:
+        return x
+    # pad the spec to the array rank (trailing dims unsharded)
+    if len(spec) < x.ndim:
+        spec = P(*(tuple(spec) + (None,) * (x.ndim - len(spec))))
+    return jax.lax.with_sharding_constraint(x, spec)

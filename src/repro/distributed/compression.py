@@ -1,0 +1,87 @@
+"""Gradient compression for the cross-pod reduction: int8 + error feedback.
+
+At 512+ chips the pod-to-pod hop (DCN / long-haul ICI) is the scarce
+bandwidth; intra-pod reduce-scatter stays full precision while the pod-axis
+all-reduce runs int8. Mechanism (pure auto-SPMD — no manual collectives):
+
+  1. the train step computes PER-POD gradients: the global batch is reshaped
+     to [n_pods, local_batch, ...] (leading axis sharded on "pod") and
+     ``vmap(grad)`` produces gradient leaves of shape [n_pods, ...];
+  2. error feedback adds each pod's residual from the previous step;
+  3. blocks of 256 values share one scale, taken as the MAX over pods (one
+     tiny f32 all-reduce, 1/256 of gradient volume);
+  4. values quantize to int8 with ceil(log2(n_pods)) guard bits so the sum
+     over pods cannot overflow int8 — the reduction over the pod-sharded
+     axis is then an all-reduce with an int8 operand (4x fewer wire bytes
+     than f32, visible in the dry-run HLO);
+  5. the residual (pre-quantization minus quantized) becomes the next step's
+     error-feedback state (Seide et al. 2014; Karimireddy et al. 2019).
+
+Error feedback keeps the *local* residual on each pod: the ``ef`` state
+carries a leading [n_pods] axis sharded on "pod".
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 256
+
+
+def _blockify(x: jax.Array) -> tuple[jax.Array, int]:
+    """[P, ...] -> ([P, nblocks, BLOCK], n_elems_per_pod)."""
+    p = x.shape[0]
+    flat = x.reshape(p, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad = (-n) % BLOCK
+    return jnp.pad(flat, ((0, 0), (0, pad))).reshape(p, -1, BLOCK), n
+
+
+def compressed_mean_pods(g: jax.Array, ef: jax.Array
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Mean of per-pod gradients with int8 wire format + error feedback.
+
+    Args:
+      g:  [n_pods, *shape] per-pod gradients (leading axis pod-sharded).
+      ef: [n_pods, *shape] f32 residual state.
+
+    Returns: (mean_grad [*shape] f32, new_ef [n_pods, *shape] f32).
+    """
+    n_pods = g.shape[0]
+    shape = g.shape[1:]
+    corrected = g.astype(jnp.float32) + ef
+    blocks, n = _blockify(corrected)                     # [P, nb, BLOCK]
+
+    guard = max(0, math.ceil(math.log2(max(n_pods, 1))))
+    qmax = 127 >> guard
+
+    local_max = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)   # [P, nb, 1]
+    scale = jnp.max(local_max, axis=0, keepdims=True) / qmax       # pod all-reduce (tiny)
+    scale = jnp.maximum(scale, 1e-30)
+
+    q = jnp.clip(jnp.round(blocks / scale), -qmax, qmax).astype(jnp.int8)
+    total = jnp.sum(q, axis=0)                           # int8 all-reduce over pod
+    mean = (total.astype(jnp.float32) * scale[0]) / n_pods
+    mean = mean.reshape(-1)[:n].reshape(shape)
+
+    deq_local = q.astype(jnp.float32) * scale            # [P, nb, BLOCK]
+    resid = (blocks - deq_local).reshape(n_pods, -1)[:, :n].reshape(g.shape)
+    return mean, resid
+
+
+def compressed_mean_tree(grads: PyTree, ef: PyTree) -> tuple[PyTree, PyTree]:
+    """Apply compressed_mean_pods leafwise. grads/ef leaves: [n_pods, ...]."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs = [compressed_mean_pods(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_ef_state(params: PyTree, n_pods: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params)

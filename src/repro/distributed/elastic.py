@@ -1,0 +1,33 @@
+"""Elastic scaling: move a training/serving state between meshes.
+
+A checkpoint written on one mesh restores onto any other (checkpoint/ckpt.py
+device_puts per target sharding); for live resizing without a filesystem
+round-trip, ``reshard_tree`` re-places every leaf under the new mesh's
+sharding rules. Combined with step-addressable data (data/pipeline.py) this
+gives full elastic semantics: kill N pods, rebuild the mesh, reshard, resume
+at the same step with identical results (tests/distributed/test_elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def reshard_tree(tree: PyTree, mesh: Mesh, pspecs: PyTree) -> PyTree:
+    """device_put every leaf to NamedSharding(mesh, spec)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(jax.device_get(x), NamedSharding(mesh, s)),
+        tree, pspecs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))
+
+
+def replicate_tree(tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(
+            jax.device_get(x),
+            NamedSharding(mesh, P(*(None,) * getattr(x, "ndim", 0)))), tree)

@@ -1,0 +1,239 @@
+"""PartitionSpec rules: FSDP x TP x EP over the production mesh.
+
+Parameters are sharded 2-D (Megatron TP on the ``model`` axis + FSDP on the
+``data`` axis, optionally ("pod","data") for >=100B models); the stack axis
+added by layer-scanning is never sharded. Every rule is divisibility-guarded:
+a dimension that does not divide by its mesh axis falls back to replication
+(e.g. 40 attention heads on a 16-way model axis -> the head matmul columns
+shard, the per-head activations replicate; XLA inserts the reshard).
+
+Batch specs are computed per shape cell (``batch_spec``): the largest subset
+of data axes whose product divides the global batch is used — long_500k with
+global_batch=1 therefore replicates batch and shards the KV-cache sequence
+dim instead (``kv_cache_spec``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Axis assignment for one run."""
+    tp: str = "model"                       # tensor/expert-parallel axis
+    fsdp: tuple[str, ...] = ("data",)       # parameter/optimizer sharding axes
+    dp: tuple[str, ...] = ("data",)         # batch axes (pod included if present)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, fsdp_over_pod: bool = False) -> "Rules":
+        axes = mesh.axis_names
+        if "pod" in axes:
+            return Rules(tp="model",
+                         fsdp=("pod", "data") if fsdp_over_pod else ("data",),
+                         dp=("pod", "data"))
+        return Rules()
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, axes, dim: int):
+    """axes if dim divides by their product, else None (replicate)."""
+    if axes is None:
+        return None
+    size = _axsize(mesh, axes)
+    if size > 1 and dim % size == 0:
+        return axes if isinstance(axes, str) else tuple(axes)
+    # try shrinking a tuple of axes from the left (drop 'pod' first)
+    if not isinstance(axes, str) and len(axes) > 1:
+        return _fit(mesh, axes[1:], dim)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL = re.compile(r"(attn/(wq|wk|wv)|ffn/(w_gate|w_up)|shared/(w_gate|w_up)|"
+                  r"tm/(wv|wg)|cm/wk|in_z|in_x)/w$")
+_ROW = re.compile(r"(attn/wo|ffn/w_down|shared/w_down|tm/wo|cm/wv|out_proj)/w$")
+_REP_OUT = re.compile(r"(tm/(wr|wk)|cm/wr|in_B|in_C|in_dt)/w$")
+_MOE_COL = re.compile(r"moe/(w_gate|w_up)$")
+_MOE_ROW = re.compile(r"moe/w_down$")
+
+
+def _n_stack(path: str) -> int:
+    if path.startswith("groups/"):
+        return 2
+    if path.startswith(("layers/", "tail/")):
+        return 1
+    return 0
+
+
+def _base_spec(path: str, shape, mesh: Mesh, r: Rules):
+    nd = len(shape)
+    if path == "embed/w":                       # [V, d]: d-sharded lookup
+        return (_fit(mesh, r.fsdp, shape[0]), _fit(mesh, r.tp, shape[1]))
+    if path == "lm_head/w":                     # [d, V]: column-parallel
+        return (_fit(mesh, r.fsdp, shape[0]), _fit(mesh, r.tp, shape[1]))
+    if _MOE_COL.search(path):                   # [E, d, f]
+        return (_fit(mesh, r.tp, shape[0]), _fit(mesh, r.fsdp, shape[1]), None)
+    if _MOE_ROW.search(path):                   # [E, f, d]
+        return (_fit(mesh, r.tp, shape[0]), None, _fit(mesh, r.fsdp, shape[2]))
+    if path.endswith("router/w"):               # [d, E]
+        return (_fit(mesh, r.fsdp, shape[0]), None)
+    if _COL.search(path):                       # [d, out]: column-parallel
+        return (_fit(mesh, r.fsdp, shape[0]), _fit(mesh, r.tp, shape[1]))
+    if _ROW.search(path):                       # [in, d]: row-parallel
+        return (_fit(mesh, r.tp, shape[0]), _fit(mesh, r.fsdp, shape[1]))
+    if _REP_OUT.search(path):                   # [d, small]: fsdp rows only
+        return (_fit(mesh, r.fsdp, shape[0]), None)
+    if path.endswith(("/b",)):                  # column biases [out]
+        return (_fit(mesh, r.tp, shape[0]),)
+    if path.endswith("w_lora_a"):
+        return (_fit(mesh, r.fsdp, shape[0]), None)
+    if path.endswith("w_lora_b"):
+        return (None, _fit(mesh, r.fsdp, shape[1]))
+    if path.endswith("conv_x/w"):               # [K, d_in]
+        return (None, _fit(mesh, r.tp, shape[1]))
+    if path.endswith(("dt_bias", "a_log", "d_skip")):
+        return (_fit(mesh, r.tp, shape[0]),)
+    if path.endswith("mamba/norm/scale"):         # mamba inner norm [d_in]
+        return (_fit(mesh, r.tp, shape[0]),)
+    return (None,) * nd                          # replicate smalls
+
+
+def param_pspecs(params: PyTree, mesh: Mesh, rules: Optional[Rules] = None
+                 ) -> PyTree:
+    """PartitionSpec tree mirroring ``params`` (works on ShapeDtypeStructs)."""
+    r = rules or Rules.for_mesh(mesh)
+
+    def assign(path_tuple, leaf):
+        path = "/".join(_key_str(k) for k in path_tuple)
+        n = _n_stack(path)
+        # strip the stack prefix components from the rule path
+        sub = "/".join(path.split("/")[n:]) if n else path
+        base = _base_spec(sub, leaf.shape[n:], mesh, r)
+        return P(*((None,) * n + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(getattr(k, "name", k))
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, rules: Rules, global_batch: int):
+    """Largest subset of dp axes whose product divides global_batch."""
+    return _fit(mesh, rules.dp, global_batch)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, rules: Rules, *, global_batch: int,
+                with_positions: bool = True) -> dict:
+    """Input shardings for a train/prefill batch dict."""
+    ba = batch_axes(mesh, rules, global_batch)
+    specs = {"labels": P(ba, None)}
+    if cfg.input_mode == "tokens":
+        specs["inputs"] = P(ba, None)
+    else:
+        specs["inputs"] = P(ba, None, None)
+    if cfg.pos_embed == "mrope" and with_positions:
+        specs["positions"] = P(ba, None, None)
+    return specs
+
+
+def _flat_axes(axes) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def kv_cache_spec(cfg: ArchConfig, mesh: Mesh, rules: Rules, *,
+                  batch: int, n_stack: int = 1) -> P:
+    """Spec for a stacked KV cache [stack.., B, S, Hkv, hd].
+
+    Heads shard on tp when divisible; otherwise the sequence dim takes tp.
+    Batch takes dp when divisible; otherwise sequence also absorbs dp.
+    """
+    ba = batch_axes(mesh, rules, batch)
+    tp_on_heads = _fit(mesh, rules.tp, cfg.n_kv_heads)
+    seq_axes: list[str] = []
+    if ba is None:
+        seq_axes.extend(_flat_axes(rules.dp))
+    if tp_on_heads is None:
+        seq_axes.extend(a for a in _flat_axes(rules.tp)
+                        if a not in seq_axes)
+    else:
+        seq_axes.extend(a for a in _flat_axes(rules.tp)
+                        if a not in _flat_axes(tp_on_heads)
+                        and a not in seq_axes)
+    seq = tuple(seq_axes) if seq_axes else None
+    lead = (None,) * n_stack
+    return P(*lead, ba, seq, tp_on_heads, None)
+
+
+def decode_state_pspecs(cfg: ArchConfig, mesh: Mesh, rules: Optional[Rules],
+                        state: PyTree, *, batch: int) -> PyTree:
+    """Spec tree for a decode state pytree (matches init_decode_state)."""
+    r = rules or Rules.for_mesh(mesh)
+    ba = batch_axes(mesh, r, batch)
+
+    def assign(path_tuple, leaf):
+        path = "/".join(_key_str(k) for k in path_tuple)
+        nd = leaf.ndim
+        if path == "len":
+            return P(ba)
+        if path in ("cache_k", "cache_v"):
+            return kv_cache_spec(cfg, mesh, r, batch=batch, n_stack=1)
+        if path in ("attn_k", "attn_v"):
+            return kv_cache_spec(cfg, mesh, r, batch=batch, n_stack=1)
+        if path.startswith(("tm_shift", "cm_shift")):    # [L, B, d]
+            return P(None, ba, _fit(mesh, r.tp, leaf.shape[-1]))
+        if path.startswith("tm_state"):                  # [L, B, H, K, V]
+            return P(None, ba, _fit(mesh, r.tp, leaf.shape[2]), None, None)
+        if path.startswith("conv/") or path.startswith("tail_conv/"):
+            # [..., B, K-1, C]
+            lead = nd - 3
+            return P(*(None,) * lead, ba, None,
+                     _fit(mesh, r.tp, leaf.shape[-1]))
+        if path in ("ssm", "tail_ssm"):                  # [..., B, H, N, Phd]
+            lead = nd - 4
+            return P(*(None,) * lead, ba,
+                     _fit(mesh, r.tp, leaf.shape[lead + 1]), None, None)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(assign, state)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

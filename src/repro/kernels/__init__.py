@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the hot spots the paper's technique optimizes.
+
+  multiport_sram — banked N-port memory step (the wrapper itself)
+  kv_multiport   — fused decode append+attend over the multi-port KV cache
+  flash_attention— tiled causal attention (training/prefill substrate)
+
+Each kernel has a jit wrapper in ops.py and a pure-jnp oracle in ref.py;
+tests/kernels/ sweeps shapes and dtypes against the oracles in interpret mode.
+"""

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused decode append+attend over a multi-port KV cache.
+
+The end-to-end carrier of the paper's claim C1 in the serving path. Decoding
+one token conventionally costs TWO full traversals of the sequence-length KV
+cache tiles:
+
+  pass 1 (write port): scatter-append the new token's K,V at ``cache_len``;
+  pass 2 (read port):  gather + attention over positions [0, cache_len].
+
+This kernel configures the cache as a 2-port memory (1W + 1R per the paper's
+"any R/W combination") and services both ports in ONE traversal: while each
+KV tile is VMEM-resident, the tile containing ``cache_len`` takes the append
+(W slot, higher priority) and every tile feeds the online-softmax attention
+accumulation (R slot) — W-before-R visibility exactly as the wrapper's FSM
+orders same-cycle traffic, so attention sees the just-appended token.
+
+Grid: (batch, seq_tiles); accumulators in VMEM scratch, persisted across the
+inner (seq_tiles) grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iota(n: int, dtype=jnp.int32) -> jax.Array:
+    return jax.lax.broadcasted_iota(dtype, (n, 1), 0)[:, 0]
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
+            out_k_ref, out_v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, seq_tile: int, n_tiles: int, scale: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    p = len_ref[0, 0]                                     # append position
+    tile_start = t * seq_tile
+    pos = tile_start + _iota(seq_tile)                    # global positions [T]
+
+    k_tile = k_ref[0]                                     # [T, Hkv, D]
+    v_tile = v_ref[0]
+
+    # --- W slot (priority A): append new token if it lands in this tile -----
+    hit = (pos == p)                                      # [T]
+    k_tile = jnp.where(hit[:, None, None], new_k_ref[0][None], k_tile)
+    v_tile = jnp.where(hit[:, None, None], new_v_ref[0][None], v_tile)
+    out_k_ref[0] = k_tile                                 # write-through (aliased)
+    out_v_ref[0] = v_tile
+
+    # --- R slot (priority B): attention over valid positions (<= p) ---------
+    q = q_ref[0]                                          # [Hkv, G, D]
+    f32 = jnp.float32
+    s = jnp.einsum("hgd,thd->hgt", q.astype(f32), k_tile.astype(f32)) * scale
+    valid = (pos <= p)[None, None, :]                     # new token included
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # [Hkv, G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # guard: fully-masked tile keeps m at -inf; exp(-inf - -inf) -> use where
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    pr = jnp.exp(s - m_new[..., None])
+    pr = jnp.where(valid, pr, 0.0)
+    l_new = l_scr[...] * alpha + pr.sum(axis=-1)
+    acc = acc_scr[...] * alpha[..., None]
+    acc = acc + jnp.einsum("hgt,thd->hgd", pr, v_tile.astype(f32))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(t == n_tiles - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                        new_k: jax.Array, new_v: jax.Array,
+                        cache_len: jax.Array, *, seq_tile: int = 128,
+                        interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for a batch of sequences.
+
+    Args:
+      q:        [B, H, D] query for the new token (H = Hkv * G).
+      cache_k:  [B, S, Hkv, D]; cache_v same. S must divide by seq_tile.
+      new_k/v:  [B, Hkv, D] the new token's K,V (appended in-kernel).
+      cache_len:[B] int32 — current length; the new token is written at this
+                position and attended to (post-append length is cache_len+1).
+
+    Returns:
+      (attn_out [B, H, D], cache_k', cache_v') — caches updated in place.
+    """
+    b, s, hkv, d = cache_k.shape
+    h = q.shape[1]
+    assert h % hkv == 0, "GQA requires H % Hkv == 0"
+    g = h // hkv
+    seq_tile = min(seq_tile, s)
+    assert s % seq_tile == 0, (s, seq_tile)
+    n_tiles = s // seq_tile
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, seq_tile=seq_tile, n_tiles=n_tiles,
+                               scale=scale)
+    out_k, out_v, out = pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                 # len
+            pl.BlockSpec((1, hkv, g, d), lambda bb, t: (bb, 0, 0, 0)),   # q
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, hkv, d), lambda bb, t: (bb, 0, 0)),         # new_k
+            pl.BlockSpec((1, hkv, d), lambda bb, t: (bb, 0, 0)),         # new_v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, hkv, g, d), lambda bb, t: (bb, 0, 0, 0)),   # out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(cache_k.shape, cache_k.dtype),
+            jax.ShapeDtypeStruct(cache_v.shape, cache_v.dtype),
+            jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),          # m
+            pltpu.VMEM((hkv, g), jnp.float32),          # l
+            pltpu.VMEM((hkv, g, d), jnp.float32),       # acc
+        ],
+        input_output_aliases={2: 0, 3: 1},              # caches in-place
+        interpret=interpret,
+    )(lens, qg, cache_k, cache_v, new_k, new_v)
+    return out.reshape(b, h, d), out_k, out_v

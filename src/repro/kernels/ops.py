@@ -1,0 +1,78 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper owns the request preprocessing (address decomposition, write
+dedup) so the kernel bodies stay pure data movement + matmul, and exposes an
+``interpret`` flag: True (default) executes the kernel body in Python on CPU;
+on TPU deployments pass False to lower through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multiport import MemorySpec, _dedup_last_wins
+from repro.core.ports import MAX_PORTS, WRITE, PortConfig, PortRequest
+from repro.kernels import flash_attention as fa
+from repro.kernels import kv_multiport as kvmp
+from repro.kernels import multiport_sram as mps
+
+
+def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
+                   requests: Sequence[PortRequest], *, interpret: bool = True
+                   ) -> tuple[jax.Array, list[jax.Array]]:
+    """Kernel-backed macro-cycle with the same contract as core.multiport.step."""
+    q = requests[0].queue_len
+    for r in requests:
+        if r.queue_len != q:
+            raise ValueError("all port queues must share one queue length")
+
+    wpb = spec.words_per_bank
+    addrs, datas, masks = [], [], []
+    for p in range(MAX_PORTS):
+        r = requests[p]
+        m = r.mask
+        enabled = config.enabled[p]
+        if not enabled:
+            m = jnp.zeros_like(m)
+        elif config.roles[p] == WRITE:
+            m = _dedup_last_wins(r.addr, m)          # last-wins in queue order
+        # clip OOB to an always-masked sentinel
+        in_range = (r.addr >= 0) & (r.addr < spec.num_words)
+        m = m & in_range
+        addrs.append(jnp.where(m, r.addr, 0))
+        datas.append(r.data.astype(spec.dtype))
+        masks.append(m)
+
+    addr = jnp.stack(addrs)                           # [P, Q]
+    data = jnp.stack(datas)                           # [P, Q, W]
+    mask = jnp.stack(masks)                           # [P, Q]
+    bank_id = addr // wpb
+    local = addr % wpb
+
+    banked = storage.reshape(spec.num_banks, wpb, spec.word_width)
+    banked, reads = mps.multiport_sram_step(
+        banked, bank_id.astype(jnp.int32), local.astype(jnp.int32), data, mask,
+        config=config, interpret=interpret)
+    return banked.reshape(spec.num_words, spec.word_width), [reads[p] for p in range(MAX_PORTS)]
+
+
+@functools.partial(jax.jit, static_argnames=("seq_tile", "interpret"))
+def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                           new_k: jax.Array, new_v: jax.Array,
+                           cache_len: jax.Array, *, seq_tile: int = 128,
+                           interpret: bool = True):
+    """Fused 2-port (1W+1R) decode step. See kv_multiport.py."""
+    return kvmp.fused_append_attend(q, cache_k, cache_v, new_k, new_v,
+                                    cache_len, seq_tile=seq_tile,
+                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_tile", "k_tile", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_tile: int = 128, k_tile: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    return fa.flash_attention(q, k, v, causal=causal, q_tile=q_tile,
+                              k_tile=k_tile, interpret=interpret)

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST precede every other import (jax locks the device
+# count at first backend init). This module is the multi-pod dry-run driver:
+# for each (architecture x shape x mesh) cell it lowers + compiles the real
+# train/prefill/serve step against ShapeDtypeStruct inputs, proving the
+# sharding config is coherent at 256/512 chips, and records
+# memory_analysis / cost_analysis / per-collective HLO bytes as JSON for the
+# roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+#       --shape train_4k --mesh single            # one cell
+#   PYTHONPATH=src python -m repro.launch.dryrun --all  # every cell, resumable
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import re        # noqa: E402
+import time      # noqa: E402
+import traceback # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import applicable_shapes  # noqa: E402
+from repro.configs import registry           # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.distributed.api import activation_specs  # noqa: E402
+from repro.launch import hlo_analysis          # noqa: E402
+from repro.launch import specs as SP           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import decode_step, prefill        # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
+
+
+def _act_specs(cfg, mesh, rules, global_batch, seq_len=None):
+    ba = shd.batch_axes(mesh, rules, global_batch)
+    tp = shd._fit(mesh, rules.tp, cfg.vocab)
+    # Residual stream sharded over tp on the SEQUENCE dim (Megatron sequence
+    # parallelism): remat-saved carries shrink by the tp degree (§Perf
+    # iteration 6: 405B backward temp 765 -> 78 GiB/chip) AND the per-layer
+    # boundary collectives are bf16 seq gathers instead of f32 d-dim gathers
+    # (§Perf iteration 8: tinyllama train collective term 6.16 -> 1.30 s).
+    # Family-gated: Mamba convs/chunked scans and the MoE row-local dispatch
+    # need the sequence dim intact — seq sharding regresses them (measured:
+    # zamba2 train mem 17.6 -> 65.2 s, deepseek 13.4 -> 28.8 s).
+    seq_tp = (shd._fit(mesh, rules.tp, seq_len)
+              if seq_len and cfg.family in ("dense", "vlm", "audio") else None)
+    specs = {"logits": P(ba, None, tp), "hidden": P(ba, seq_tp, None)}
+    if cfg.moe is not None:
+        # NOTE: constraining the staging buffer's expert dim onto the model
+        # axis forces the dispatch scatter itself to be partitioned, which
+        # XLA lowers as dense masking + giant all-reduces (§Perf iteration 5,
+        # refuted variant). Leave the buffer unconstrained: the expert-sharded
+        # weights of the batched FFN induce the reshard as a local slice.
+        specs["moe_buf"] = P(ba, None, None, None)
+    return specs
+
+
+def _with_hints(fn, specs):
+    def wrapped(*a, **k):
+        with activation_specs(specs):
+            return fn(*a, **k)
+    return wrapped
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|s32|s16|s8|u64|"
+                      r"u32|u16|u8|pred|c64)\[([0-9,]*)\]")
+
+
+def _bytes_of_types(sig: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(sig):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device RESULT bytes of every collective op in the HLO.
+
+    Ring-algorithm wire multipliers are applied downstream (§Roofline):
+    all-reduce 2x, all-gather/reduce-scatter/all-to-all 1x, permute 1x.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        for cname in _COLLECTIVES:
+            if rhs.startswith(cname + "(") or re.match(
+                    rf"\S+ {cname}\(", rhs) or rhs.split("(")[0].endswith(cname):
+                sig = rhs.split("(")[0]       # result type(s) precede op name
+                out[cname] += _bytes_of_types(sig)
+                counts[cname] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+def tokens_of(cell) -> int:
+    if cell.kind == "decode":
+        return cell.global_batch
+    return cell.global_batch * cell.seq_len
+
+
+def build_step(cfg, cell, mesh, rules, *, optimizer=None,
+               grad_compression=None, microbatches=1):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs))."""
+    assert cell.kind == "train", cell.kind
+    opt = optimizer or ("adamw8bit" if cfg.arch_id.startswith("llama3-405b")
+                        else "adamw")
+    n_pods = mesh.shape.get("pod", 1)
+    tcfg = TrainConfig(optimizer=opt, microbatches=microbatches,
+                       grad_compression=grad_compression,
+                       n_pods=n_pods if grad_compression else 1)
+    step = _with_hints(make_train_step(cfg, tcfg),
+                       _act_specs(cfg, mesh, rules, cell.global_batch,
+                                  seq_len=cell.seq_len))
+    state_shapes = SP.train_state_shapes(cfg, tcfg)
+    state_specs = SP.train_state_pspecs(cfg, mesh, rules, state_shapes)
+    batch = SP.input_specs(cfg, cell)
+    bspecs = shd.batch_specs(cfg, mesh, rules, global_batch=cell.global_batch)
+    jf = jax.jit(step,
+                 in_shardings=(SP.named_tree(mesh, state_specs),
+                               SP.named_tree(mesh, bspecs)),
+                 out_shardings=(SP.named_tree(mesh, state_specs), None),
+                 donate_argnums=0)
+    return jf, (state_shapes, batch)
+
+
+def build_cell_fn(cfg, cell, mesh, rules, *, optimizer=None,
+                  grad_compression=None, microbatches=1, remat=None):
+    """Unified builder: returns (jitted fn, args-as-ShapeDtypeStructs)."""
+    if remat is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if cell.kind == "train":
+        return build_step(cfg, cell, mesh, rules, optimizer=optimizer,
+                          grad_compression=grad_compression,
+                          microbatches=microbatches)
+
+    if cell.kind == "decode":
+        # Weight-stationary serving rules (§Perf iteration 4): weight columns
+        # shard over the COMBINED (data x model) axes so no weight is ever
+        # gathered — per-layer activation psums are MB-scale while FSDP-style
+        # weight gathers would be 100s of MB per matmul per token. The KV
+        # cache keeps batch on "pod" (if any) and seq/heads on data x model.
+        rules = shd.Rules(
+            tp=("data", "model"), fsdp=(),
+            dp=("pod",) if "pod" in mesh.axis_names else ())
+    params = SP.params_shapes(cfg)
+    pspecs = shd.param_pspecs(params, mesh, rules)
+    state_shapes = SP.decode_state_shapes(cfg, cell.global_batch, cell.seq_len)
+    state_specs = shd.decode_state_pspecs(cfg, mesh, rules, state_shapes,
+                                          batch=cell.global_batch)
+    batch = SP.input_specs(cfg, cell)
+    ba = shd.batch_axes(mesh, rules, cell.global_batch)
+    acts = _act_specs(cfg, mesh, rules, cell.global_batch,
+                      seq_len=cell.seq_len if cell.kind == "prefill" else None)
+    if cell.kind == "prefill":
+        fn = _with_hints(lambda p, s, b: prefill(p, cfg, s, b), acts)
+        bspecs = shd.batch_specs(cfg, mesh, rules,
+                                 global_batch=cell.global_batch)
+        bspecs.pop("labels")
+        batch = {k: v for k, v in batch.items() if k != "labels"}
+    else:
+        acts = {"logits": P(ba, None, shd._fit(mesh, rules.tp, cfg.vocab)),
+                "hidden": P(ba, None, None)}
+        fn = _with_hints(lambda p, s, b: decode_step(p, cfg, s, b), acts)
+        if cfg.input_mode == "tokens":
+            bspecs = {"inputs": P(ba, None)}
+        else:
+            bspecs = {"inputs": P(ba, None, None)}
+    jf = jax.jit(fn,
+                 in_shardings=(SP.named_tree(mesh, pspecs),
+                               SP.named_tree(mesh, state_specs),
+                               SP.named_tree(mesh, bspecs)),
+                 donate_argnums=1)
+    return jf, (params, state_shapes, batch)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, force: bool = False, **build_kw) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}"
+    if build_kw:
+        tag += "__" + "_".join(f"{k}-{v}" for k, v in sorted(build_kw.items()))
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = registry.get(arch_id)
+    cell = next(c for c in applicable_shapes(cfg) if c.name == shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = shd.Rules.for_mesh(
+        mesh, fsdp_over_pod=arch_id.startswith("llama3-405b"))
+
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "kind": cell.kind, "chips": mesh.size,
+           "tokens_per_step": tokens_of(cell), "status": "error"}
+    t0 = time.time()
+    try:
+        jf, args = build_cell_fn(cfg, cell, mesh, rules, **build_kw)
+        with jax.set_mesh(mesh):
+            lowered = jf.lower(*args)
+            rec["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t1
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {"flops": ca.get("flops", 0.0),
+                           "bytes_accessed": ca.get("bytes accessed", 0.0)}
+            hlo_text = compiled.as_text()
+            rec["hlo"] = hlo_analysis.analyze(hlo_text)
+            rec["status"] = "ok"
+    except Exception as e:  # recorded, not raised — the sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" or args.all else [args.mesh]
+    n_ok = n_err = 0
+    for arch in archs:
+        cfg = registry.get(arch)
+        cells = applicable_shapes(cfg)
+        names = [c.name for c in cells]
+        shapes = names if (args.all or args.shape is None) else [args.shape]
+        for shape in shapes:
+            if shape not in names:
+                print(f"[skip] {arch} x {shape} (inapplicable)")
+                continue
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, args.out, force=args.force)
+                ok = rec["status"] == "ok"
+                n_ok += ok
+                n_err += (not ok)
+                msg = (f"mem={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+                       f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                       f"flops={rec['cost']['flops']:.3g}" if ok
+                       else rec.get("error", "?"))
+                print(f"[{'ok' if ok else 'ERR'}] {arch} x {shape} x {mk}: {msg}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

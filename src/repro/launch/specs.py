@@ -1,0 +1,140 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run's
+no-allocation input builders, plus the sharding trees for each step kind."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models import init_decode_state, init_params
+from repro.optim import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state
+
+PyTree = Any
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Batch ShapeDtypeStructs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        if cfg.input_mode == "tokens":
+            return {"inputs": sds((b, 1), jnp.int32)}
+        return {"inputs": sds((b, 1, cfg.d_model), cfg.cdtype)}
+    batch = {"labels": sds((b, s), jnp.int32)}
+    if cfg.input_mode == "tokens":
+        batch["inputs"] = sds((b, s), jnp.int32)
+    else:
+        batch["inputs"] = sds((b, s, cfg.d_model), cfg.cdtype)
+    if cfg.pos_embed == "mrope":
+        batch["positions"] = sds((b, s, 3), jnp.int32)
+    return batch
+
+
+def params_shapes(cfg: ArchConfig) -> PyTree:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def train_state_shapes(cfg: ArchConfig, tcfg: TrainConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda k: init_train_state(init_params(k, cfg), tcfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def decode_state_shapes(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _lookup(flat: dict, path: str):
+    return flat.get(path)
+
+
+def opt_state_pspecs(opt_shapes: PyTree, param_specs: PyTree, mesh: Mesh,
+                     rules: shd.Rules) -> PyTree:
+    """Specs for optimizer state: moments mirror params; quantized blocks
+    shard their block axis on fsdp; adafactor factors drop the reduced dim."""
+    flat_params = {
+        "/".join(shd._key_str(k) for k in path): spec
+        for path, spec in jax.tree_util.tree_flatten_with_path(
+            param_specs, is_leaf=lambda x: isinstance(x, P))[0]
+    }
+
+    def assign(path_tuple, leaf):
+        parts = [shd._key_str(k) for k in path_tuple]
+        path = "/".join(parts)
+        if path == "step":
+            return P()
+        head, rest = parts[0], parts[1:]
+        if head == "ef":                       # [n_pods, *param_shape]
+            base = flat_params.get("/".join(rest))
+            pod = "pod" if "pod" in mesh.axis_names else None
+            dims = tuple(base) if base else (None,) * (leaf.ndim - 1)
+            if pod is not None:                # pod now shards the lead axis
+                def strip(a):
+                    if a == pod:
+                        return None
+                    if isinstance(a, tuple):
+                        rest_a = tuple(x for x in a if x != pod)
+                        return rest_a if len(rest_a) > 1 else (
+                            rest_a[0] if rest_a else None)
+                    return a
+                dims = tuple(strip(a) for a in dims)
+            return P(pod, *dims)
+        tail = rest[-1] if rest else ""
+        base = flat_params.get("/".join(rest))
+        if base is not None:                   # moments mirror the param spec
+            return P(*base)
+        if tail in ("q", "scale") and "/".join(rest[:-1]) in flat_params:
+            # last-axis-blocked quantized state [*param_lead, nblocks, BLOCK]:
+            # inherit the param's leading-dim sharding (layout-aligned — no
+            # reshard in the optimizer), shard the block dim when divisible.
+            base = flat_params["/".join(rest[:-1])]
+            lead = tuple(base)[:-1]
+            last_axes = tuple(base)[-1] if len(base) else None
+            nb = leaf.shape[-2] if leaf.ndim >= 2 else 1
+            return P(*lead, shd._fit(mesh, last_axes, nb)
+                     if last_axes else None, None)
+        if tail in ("vr",):                    # param spec minus last dim
+            base = flat_params.get("/".join(rest[:-1]))
+            return P(*base[:-1]) if base else P(*(None,) * leaf.ndim)
+        if tail in ("vc",):                    # param spec minus 2nd-to-last
+            base = flat_params.get("/".join(rest[:-1]))
+            if base and len(base) >= 2:
+                return P(*base[:-2], base[-1])
+            return P(*(None,) * leaf.ndim)
+        if tail == "v" and "/".join(rest[:-1]) in flat_params:
+            base = flat_params["/".join(rest[:-1])]
+            return P(*base)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(assign, opt_shapes)
+
+
+def train_state_pspecs(cfg: ArchConfig, mesh: Mesh, rules: shd.Rules,
+                       state_shapes: PyTree) -> PyTree:
+    pspecs = shd.param_pspecs(state_shapes["params"], mesh, rules)
+    out = {"params": pspecs,
+           "opt": opt_state_pspecs(state_shapes["opt"], pspecs, mesh, rules)}
+    if "ef" in state_shapes:
+        out["ef"] = opt_state_pspecs({"ef": state_shapes["ef"]}, pspecs,
+                                     mesh, rules)["ef"]
+    return out
+
+
+def named_tree(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,93 @@
+"""Training launcher.
+
+CPU (reduced config, single device):
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 50 --batch 8 --seq 32
+
+TPU slice (full config; the same code path the dry-run compiles):
+    python -m repro.launch.train --arch qwen2.5-3b --batch 256 --seq 4096 \
+        --mesh production [--multi-pod] [--compress-grads]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.distributed import sharding as shd
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params
+from repro.optim import AdamWConfig
+from repro.train.loop import RunnerConfig, TrainingRunner
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adamw8bit", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "production"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch, reduced=args.reduced)
+    n_pods = 2 if args.multi_pod else 1
+    tcfg = TrainConfig(optimizer=args.optimizer, peak_lr=args.lr,
+                       warmup_steps=max(args.steps // 20, 1),
+                       total_steps=args.steps,
+                       microbatches=args.microbatches,
+                       grad_compression="int8_ef" if args.compress_grads else None,
+                       n_pods=n_pods if args.compress_grads else 1,
+                       adamw=AdamWConfig())
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, tcfg)
+    step = make_train_step(cfg, tcfg)
+    loader = ShardedLoader(cfg, DataConfig(seed=0), batch=args.batch,
+                           seq=args.seq)
+
+    if args.mesh == "production":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = shd.Rules.for_mesh(mesh)
+        st_shapes = jax.eval_shape(lambda: state)
+        st_specs = SP.train_state_pspecs(cfg, mesh, rules, st_shapes)
+        bspecs = shd.batch_specs(cfg, mesh, rules, global_batch=args.batch)
+        state = jax.device_put(state, SP.named_tree(mesh, st_specs))
+        jstep = jax.jit(step,
+                        in_shardings=(SP.named_tree(mesh, st_specs),
+                                      SP.named_tree(mesh, bspecs)),
+                        out_shardings=(SP.named_tree(mesh, st_specs), None),
+                        donate_argnums=0)
+        ctx = jax.set_mesh(mesh)
+        ctx.__enter__()
+    else:
+        jstep = jax.jit(step, donate_argnums=0)
+
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.arch_id} params={n/1e6:.1f}M optimizer={args.optimizer} "
+          f"devices={jax.device_count()}")
+    runner = TrainingRunner(
+        jstep, state, loader.get,
+        RunnerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     heartbeat_dir=args.ckpt_dir + "/hb"))
+    runner.run(args.steps)
+    hist = runner.history
+    print(f"ce first5={sum(h['ce'] for h in hist[:5])/5:.4f} "
+          f"last5={sum(h['ce'] for h in hist[-5:])/5:.4f} "
+          f"stragglers={len(runner.straggler.events)}")
+
+
+if __name__ == "__main__":
+    main()

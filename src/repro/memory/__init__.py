@@ -1,0 +1,4 @@
+"""Memory subsystem: the paged KV pool built on the multi-port memory."""
+from repro.memory.paged_kv import PagedPool
+
+__all__ = ["PagedPool"]

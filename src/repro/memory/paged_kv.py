@@ -1,0 +1,149 @@
+"""Paged KV cache on the multi-port memory — the paper's technique as the
+serving memory manager.
+
+The physical pool is ONE word-addressable MultiPortMemory (a word = one
+token's K or V vector for one layer); sequences own pages of ``page_tokens``
+words through a page table, exactly like vLLM's paged attention — except the
+pool is accessed through the paper's configurable ports:
+
+    port A (W): decode append     — one word per active sequence
+    port B (R): attention reads   — gathers of page-resident words
+    port C (W): prefill bulk fill — a prompt's pages in one macro-cycle
+    port D (W): eviction          — freed pages zeroed (optional scrub)
+
+Every macro-cycle services the enabled ports against the same physical pool
+in priority order (core.multiport semantics), so fragmentation-free sharing
+of HBM between growing/shrinking sequences comes for free, and the
+bandwidth-amplification claim C1 applies verbatim: one pool traversal
+services all four streams.
+
+This module keeps the page-table bookkeeping host-side (python ints —
+it is control plane, like the engine's scheduler) while all data-plane
+traffic flows through ``core.step``/``step_banked``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
+                        empty_request, step, step_banked)
+
+
+@dataclasses.dataclass
+class PagedPool:
+    """Physical pool + free list + per-sequence page tables."""
+
+    spec: MemorySpec
+    page_tokens: int
+    storage: jax.Array
+    free_pages: list
+    tables: dict                       # seq_id -> list[page_id]
+    lengths: dict                      # seq_id -> tokens stored
+    use_kernel: bool = False
+
+    @classmethod
+    def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
+               dtype=jnp.float32, num_banks: int = 8,
+               use_kernel: bool = False) -> "PagedPool":
+        spec = MemorySpec(num_words=n_pages * page_tokens,
+                          word_width=word_width, dtype=dtype,
+                          num_banks=num_banks)
+        return cls(spec=spec, page_tokens=page_tokens,
+                   storage=spec.init_storage(),
+                   free_pages=list(range(n_pages)), tables={}, lengths={},
+                   use_kernel=use_kernel)
+
+    # ---- control plane ------------------------------------------------------
+    def _ensure_capacity(self, seq: int, new_tokens: int) -> None:
+        table = self.tables.setdefault(seq, [])
+        self.lengths.setdefault(seq, 0)
+        need = -(-(self.lengths[seq] + new_tokens) // self.page_tokens)
+        while len(table) < need:
+            if not self.free_pages:
+                raise MemoryError("pool exhausted")
+            table.append(self.free_pages.pop())
+
+    def _addr(self, seq: int, token_idx: np.ndarray) -> np.ndarray:
+        table = np.asarray(self.tables[seq])
+        return (table[token_idx // self.page_tokens] * self.page_tokens
+                + token_idx % self.page_tokens)
+
+    def free(self, seq: int) -> None:
+        self.free_pages.extend(self.tables.pop(seq, []))
+        self.lengths.pop(seq, None)
+
+    # ---- data plane: one macro-cycle -----------------------------------------
+    def cycle(self, *, append: Optional[dict] = None,
+              read: Optional[dict] = None,
+              prefill: Optional[dict] = None) -> dict:
+        """Service up to three logical streams in ONE pool traversal.
+
+        append:  {"seq": int, "vectors": [T, W]} — decode appends
+        read:    {"seq": int, "positions": int array} — attention gather
+        prefill: {"seq": int, "vectors": [T, W]} — bulk prompt fill
+        Returns {"read": [Q, W] or None}.
+        """
+        q = 0
+        for s in (append, read, prefill):
+            if s is not None:
+                n = (len(s["positions"]) if "positions" in s
+                     else s["vectors"].shape[0])
+                q = max(q, n)
+        if q == 0:
+            return {"read": None}
+
+        reqs = [empty_request(q, self.spec.word_width, self.spec.dtype)
+                for _ in range(4)]
+        roles = [WRITE, READ, WRITE, READ]
+
+        def _fill_write(port, stream):
+            seq, vec = stream["seq"], np.asarray(stream["vectors"])
+            t = vec.shape[0]
+            self._ensure_capacity(seq, t)
+            idx = np.arange(self.lengths[seq], self.lengths[seq] + t)
+            addr = np.zeros(q, np.int32)
+            data = np.zeros((q, self.spec.word_width), np.float32)
+            mask = np.zeros(q, bool)
+            addr[:t] = self._addr(seq, idx)
+            data[:t] = vec
+            mask[:t] = True
+            self.lengths[seq] += t
+            reqs[port] = PortRequest(addr=jnp.asarray(addr),
+                                     data=jnp.asarray(data, self.spec.dtype),
+                                     mask=jnp.asarray(mask))
+
+        if append is not None:
+            _fill_write(0, append)
+        if prefill is not None:
+            _fill_write(2, prefill)
+        if read is not None:
+            seq = read["seq"]
+            pos = np.asarray(read["positions"])
+            addr = np.zeros(q, np.int32)
+            mask = np.zeros(q, bool)
+            addr[: len(pos)] = self._addr(seq, pos)
+            mask[: len(pos)] = True
+            reqs[1] = PortRequest(addr=jnp.asarray(addr),
+                                  data=jnp.zeros((q, self.spec.word_width),
+                                                 self.spec.dtype),
+                                  mask=jnp.asarray(mask))
+
+        cfg = PortConfig(enabled=(append is not None, read is not None,
+                                  prefill is not None, False),
+                         roles=tuple(roles))
+        runner = step_banked if self.use_kernel else step
+        self.storage, reads = runner(self.spec, cfg, self.storage, reqs)
+        out = reads[1] if read is not None else None
+        if out is not None:
+            out = out[: len(read["positions"])]
+        return {"read": out}
+
+    @property
+    def utilization(self) -> float:
+        total = self.spec.num_words // self.page_tokens
+        return 1.0 - len(self.free_pages) / total

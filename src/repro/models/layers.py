@@ -1,0 +1,148 @@
+"""Shared neural-net layers (no external NN library; pure functional pytrees).
+
+Every layer is an (init, apply) pair: ``init`` returns a nested-dict pytree of
+arrays, ``apply`` is pure. Parameter dtype and compute dtype are decoupled
+(params usually f32 on CPU tests, bf16 in production configs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev: float):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return normal_init(key, shape, dtype, 1.0 / math.sqrt(fan))
+
+
+# --------------------------------------------------------------------------
+# linear / embedding / norm
+# --------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32) -> dict:
+    p = {"w": fan_in_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"w": normal_init(key, (vocab, d), dtype, 1.0)}
+
+
+def embedding_lookup(p: dict, ids: jax.Array, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+    return jnp.take(w, ids, axis=0)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL multimodal M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """[head_dim//2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: [..., S, n_heads, head_dim]; positions: broadcastable to [..., S].
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                   # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs         # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                               # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope_apply(x: jax.Array, positions: jax.Array,
+                sections: Sequence[int], theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL M-RoPE: the rotary pairs are split into (t, h, w) sections,
+    each driven by its own position stream.
+
+    x: [..., S, n_heads, head_dim]; positions: [..., S, 3] (t, h, w indices);
+    sections: pair counts per stream, sum == head_dim // 2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)                   # [half]
+    # Build the per-pair position by section.
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=half)  # [half]
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                              # [..., S, 3]
+        jnp.broadcast_to(sec_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)                                                    # [..., S, half]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int,
+                         offset: jax.Array | int = 0) -> jax.Array:
+    """MusicGen-style absolute sinusoidal position embeddings [S, d]."""
+    pos = (jnp.arange(seq_len) + offset)[:, None].astype(jnp.float32)
+    half = d_model // 2
+    div = jnp.exp(jnp.arange(half, dtype=jnp.float32) * (-math.log(10000.0) / half))
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return silu(gate) * up

@@ -1,0 +1,212 @@
+"""Chunked decayed linear attention — the shared engine for Mamba2 and RWKV6.
+
+Both SSM families obey the same recurrence over a matrix state S in R^{K x V}:
+
+    S_t = diag(w_t) @ S_{t-1} + k_t v_t^T                  (w_t in (0,1]^K)
+    y_t = q_t^T @ S_t                      (Mamba2: q=C, k=dt*B, v=x, w=exp(dt*A) per head)
+    y_t = q_t^T @ (S_{t-1} + diag(u) k_t v_t^T)   (RWKV6: q=r, bonus u, per-channel decay)
+
+A per-timestep scan is MXU-hostile; the TPU-native form processes chunks of Q
+steps with intra-chunk matmuls and carries the matrix state across chunks (the
+SSD block decomposition of Dao & Gu, generalized to per-channel decay so one
+routine serves both architectures).
+
+Numerical note: the intra-chunk pairwise decay exp(cum_i - cum_j) is computed
+directly (masked to i >= j where it is <= 1) — exact and overflow-free, unlike
+the exp(cum)*exp(-cum) factorization. Its [Q, Q, H, K] footprint is bounded by
+keeping the chunk inside the inter-chunk ``lax.scan`` body, so peak memory is
+one chunk's tensor, not the whole sequence's.
+
+Shapes: q, k, log_w: [B, T, H, K]; v: [B, T, H, V]. Returns y: [B, T, H, V]
+and the final state [B, H, K, V]. ``log_w`` is log-decay (<= 0), applied to
+the state *before* absorbing step t's outer product.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             log_w: jax.Array, *, chunk: int = 64,
+                             bonus_u: jax.Array | None = None,
+                             initial_state: jax.Array | None = None,
+                             scalar_decay: bool = False,
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Run the decayed linear-attention recurrence in chunked form.
+
+    Args:
+      q, k: [B, T, H, K]; v: [B, T, H, V]; log_w: [B, T, H, K], or [B, T, H]
+        when ``scalar_decay`` (one decay per head per step — Mamba2/SSD).
+      chunk: intra-chunk length (MXU tile-friendly; 32-128).
+      bonus_u: optional [H, K] RWKV-style current-token bonus. When given,
+        y_t reads S_{t-1} plus diag(u) k_t v_t^T (RWKV6 semantics: strictly
+        causal intra-chunk, j < i); when None, y_t reads S_t (Mamba2, j <= i).
+      initial_state: optional [B, H, K, V].
+      scalar_decay: per-head scalar decay fast path (§Perf iteration 1):
+        the intra-chunk pairwise-decay tensor is [B, Q, Q, H] instead of
+        [B, Q, Q, H, K] and the score contraction is a single K-contraction
+        matmul — K-fold less traffic for Mamba2's K = state_dim = 64.
+
+    Returns:
+      (y [B, T, H, V], final_state [B, H, K, V])
+    """
+    if scalar_decay:
+        return _chunked_scalar_decay(q, k, v, log_w, chunk=chunk,
+                                     initial_state=initial_state)
+    b, t, h, kdim = q.shape
+    vdim = v.shape[-1]
+    out_dtype = v.dtype
+    orig_t = t
+    if t % chunk:
+        pad = chunk - t % chunk
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, log_w = zpad(q), zpad(k), zpad(v), zpad(log_w)
+        t = q.shape[1]
+    n_chunks = t // chunk
+
+    f32 = jnp.float32
+    # [N, B, Q, H, *] — chunk axis leads for the scan. Operands keep their
+    # input dtype (bf16 in production); only decay math runs in f32 and
+    # matmuls accumulate f32 via preferred_element_type (§Perf).
+    def to_chunks(x, last, dt=None):
+        r = jnp.moveaxis(x.reshape(b, n_chunks, chunk, h, last), 1, 0)
+        return r.astype(dt) if dt is not None else r
+
+    qc, kc = to_chunks(q, kdim), to_chunks(k, kdim)
+    vc = to_chunks(v, vdim)
+    lw = to_chunks(log_w, kdim, f32)
+
+    idx = jnp.arange(chunk)
+    strict = bonus_u is not None
+    causal = (idx[:, None] > idx[None, :]) if strict else (idx[:, None] >= idx[None, :])
+    u = None if bonus_u is None else bonus_u.astype(f32)
+
+    if initial_state is None:
+        init = jnp.zeros((b, h, kdim, vdim), f32)
+    else:
+        init = initial_state.astype(f32)
+
+    def body(state, xs):
+        qn, kn, vn, lwn = xs                           # [B,Q,H,K]/[B,Q,H,V]
+        dt = qn.dtype
+        cum = jnp.cumsum(lwn, axis=1)                  # [B,Q,H,K] inclusive of i
+        total = cum[:, -1]                             # [B,H,K]
+        # Read-side exponent: Mamba2 reads S_i (inclusive decay); RWKV6 reads
+        # S_{i-1}, i.e. the exclusive cumsum (one fewer decay factor).
+        cum_read = cum - lwn if strict else cum
+
+        # inter-chunk: y_i += (q_i * exp(cum_read_i)) @ S_prev
+        # (qd promotes to f32; the big f32 state is consumed untouched)
+        qd = qn * jnp.exp(cum_read)
+        y_inter = jnp.einsum("bihk,bhkv->bihv", qd, state,
+                             preferred_element_type=f32)
+
+        # intra-chunk: s_ij = sum_K q_i k_j exp(cum_read_i - cum_j), i (>=|>) j
+        diff = cum_read[:, :, None] - cum[:, None, :]  # [B,Qi,Qj,H,K]
+        diff = jnp.where(causal[None, :, :, None, None], diff, -jnp.inf)
+        s = jnp.einsum("bihk,bijhk,bjhk->bijh", qn.astype(f32),
+                       jnp.exp(diff), kn.astype(f32))
+        y_intra = jnp.einsum("bijh,bjhv->bihv", s.astype(dt), vn,
+                             preferred_element_type=f32)
+        if u is not None:
+            yb = jnp.einsum("bihk,hk,bihk->bih", qn.astype(f32), u,
+                            kn.astype(f32))
+            y_intra = y_intra + yb[..., None] * vn.astype(f32)
+
+        # chunk summary: S_chunk = sum_j diag(exp(total - cum_j)) k_j v_j^T
+        kdec = kn * jnp.exp(total[:, None] - cum)              # f32 [B,Q,H,K]
+        s_chunk = jnp.einsum("bjhk,bjhv->bhkv", kdec, vn,
+                             preferred_element_type=f32)
+
+        new_state = state * jnp.exp(total)[..., None] + s_chunk
+        return new_state, (y_intra + y_inter).astype(out_dtype)
+
+    final_state, ys = jax.lax.scan(body, init, (qc, kc, vc, lw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, vdim)
+    return y[:, :orig_t], final_state
+
+
+def _chunked_scalar_decay(q: jax.Array, k: jax.Array, v: jax.Array,
+                          log_w: jax.Array, *, chunk: int,
+                          initial_state: jax.Array | None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """SSD fast path: decay is scalar per (step, head); log_w: [B, T, H]."""
+    b, t, h, kdim = q.shape
+    vdim = v.shape[-1]
+    out_dtype = v.dtype
+    orig_t = t
+    if t % chunk:
+        pad = chunk - t % chunk
+        zpad4 = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zpad4(q), zpad4(k), zpad4(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0)))
+        t = q.shape[1]
+    n_chunks = t // chunk
+
+    f32 = jnp.float32
+    def to_chunks(x, last):
+        return jnp.moveaxis(x.reshape(b, n_chunks, chunk, h, last), 1, 0)
+    qc, kc = to_chunks(q, kdim), to_chunks(k, kdim)
+    vc = to_chunks(v, vdim)
+    lw = jnp.moveaxis(log_w.reshape(b, n_chunks, chunk, h), 1, 0).astype(f32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    init = (jnp.zeros((b, h, kdim, vdim), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def body(state, xs):
+        qn, kn, vn, lwn = xs                           # [B,Q,H,*] / [B,Q,H]
+        dt = qn.dtype
+        cum = jnp.cumsum(lwn, axis=1)                  # [B,Q,H]
+        total = cum[:, -1]                             # [B,H]
+
+        # inter-chunk: y_i += (q_i * exp(cum_i)) @ S_prev
+        qd = qn * jnp.exp(cum)[..., None]                      # promotes f32
+        y_inter = jnp.einsum("bihk,bhkv->bihv", qd, state,
+                             preferred_element_type=f32)
+
+        # intra-chunk: s_ij = (q_i . k_j) * exp(cum_i - cum_j), i >= j
+        dots = jnp.einsum("bihk,bjhk->bijh", qn, kn,
+                          preferred_element_type=f32)  # one K-contraction
+        diff = cum[:, :, None] - cum[:, None, :]       # [B,Qi,Qj,H]
+        diff = jnp.where(causal[None, :, :, None], diff, -jnp.inf)
+        s = (dots * jnp.exp(diff)).astype(dt)
+        y_intra = jnp.einsum("bijh,bjhv->bihv", s, vn,
+                             preferred_element_type=f32)
+
+        # chunk summary + state update
+        kdec = kn * jnp.exp(total[:, None] - cum)[..., None]   # f32
+        s_chunk = jnp.einsum("bjhk,bjhv->bhkv", kdec, vn,
+                             preferred_element_type=f32)
+        new_state = state * jnp.exp(total)[..., None, None] + s_chunk
+        return new_state, (y_intra + y_inter).astype(out_dtype)
+
+    final_state, ys = jax.lax.scan(body, init, (qc, kc, vc, lw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, vdim)
+    return y[:, :orig_t], final_state
+
+
+def linear_attention_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                          log_w: jax.Array, state: jax.Array, *,
+                          bonus_u: jax.Array | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the same recurrence.
+
+    q, k, log_w: [B, H, K]; v: [B, H, V]; state: [B, H, K, V].
+    Returns (y [B, H, V], new_state [B, H, K, V] in f32).
+    """
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(log_w.astype(f32))
+    outer = kf[..., :, None] * vf[..., None, :]        # [B,H,K,V]
+    if bonus_u is not None:
+        read = state + bonus_u.astype(f32)[..., :, None] * outer
+        new_state = state * w[..., None] + outer
+    else:
+        new_state = state * w[..., None] + outer
+        read = new_state
+    y = jnp.einsum("bhk,bhkv->bhv", qf, read)
+    return y.astype(v.dtype), new_state

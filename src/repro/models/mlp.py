@@ -1,0 +1,132 @@
+"""Feed-forward blocks: SwiGLU (llama family) and the MoE layer.
+
+MoE uses sort-based token dispatch (Megablocks-style): tokens are sorted by
+destination expert, scattered into per-expert capacity slots, run through a
+batched expert matmul, and combined back with router weights. This is the
+scalable formulation — the [tokens, experts, capacity] one-hot dispatch tensor
+of GShard never materializes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": L.linear_init(ks[0], d_model, d_ff, dtype=dtype),
+        "w_up": L.linear_init(ks[1], d_model, d_ff, dtype=dtype),
+        "w_down": L.linear_init(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array, compute_dtype=None) -> jax.Array:
+    g = L.linear(p["w_gate"], x, compute_dtype)
+    u = L.linear(p["w_up"], x, compute_dtype)
+    return L.linear(p["w_down"], L.swiglu(g, u), compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_expert
+    p = {
+        "router": {"w": L.normal_init(ks[0], (d_model, e), dtype, 0.02)},
+        "w_gate": L.fan_in_init(ks[1], (e, d_model, f), dtype, fan_in=d_model),
+        "w_up": L.fan_in_init(ks[2], (e, d_model, f), dtype, fan_in=d_model),
+        "w_down": L.fan_in_init(ks[3], (e, f, d_model), dtype, fan_in=f),
+    }
+    if cfg.n_shared:
+        p["shared"] = swiglu_init(ks[4], d_model, cfg.n_shared * f, dtype=dtype)
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, compute_dtype=None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,d], router aux loss scalar).
+
+    Dispatch is ROW-LOCAL (§Perf iteration 5): sorting/position-ranking and
+    the staging scatter all happen within each batch row, so token tensors
+    never cross data-parallel shards — the only dispatch collective left is
+    the canonical token->expert all-to-all that materializes the staging
+    buffer [B, E, C, d] with E on the model axis (hinted "moe_buf").
+    """
+    from repro.distributed.api import hint
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = s * k                                                  # slots per row
+    xf = x
+    if compute_dtype is not None:
+        xf = xf.astype(compute_dtype)
+
+    # --- routing (row-local) -------------------------------------------------
+    logits = L.linear(p["router"], xf, jnp.float32)            # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, k)                   # [B, S, k]
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                               # [E]
+    onehot_counts = jnp.sum(
+        jax.nn.one_hot(gate_e, e, dtype=jnp.float32), axis=(0, 1, 2))
+    ce = onehot_counts / (b * n)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    # --- row-local sort-based dispatch ----------------------------------------
+    capacity = int(max(1, round(n / e * cfg.capacity_factor)))
+    fe = gate_e.reshape(b, n)                                  # expert per slot
+    ft = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(n)
+    fw = gate_w.reshape(b, n)
+
+    order = jnp.argsort(fe, axis=-1, stable=True)              # per-row sort
+    se = jnp.take_along_axis(fe, order, axis=-1)               # [B, n]
+    st = ft[order]                                             # [B, n]
+    sw = jnp.take_along_axis(fw, order, axis=-1)
+    # rank within the row's expert group via exclusive running counts
+    counts = jnp.sum(jax.nn.one_hot(se, e, dtype=jnp.int32), axis=1)  # [B, E]
+    start = jnp.cumsum(counts, axis=-1) - counts               # [B, E]
+    pos = jnp.arange(n)[None, :] - jnp.take_along_axis(start, se, axis=-1)
+    keep = pos < capacity
+
+    rows = jnp.arange(b)[:, None]
+    e_idx = jnp.where(keep, se, e)                             # OOB drop
+    p_idx = jnp.where(keep, pos, 0)
+    tok = jnp.take_along_axis(xf, st[..., None], axis=1)       # [B, n, d]
+
+    buf = jnp.zeros((b, e, capacity, d), xf.dtype)
+    buf = buf.at[rows, e_idx, p_idx].set(tok, mode="drop")
+    buf = hint(buf, "moe_buf")                                 # [B, E(model), C, d]
+
+    # --- batched expert FFN ----------------------------------------------------
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if compute_dtype is not None:
+        wg, wu, wd = (w.astype(compute_dtype) for w in (wg, wu, wd))
+    hg = jnp.einsum("becd,edf->becf", buf, wg)
+    hu = jnp.einsum("becd,edf->becf", buf, wu)
+    h = L.swiglu(hg, hu)
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)              # [B, E, C, d]
+    # de-shard before the combine gather: a gather INTO a model-sharded dim
+    # differentiates into a scatter-add that XLA lowers densely (refuted
+    # variant in §Perf); replicating out_buf costs one all-gather and keeps
+    # both the gather and its backward local.
+    out_buf = hint(out_buf, "moe_buf")
+
+    # --- combine (the MoE "read port", row-local) -----------------------------
+    y_sorted = out_buf[rows, e_idx, p_idx]                     # [B, n, d]
+    y_sorted = jnp.where(keep[..., None], y_sorted, 0)
+    y_sorted = y_sorted * sw[..., None].astype(y_sorted.dtype)
+    inv = jnp.argsort(order, axis=-1)                          # undo the sort
+    y = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)  # slot order
+    out = y.reshape(b, s, k, d).sum(axis=2)                    # k experts/token
+
+    if "shared" in p:
+        out = out + swiglu_apply(p["shared"], xf, compute_dtype)
+    return out.astype(x.dtype), aux

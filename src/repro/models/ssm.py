@@ -1,0 +1,153 @@
+"""Mamba2 block (SSD form) — used standalone and inside the Zamba2 hybrid.
+
+Structure (faithful to Mamba2, n_groups=1):
+  projections: d -> z (d_in), x (d_in), B (N), C (N), dt (nheads)
+  depthwise causal conv (kernel 4) over x, B, C channels
+  SSD recurrence with scalar-per-head decay a_t = exp(-dt * exp(A_log)),
+  executed by the shared chunked linear-attention engine (linear_scan.py)
+  skip: y += D * x;  gate: y = rmsnorm(y * silu(z));  out_proj: d_in -> d
+
+Sharding note: the reference implementation fuses z|x|B|C|dt into one
+in_proj and one conv; we keep them as separate parameters so each can carry
+its own PartitionSpec (x tensor-parallel, B/C replicated) — slicing a
+TP-sharded concat would force a reshard at every layer (DESIGN.md §Perf).
+Functionally identical.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+from repro.models.linear_scan import chunked_linear_attention, linear_attention_step
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_in = cfg.expand * d_model
+    nheads = d_in // cfg.head_dim
+    return d_in, nheads
+
+
+def mamba2_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    d_in, nheads = _dims(d_model, cfg)
+    ks = jax.random.split(key, 8)
+    u = jax.random.uniform(ks[6], (nheads,))
+    dt = jnp.exp(u * (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                 + math.log(cfg.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))        # softplus^-1(dt)
+    ck = cfg.conv_kernel
+    conv_scale = 1.0 / math.sqrt(ck)
+    return {
+        "in_z": L.linear_init(ks[0], d_model, d_in, dtype=dtype),
+        "in_x": L.linear_init(ks[1], d_model, d_in, dtype=dtype),
+        "in_B": L.linear_init(ks[2], d_model, cfg.state_dim, dtype=dtype),
+        "in_C": L.linear_init(ks[3], d_model, cfg.state_dim, dtype=dtype),
+        "in_dt": L.linear_init(ks[4], d_model, nheads, dtype=dtype),
+        "conv_x": {"w": L.normal_init(ks[5], (ck, d_in), dtype, conv_scale),
+                   "b": jnp.zeros((d_in,), dtype)},
+        "conv_B": {"w": L.normal_init(ks[7], (ck, cfg.state_dim), dtype, conv_scale),
+                   "b": jnp.zeros((cfg.state_dim,), dtype)},
+        "conv_C": {"w": L.normal_init(ks[6], (ck, cfg.state_dim), dtype, conv_scale),
+                   "b": jnp.zeros((cfg.state_dim,), dtype)},
+        "dt_bias": dt_bias.astype(dtype),
+        "a_log": jnp.zeros((nheads,), dtype),      # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nheads,), dtype),
+        "norm": L.rmsnorm_init(d_in, dtype),
+        "out_proj": L.linear_init(ks[4], d_in, d_model, dtype=dtype),
+    }
+
+
+def _conv(p: dict, x: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv. x: [B, T, C]; p['w']: [K, C].
+    Returns (silu(conv(x)) [B,T,C], new_state [B,K-1,C])."""
+    w = p["w"].astype(x.dtype)
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, T+K-1, C]
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    y = y + p["b"].astype(x.dtype)
+    return L.silu(y), xp[:, -(k - 1):]
+
+
+def mamba2_apply(p: dict, x: jax.Array, d_model: int, cfg: SSMConfig, *,
+                 la_chunk: int = 64, compute_dtype=None,
+                 conv_state: dict | None = None,
+                 ssm_state: jax.Array | None = None,
+                 return_state: bool = False):
+    """Full-sequence Mamba2. x: [B, T, d]. conv_state: {"x","B","C"} or None."""
+    b, t, _ = x.shape
+    d_in, nheads = _dims(d_model, cfg)
+    z = L.linear(p["in_z"], x, compute_dtype)
+    xi = L.linear(p["in_x"], x, compute_dtype)
+    bi = L.linear(p["in_B"], x, compute_dtype)
+    ci = L.linear(p["in_C"], x, compute_dtype)
+    dt = L.linear(p["in_dt"], x, compute_dtype)
+
+    cs = conv_state or {"x": None, "B": None, "C": None}
+    xi, ncx = _conv(p["conv_x"], xi, cs["x"])
+    bi, ncb = _conv(p["conv_B"], bi, cs["B"])
+    ci, ncc = _conv(p["conv_C"], ci, cs["C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,T,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # [H]
+    log_w = dt * a[None, None, :]                                 # [B,T,H]
+
+    xh = xi.reshape(b, t, nheads, cfg.head_dim)
+    v = xh * dt[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(bi[:, :, None, :], (b, t, nheads, cfg.state_dim))
+    q = jnp.broadcast_to(ci[:, :, None, :], (b, t, nheads, cfg.state_dim))
+
+    y, final_state = chunked_linear_attention(
+        q, k, v, log_w, chunk=la_chunk, initial_state=ssm_state,
+        scalar_decay=True)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, t, d_in)
+    y = L.rmsnorm(p["norm"], y * L.silu(z))
+    out = L.linear(p["out_proj"], y, compute_dtype)
+    if return_state:
+        return out, {"x": ncx, "B": ncb, "C": ncc}, final_state
+    return out
+
+
+def mamba2_decode_step(p: dict, x: jax.Array, d_model: int, cfg: SSMConfig, *,
+                       conv_state: dict, ssm_state: jax.Array,
+                       compute_dtype=None):
+    """One token. x: [B, 1, d]; conv_state: {"x","B","C"} each [B, K-1, C];
+    ssm_state: [B, H, N, P]. Returns (out [B,1,d], conv_state', ssm_state')."""
+    b = x.shape[0]
+    d_in, nheads = _dims(d_model, cfg)
+    z = L.linear(p["in_z"], x, compute_dtype)
+    xi = L.linear(p["in_x"], x, compute_dtype)
+    bi = L.linear(p["in_B"], x, compute_dtype)
+    ci = L.linear(p["in_C"], x, compute_dtype)
+    dt = L.linear(p["in_dt"], x, compute_dtype)
+
+    xi, ncx = _conv(p["conv_x"], xi, conv_state["x"])
+    bi, ncb = _conv(p["conv_B"], bi, conv_state["B"])
+    ci, ncc = _conv(p["conv_C"], ci, conv_state["C"])
+    xi, bi, ci = xi[:, 0], bi[:, 0], ci[:, 0]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_w = jnp.broadcast_to((dt * a[None, :])[..., None],
+                             (b, nheads, cfg.state_dim))
+
+    xh = xi.reshape(b, nheads, cfg.head_dim)
+    v = xh * dt[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(bi[:, None, :], (b, nheads, cfg.state_dim))
+    q = jnp.broadcast_to(ci[:, None, :], (b, nheads, cfg.state_dim))
+
+    y, new_ssm = linear_attention_step(q, k, v, log_w, ssm_state)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = L.rmsnorm(p["norm"], y * L.silu(z))
+    out = L.linear(p["out_proj"], y, compute_dtype)
+    return out, {"x": ncx, "B": ncb, "C": ncc}, new_ssm

@@ -1,0 +1,66 @@
+"""Adafactor (factored second moments) — the sub-linear-memory alternative.
+
+Matrices store row/column second-moment factors only (O(n+m) instead of
+O(nm)); vectors fall back to full second moments. No first moment (momentum-
+free, per the paper's recommended configuration), relative step sizes off —
+the external schedule drives lr.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, clip_by_global_norm
+
+PyTree = Any
+
+
+def adafactor_init(params: PyTree, cfg: AdamWConfig) -> dict:
+    def factors(p):
+        if p.ndim >= 2:
+            rows = p.shape[:-1]
+            return {"vr": jnp.zeros(rows, jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "v": jax.tree_util.tree_map(factors, params,
+                                        is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(grads: PyTree, state: dict, params: PyTree, lr,
+                     cfg: AdamWConfig) -> tuple[PyTree, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8                     # adafactor beta2 schedule
+    eps = 1e-30
+
+    def upd(g, v, p):
+        g2 = jnp.square(g) + eps
+        if p.ndim >= 2:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+            u = g * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+        # update clipping (adafactor d=1.0)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (u + cfg.weight_decay * pf)
+        return nv, pf.astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_state = dict(state, step=step,
+                     v=treedef.unflatten([o[0] for o in outs]))
+    new_params = treedef.unflatten([o[1] for o in outs])
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,84 @@
+"""AdamW with global-norm clipping — hand-rolled pytree optimizer.
+
+States are kept in f32 regardless of parameter dtype (mixed-precision
+training: bf16 params, f32 master states is available via ``master_weights``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_weights: bool = False  # keep an f32 copy of bf16 params
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    sq = jax.tree_util.tree_reduce(
+        lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads: PyTree, state: dict, params: PyTree, lr,
+                 cfg: AdamWConfig) -> tuple[PyTree, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    src = state.get("master", params)
+
+    def upd(g, m, v, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / c1, v / c2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        return m, v, pf
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(src)
+    outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in outs])
+    new_v = treedef.unflatten([o[1] for o in outs])
+    new_f32 = treedef.unflatten([o[2] for o in outs])
+
+    new_params = jax.tree_util.tree_map(
+        lambda pf, p: pf.astype(p.dtype), new_f32, params)
+    new_state = dict(state, step=step, m=new_m, v=new_v)
+    if "master" in state:
+        new_state["master"] = new_f32
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,189 @@
+"""Multi-port serving engine: the paper's wrapper as a request scheduler.
+
+The engine's batch of KV-cache slots IS a multi-port memory: each engine
+macro-cycle (one external "CLK") services up to four logical ports against it,
+in priority order, exactly as the paper's FSM walks its ports (Fig. 2):
+
+    port A (W, priority 1): EVICT    — free finished slots
+    port B (W, priority 2): PREFILL  — admit a queued request into a free slot
+    port C (R/W, priority 3): DECODE — one token for every active slot
+    port D (R, priority 4): STATUS   — scoreboard snapshot (lengths, slots)
+
+Ports are enabled per-cycle by pending work (``port_en``), the service order
+comes from core.clockgen.build_schedule, and utilization per cycle is
+recorded for the engine benchmark. The single-port baseline
+(``single_port=True``) services ONE port per cycle — the paper's bare-macro
+comparison; benchmarks/engine.py measures the throughput ratio (claim C1 at
+the system level: ~Nx fewer cycles at equal work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.clockgen import build_schedule
+from repro.core.ports import READ, WRITE, PortConfig
+from repro.models import decode_step, init_decode_state, prefill
+
+EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+
+
+class MultiPortEngine:
+    def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
+                 max_len: int = 256, prefill_bucket: int = 32,
+                 kernel_mode: str = "reference", single_port: bool = False,
+                 greedy: bool = True):
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise ValueError("engine currently serves KV-cache families")
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len = slots, max_len
+        self.bucket = prefill_bucket
+        self.single_port = single_port
+        self.state = init_decode_state(cfg, slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.cycles = 0
+        self.port_log: list[tuple[int, ...]] = []
+        self._next_rid = 0
+        self._sp_rotate = 0
+
+        self._decode = jax.jit(
+            lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=kernel_mode))
+        self._prefill1 = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))
+
+    # ---- client API --------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    def pending_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    # ---- port service routines ----------------------------------------------
+    def _port_enables(self) -> PortConfig:
+        finished = any(r is not None and r.done for r in self.slot_req)
+        free = any(r is None for r in self.slot_req)
+        admit = bool(self.queue) and free
+        active = any(r is not None and not r.done for r in self.slot_req)
+        enabled = (finished, admit, active, True)
+        if not any(enabled[:3]):
+            enabled = (False, False, False, True)
+        return PortConfig(enabled=enabled,
+                          roles=(WRITE, WRITE, WRITE, READ))
+
+    def _service_evict(self) -> None:
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.done:
+                self.finished.append(r)
+                self.slot_req[i] = None
+
+    def _service_prefill(self) -> None:
+        if not self.queue:
+            return
+        slot = next((i for i, r in enumerate(self.slot_req) if r is None), None)
+        if slot is None:
+            return
+        req = self.queue.popleft()
+        req.slot = slot
+        # bucket-pad the prompt, run a single-request prefill, splice caches
+        plen = len(req.prompt)
+        bucket = min(self.max_len,
+                     max(self.bucket, 1 << (plen - 1).bit_length()))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        sub = init_decode_state(self.cfg, 1, self.max_len)
+        batch = {"inputs": jnp.asarray(toks)}
+        if self.cfg.input_mode == "embeddings":
+            raise NotImplementedError("engine demo serves token models")
+        sub, _ = self._prefill1(self.params, sub, batch)
+        # write ports into the engine state: splice slot `slot`
+        st = dict(self.state)
+        for k in ("cache_k", "cache_v"):
+            st[k] = jax.lax.dynamic_update_slice(
+                st[k], sub[k], (0, slot, 0, 0, 0))
+        st["len"] = st["len"].at[slot].set(plen)   # true length, not bucket
+        self.state = st
+        self.slot_req[slot] = req
+
+    def _service_decode(self) -> None:
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and not r.done]
+        if not active:
+            return
+        last_tokens = np.zeros((self.n_slots, 1), np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            seqs = r.generated or r.prompt
+            last_tokens[i, 0] = seqs[-1]
+        prev_len = self.state["len"]
+        st, logits = self._decode(self.params, self.state,
+                                  {"inputs": jnp.asarray(last_tokens)})
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # inactive slots: undo the length advance (their KV write is benign —
+        # it lands at their stale cursor and is overwritten on reuse)
+        mask = np.zeros((self.n_slots,), bool)
+        for i in active:
+            mask[i] = True
+        st = dict(st, len=jnp.where(jnp.asarray(mask), st["len"], prev_len))
+        self.state = st
+        for i in active:
+            r = self.slot_req[i]
+            r.generated.append(int(nxt[i]))
+            if len(r.generated) >= r.max_new:
+                r.done = True
+
+    def _service_status(self) -> dict:
+        return {"cycle": self.cycles,
+                "queue": len(self.queue),
+                "active": sum(r is not None and not r.done
+                              for r in self.slot_req),
+                "lens": np.asarray(self.state["len"]).tolist()}
+
+    # ---- the macro-cycle -----------------------------------------------------
+    def step(self) -> dict:
+        """One external clock cycle: walk enabled ports in priority order."""
+        cfg = self._port_enables()
+        sched = build_schedule(cfg)
+        slots = sched.slots
+        if self.single_port:
+            # bare macro: one port per CLK (rotate through enabled ports)
+            slots = (slots[self._sp_rotate % len(slots)],)
+            self._sp_rotate += 1
+        status = {}
+        for port in slots:
+            if port == EVICT:
+                self._service_evict()
+            elif port == PREFILL:
+                self._service_prefill()
+            elif port == DECODE:
+                self._service_decode()
+            else:
+                status = self._service_status()
+        self.cycles += 1
+        self.port_log.append(slots)
+        return status
+
+    def run(self, max_cycles: int = 10_000) -> list[Request]:
+        while self.pending_work() and self.cycles < max_cycles:
+            self.step()
+        return self.finished

@@ -1,0 +1,105 @@
+"""Train step factory: loss -> grads -> (compress) -> clip -> optimizer.
+
+Features wired here:
+  * gradient accumulation (``microbatches``) via lax.scan — each microbatch's
+    backward overlaps the next microbatch's collectives on TPU (XLA async);
+  * optional cross-pod int8 error-feedback gradient compression
+    (distributed/compression.py): per-pod grads via vmap(grad) over a
+    pod-sharded leading axis;
+  * optimizer selection (adamw / adamw8bit / adafactor);
+  * donation-friendly: call via jit(..., donate_argnums=0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import compression as C
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, make_optimizer, warmup_cosine
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    adamw: AdamWConfig = AdamWConfig()
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1
+    grad_compression: Optional[str] = None      # None | "int8_ef"
+    n_pods: int = 1
+
+
+def init_train_state(params: PyTree, tcfg: TrainConfig) -> dict:
+    opt_init, _, _ = make_optimizer(tcfg.optimizer, tcfg.adamw)
+    state = {"params": params, "opt": opt_init(params)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = C.init_ef_state(params, tcfg.n_pods)
+    return state
+
+
+def _split_micro(batch: dict, m: int) -> dict:
+    return {k: v.reshape(m, v.shape[0] // m, *v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig) -> Callable:
+    """Returns step(state, batch) -> (state', metrics)."""
+
+    def loss(p, b):
+        l, metrics = loss_fn(p, cfg, b)
+        return l, metrics
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.grad_compression == "int8_ef":
+            # per-pod gradients: [n_pods, local, ...] batch, vmapped grad
+            pb = _split_micro(batch, tcfg.n_pods)
+            (l, metrics), grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, pb)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(0), metrics)
+            return grads, metrics           # leaves [n_pods, ...]
+        if tcfg.microbatches > 1:
+            mb = _split_micro(batch, tcfg.microbatches)
+
+            def body(acc, b):
+                (l, metrics), g = grad_fn(params, b)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, metrics
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics = jax.lax.scan(body, zero, mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(0), metrics)
+            return grads, metrics
+        (l, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    _, opt_update, _ = make_optimizer(tcfg.optimizer, tcfg.adamw)
+
+    def step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        grads, metrics = compute_grads(params, batch)
+        new_state = dict(state)
+        if tcfg.grad_compression == "int8_ef":
+            grads, new_ef = C.compressed_mean_tree(grads, state["ef"])
+            new_state["ef"] = new_ef
+        lr = warmup_cosine(state["opt"]["step"], peak_lr=tcfg.peak_lr,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+        new_params, new_opt, opt_stats = opt_update(grads, state["opt"],
+                                                    params, lr)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, lr=lr, **opt_stats)
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,86 @@
+"""Checkpoint: atomicity, checksum verification, async, gc, restore."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": [jnp.ones((2, 2)), jnp.zeros((3,))]}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t, extra={"note": "x"})
+    restored, manifest = ckpt.restore(str(tmp_path), t)
+    assert manifest["step"] == 5 and manifest["extra"]["note"] == "x"
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b)),
+        t, restored)
+
+
+def test_checksum_detects_corruption(tmp_path):
+    t = _tree()
+    d = ckpt.save(str(tmp_path), 1, t)
+    # corrupt the manifest's crc
+    mpath = os.path.join(d, "manifest.json")
+    with open(mpath) as f:
+        m = json.load(f)
+    first = next(iter(m["leaves"]))
+    m["leaves"][first]["crc32"] ^= 0xFF
+    with open(mpath, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_gc_keeps_last_n(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, t, keep_last=3)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 3
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_async_saver(tmp_path):
+    t = _tree()
+    s = ckpt.AsyncSaver()
+    s.save(str(tmp_path), 7, t)
+    s.wait()
+    restored, m = ckpt.restore(str(tmp_path), t)
+    assert m["step"] == 7
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = dict(t, a=jnp.zeros((4, 4)))
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_no_partial_checkpoint_on_crash(tmp_path, monkeypatch):
+    """A crash mid-write leaves only a .tmp dir; restore uses the previous
+    complete step."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    orig_rename = os.rename
+
+    def boom(src, dst):
+        raise RuntimeError("simulated crash before publish")
+    monkeypatch.setattr(os, "rename", boom)
+    with pytest.raises(RuntimeError):
+        ckpt.save(str(tmp_path), 2, t)
+    monkeypatch.setattr(os, "rename", orig_rename)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, m = ckpt.restore(str(tmp_path), t)
+    assert m["step"] == 1

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; multi-device tests spawn subprocesses that
+set --xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

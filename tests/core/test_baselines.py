@@ -1,0 +1,81 @@
+"""Baseline designs: semantic equivalence + the traffic/footprint accounting
+behind the paper's Table I/II comparisons."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
+                        reference_step)
+from repro.core.baselines import ReplicatedReads, SinglePortNPass, XorCoded
+
+SPEC = MemorySpec(num_words=16, word_width=2, num_banks=4)
+
+
+def _reqs():
+    rng = np.random.default_rng(3)
+    out = []
+    for _ in range(4):
+        addr = rng.integers(0, SPEC.num_words, 5)
+        out.append(PortRequest(addr=jnp.asarray(addr, jnp.int32),
+                               data=jnp.asarray(rng.normal(size=(5, 2)),
+                                                jnp.float32),
+                               mask=jnp.asarray(rng.random(5) > 0.3)))
+    return out
+
+
+CFG = PortConfig(enabled=(True, True, True, True),
+                 roles=(WRITE, READ, READ, READ))
+
+
+def test_replicated_reads_semantics():
+    base = ReplicatedReads(SPEC, n_read_ports=3)
+    reqs = _reqs()
+    storage = base.init_storage()
+    s, reads = base.step(CFG, storage, reqs)
+    ref_s, ref_reads = reference_step(SPEC, CFG, np.zeros((16, 2), np.float32),
+                                      reqs)
+    for rep in range(3):   # every replica coherent with the reference
+        np.testing.assert_allclose(np.asarray(s[rep]), ref_s)
+    for p in range(4):
+        np.testing.assert_allclose(np.asarray(reads[p]), ref_reads[p])
+
+
+def test_xor_coded_semantics_and_parity():
+    base = XorCoded(SPEC)
+    reqs = _reqs()
+    (data, parity), reads = base.step(CFG, base.init_storage(), reqs)
+    ref_s, ref_reads = reference_step(SPEC, CFG, np.zeros((16, 2), np.float32),
+                                      reqs)
+    np.testing.assert_allclose(
+        np.asarray(data.reshape(16, 2)), ref_s, atol=1e-6)
+    for p in range(4):
+        np.testing.assert_allclose(np.asarray(reads[p]), ref_reads[p])
+    # parity bank == sum over banks (reconstruction invariant)
+    np.testing.assert_allclose(np.asarray(parity),
+                               np.asarray(data).sum(0), atol=1e-5)
+
+
+def test_footprint_ratios_match_paper_table():
+    """Area analogue: proposed = 1x; replicated-quad ~ the 12T school (2x in
+    the paper's normalization -> 4 replicas here, documented deviation);
+    XOR-coded = 1 + 1/banks."""
+    q = 8
+    single = SinglePortNPass(SPEC).counters(CFG, q)
+    assert single.footprint_words == SPEC.num_words            # proposed: 1x
+    rep = ReplicatedReads(SPEC, 3).counters(CFG, q)
+    assert rep.footprint_words == 3 * SPEC.num_words
+    xor = XorCoded(SPEC).counters(CFG, q)
+    assert xor.footprint_words == SPEC.num_words + SPEC.words_per_bank
+
+
+def test_bandwidth_traversal_counts():
+    """Claim C1 structurally: the bare macro traverses storage once per
+    enabled port; the wrapper (kernel) traverses once per macro-cycle."""
+    q = 8
+    for n in range(1, 5):
+        cfg = PortConfig(enabled=tuple(i < n for i in range(4)),
+                         roles=(WRITE, READ, READ, READ))
+        c = SinglePortNPass(SPEC).counters(cfg, q)
+        assert c.storage_traversals == n       # baseline: N passes
+    # the proposed kernel: exactly 1 traversal regardless of N (by
+    # construction — the grid walks each bank once; asserted in
+    # tests/kernels/test_multiport_kernel.py via traffic accounting)

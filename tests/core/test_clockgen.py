@@ -1,0 +1,45 @@
+"""Clock generator invariants from paper Fig. 4: per external CLK cycle,
+BACK has N pulses and CLK2 has N-1 pulses for an N-port configuration."""
+import numpy as np
+
+from repro.core import PortConfig, READ, build_schedule, simulate_waveform
+from repro.core.clockgen import effective_access_rate
+
+
+def _cfg(n, priority=(0, 1, 2, 3)):
+    return PortConfig(enabled=tuple(i < n for i in range(4)),
+                      roles=(READ,) * 4, priority=priority)
+
+
+def test_schedule_pulse_counts():
+    for n in range(1, 5):
+        s = build_schedule(_cfg(n))
+        assert s.n_back_pulses == n
+        assert s.n_clk2_pulses == n - 1
+        assert s.b1b0 == n - 1
+
+
+def test_waveform_fig4_reproduction():
+    # the paper's Fig. 4 simulation: cycles configured 4,3,2,1-port
+    configs = [_cfg(4), _cfg(3), _cfg(2), _cfg(1)]
+    res = 12
+    wf = simulate_waveform(configs, resolution=res)
+    for c, n in enumerate([4, 3, 2, 1]):
+        seg = slice(c * res, (c + 1) * res)
+        assert wf.back[seg].sum() == n
+        assert wf.clk2[seg].sum() == n - 1
+        assert wf.clkp[seg].sum() == 1
+
+
+def test_waveform_resets_to_highest_priority():
+    # CLKP edge initializes selection to the highest-priority enabled port
+    cfg = PortConfig(enabled=(False, True, True, False), roles=(READ,) * 4,
+                     priority=(2, 1, 0, 3))
+    wf = simulate_waveform([cfg], resolution=8)
+    assert wf.selected_port[0] == 2          # port C first under C>B priority
+
+
+def test_effective_access_rate_4x():
+    # Table II: 250 MHz CLK, 4 ports => 1 GHz effective memory access
+    assert effective_access_rate(_cfg(4), 250e6) == 1e9
+    assert effective_access_rate(_cfg(1), 250e6) == 250e6

@@ -1,0 +1,71 @@
+"""PortConfig / priority encoder unit tests (paper §II-A-1, §II-A-3)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MAX_PORTS, READ, WRITE, PortConfig, quad_port, single_port
+from repro.core.priority import (encode_dynamic, encode_static,
+                                 next_port_dynamic, order_static)
+
+
+def test_port_count_encoding():
+    # paper: 00 => 1-port ... 11 => 4-port
+    for n in range(1, 5):
+        cfg = PortConfig(enabled=tuple(i < n for i in range(4)),
+                         roles=(READ,) * 4)
+        assert cfg.enabled_count == n
+        assert cfg.b1b0 == n - 1
+
+
+def test_all_enable_role_combinations_valid():
+    count = 0
+    for mask in range(1, 16):
+        enabled = tuple(bool(mask >> i & 1) for i in range(4))
+        for roles_bits in range(16):
+            roles = tuple(roles_bits >> i & 1 for i in range(4))
+            cfg = PortConfig(enabled=enabled, roles=roles)
+            order = cfg.service_order()
+            assert len(order) == cfg.enabled_count
+            count += 1
+    assert count == 15 * 16  # every combination constructible (claim C4)
+
+
+def test_no_enabled_port_rejected():
+    with pytest.raises(ValueError):
+        PortConfig(enabled=(False,) * 4, roles=(READ,) * 4)
+
+
+def test_priority_order_default_a_to_d():
+    cfg = quad_port()
+    assert cfg.service_order() == (0, 1, 2, 3)
+
+
+def test_priority_permutation_respected():
+    cfg = PortConfig(enabled=(True, True, True, True), roles=(READ,) * 4,
+                     priority=(3, 1, 0, 2))
+    assert cfg.service_order() == (3, 1, 0, 2)
+
+
+def test_static_vs_dynamic_encoder_agree():
+    for mask in range(1, 16):
+        enabled = tuple(bool(mask >> i & 1) for i in range(4))
+        for priority in [(0, 1, 2, 3), (3, 2, 1, 0), (2, 0, 3, 1)]:
+            st = encode_static(enabled, priority)
+            dy = int(encode_dynamic(jnp.array(enabled), jnp.array(priority)))
+            assert st == dy, (enabled, priority)
+
+
+def test_dynamic_fsm_walk_matches_static_order():
+    # walking next_port_dynamic from the reset state visits service_order
+    for mask in range(1, 16):
+        enabled = tuple(bool(mask >> i & 1) for i in range(4))
+        priority = (0, 1, 2, 3)
+        order = order_static(enabled, priority)
+        cur = encode_dynamic(jnp.array(enabled), jnp.array(priority))
+        walked = [int(cur)]
+        for _ in range(len(order) - 1):
+            cur = next_port_dynamic(cur, jnp.array(enabled), jnp.array(priority))
+            walked.append(int(cur))
+        assert tuple(walked) == order
+        # one more transition wraps to the start (Fig. 2 reset arc)
+        cur = next_port_dynamic(cur, jnp.array(enabled), jnp.array(priority))
+        assert int(cur) == order[0]

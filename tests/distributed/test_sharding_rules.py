@@ -1,0 +1,90 @@
+"""Sharding rules: every spec produced for every (arch x mesh) must be
+dimensionally valid — sharded dims divide by their mesh axes (the
+divisibility guards), stack axes unsharded, norms replicated."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding as shd
+from repro.launch import specs as SP
+from repro.train.train_step import TrainConfig
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for spec computation)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+def _check_tree(shapes, specs, mesh):
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_p = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, \
+                f"{'/'.join(map(str, path))}: dim {dim} ! % {axes}={n}"
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_param_specs_divisible(arch, mesh):
+    cfg = registry.get(arch)
+    shapes = SP.params_shapes(cfg)
+    rules = shd.Rules.for_mesh(mesh)
+    specs = shd.param_pspecs(shapes, mesh, rules)
+    _check_tree(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "deepseek-moe-16b", "rwkv6-3b"])
+def test_train_state_specs_divisible(arch):
+    mesh = MESHES[0]
+    cfg = registry.get(arch)
+    tcfg = TrainConfig(optimizer="adamw8bit" if arch.startswith("llama3")
+                       else "adamw")
+    shapes = SP.train_state_shapes(cfg, tcfg)
+    rules = shd.Rules.for_mesh(mesh)
+    specs = SP.train_state_pspecs(cfg, mesh, rules, shapes)
+    _check_tree(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_decode_state_specs_divisible(arch):
+    mesh = MESHES[0]
+    cfg = registry.get(arch)
+    shapes = SP.decode_state_shapes(cfg, 128, 1024)
+    rules = shd.Rules(tp=("data", "model"), fsdp=(), dp=())  # serving rules
+    specs = shd.decode_state_pspecs(cfg, mesh, rules, shapes, batch=128)
+    _check_tree(shapes, specs, mesh)
+
+
+def test_norm_scales_replicated():
+    cfg = registry.get("qwen2.5-3b")
+    shapes = SP.params_shapes(cfg)
+    mesh = MESHES[0]
+    specs = shd.param_pspecs(shapes, mesh, shd.Rules.for_mesh(mesh))
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, spec in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name.endswith(("ln1/scale", "ln2/scale", "final_norm/scale")):
+            assert all(a is None for a in tuple(spec)), (name, spec)

@@ -1,0 +1,78 @@
+"""Fused decode append+attend and flash attention kernels vs jnp oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,s,hkv,g,d,tile", [
+    (1, 128, 1, 1, 16, 64),
+    (2, 256, 2, 4, 32, 64),
+    (3, 128, 4, 2, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_decode_sweep(rng, b, s, hkv, g, d, tile, dtype):
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), dtype)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), dtype)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), dtype)
+    nk = jnp.asarray(rng.normal(size=(b, hkv, d)), dtype)
+    nv = jnp.asarray(rng.normal(size=(b, hkv, d)), dtype)
+    lens = jnp.asarray(rng.integers(0, s - 1, b), jnp.int32)
+    o_r, ck_r, cv_r = ref.decode_attention_ref(q, ck, cv, nk, nv, lens)
+    o_k, ck_k, cv_k = ops.fused_decode_attention(q, ck, cv, nk, nv, lens,
+                                                 seq_tile=tile)
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(ck_k, np.float32),
+                               np.asarray(ck_r, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(cv_k, np.float32),
+                               np.asarray(cv_r, np.float32), atol=tol)
+
+
+def test_fused_decode_edge_positions(rng):
+    """Append at position 0 and at the last tile boundary."""
+    b, s, hkv, g, d = 2, 128, 2, 2, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    for lens in ([0, 0], [s - 1, 63], [0, s - 1]):
+        lens = jnp.asarray(lens, jnp.int32)
+        o_r, ck_r, _ = ref.decode_attention_ref(q, ck, cv, nk, nv, lens)
+        o_k, ck_k, _ = ops.fused_decode_attention(q, ck, cv, nk, nv, lens,
+                                                  seq_tile=64)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r))
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d,qt,kt", [
+    (1, 2, 1, 128, 128, 32, 64, 64),
+    (2, 4, 2, 128, 128, 64, 128, 64),
+    (1, 8, 8, 256, 256, 16, 64, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, b, h, hkv, sq, sk, d, qt, kt, causal):
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), jnp.float32)
+    o_r = ref.attention_ref(q, k, v, causal=causal)
+    o_k = ops.flash_attention(q, k, v, causal=causal, q_tile=qt, k_tile=kt)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    b, h, hkv, s, d = 1, 4, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.bfloat16)
+    o_r = ref.attention_ref(q, k, v, causal=True)
+    o_k = ops.flash_attention(q, k, v, causal=True, q_tile=64, k_tile=64)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=5e-2)

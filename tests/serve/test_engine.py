@@ -1,0 +1,95 @@
+"""Multi-port serving engine: correctness of scheduling + generation, and
+the 4-port vs single-port cycle-count advantage (claim C1 at system level)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, rng):
+    return [list(rng.integers(0, cfg.vocab, rng.integers(3, 8)))
+            for _ in range(n)]
+
+
+def test_engine_completes_all_requests(setup):
+    cfg, params = setup
+    eng = MultiPortEngine(params, cfg, slots=4, max_len=64, prefill_bucket=8)
+    rng = np.random.default_rng(0)
+    for p in _prompts(cfg, 6, rng):
+        eng.submit(p, max_new=4)
+    done = eng.run(max_cycles=500)
+    assert len(done) == 6
+    for r in done:
+        assert len(r.generated) == 4
+
+
+def test_engine_matches_unbatched_decode(setup):
+    """Engine output for one request == direct prefill+decode."""
+    cfg, params = setup
+    from repro.models import decode_step, init_decode_state, prefill
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    prompt = list(rng.integers(0, cfg.vocab, 5))
+
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64, prefill_bucket=8)
+    eng.submit(prompt, max_new=5)
+    done = eng.run(max_cycles=100)
+    got = done[0].generated
+
+    state = init_decode_state(cfg, 1, 64)
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :5] = prompt
+    state, _ = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))(
+        params, state, {"inputs": jnp.asarray(toks)})
+    state = dict(state, len=jnp.asarray([5], jnp.int32))
+    cur = prompt[-1]
+    want = []
+    step = jax.jit(lambda p, s, b: decode_step(p, cfg, s, b))
+    for _ in range(5):
+        state, lg = step(params, state, {"inputs": jnp.asarray([[cur]])})
+        cur = int(jnp.argmax(lg[0]))
+        want.append(cur)
+    assert got == want, (got, want)
+
+
+def test_multiport_uses_fewer_cycles_than_single_port(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompts = _prompts(cfg, 6, rng)
+
+    multi = MultiPortEngine(params, cfg, slots=4, max_len=64, prefill_bucket=8)
+    single = MultiPortEngine(params, cfg, slots=4, max_len=64,
+                             prefill_bucket=8, single_port=True)
+    for p in prompts:
+        multi.submit(p, max_new=4)
+        single.submit(p, max_new=4)
+    done_m = multi.run(max_cycles=1000)
+    done_s = single.run(max_cycles=1000)
+    assert len(done_m) == len(done_s) == 6
+    # same outputs regardless of scheduling
+    for a, b in zip(sorted(done_m, key=lambda r: r.rid),
+                    sorted(done_s, key=lambda r: r.rid)):
+        assert a.generated == b.generated
+    assert multi.cycles < single.cycles, (multi.cycles, single.cycles)
+
+
+def test_priority_evict_before_prefill(setup):
+    """With a full slot table, eviction (A) must precede admission (B) in the
+    same macro-cycle — the FSM's priority order makes the freed slot usable
+    one cycle earlier than single-port scheduling."""
+    cfg, params = setup
+    eng = MultiPortEngine(params, cfg, slots=1, max_len=64, prefill_bucket=8)
+    eng.submit([1, 2, 3], max_new=1)
+    eng.submit([4, 5, 6], max_new=1)
+    eng.run(max_cycles=50)
+    assert len(eng.finished) == 2
