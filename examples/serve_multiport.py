@@ -22,6 +22,10 @@ from repro.serve.engine import MultiPortEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--single-port", action="store_true")
+    ap.add_argument("--kernel-mode", default="pallas",
+                    choices=["pallas", "reference"],
+                    help="pallas: fused one-traversal data plane (default); "
+                         "reference: two-pass jnp oracle")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
@@ -29,6 +33,7 @@ def main():
     cfg = registry.get("tinyllama-1.1b", reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = MultiPortEngine(params, cfg, slots=4, max_len=64, prefill_bucket=8,
+                          kernel_mode=args.kernel_mode,
                           single_port=args.single_port)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
@@ -43,11 +48,14 @@ def main():
                   f"active={status['active']} lens={status['lens']}")
     dt = time.perf_counter() - t0
 
-    mode = "single-port" if args.single_port else "4-port"
+    mode = "single-port" if args.single_port else f"4-port/{args.kernel_mode}"
     toks = sum(len(r.generated) for r in eng.finished)
     print(f"\n[{mode}] {len(eng.finished)} requests, {toks} tokens, "
           f"{eng.cycles} macro-cycles, {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    print(f"pool: {eng.pool_traversals} physical traversals "
+          f"({eng.steady_decode_traversals / max(eng.steady_decode_steps, 1):.2f}"
+          f" per steady decode step; claim C1: ~1 fused vs 2 two-pass)")
     print("port schedule of the first 6 cycles:",
           [tuple("EPDS"[p] for p in c) for c in eng.port_log[:6]])
 

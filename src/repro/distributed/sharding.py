@@ -121,9 +121,47 @@ def _base_spec(path: str, shape, mesh: Mesh, r: Rules):
     return (None,) * nd                          # replicate smalls
 
 
-def param_pspecs(params: PyTree, mesh: Mesh, rules: Optional[Rules] = None
-                 ) -> PyTree:
-    """PartitionSpec tree mirroring ``params`` (works on ShapeDtypeStructs)."""
+_ATTN_PROJ = re.compile(r"attn/(wq|wk|wv)/(w|b)$")
+
+
+def _head_aligned(sub: str, spec, mesh: Mesh, r: Rules,
+                  cfg: Optional[ArchConfig]):
+    """Drop tp from attention q/k/v projections that would split a head.
+
+    Megatron-style TP must shard q/k/v on the HEAD boundary: a tp axis that
+    does not divide the head count would slice inside a single head's
+    ``head_dim`` columns, which breaks RoPE's half-dim pairing (and, on some
+    XLA versions, miscompiles under the layer scan). When the head count does
+    not divide, the projection's output columns replicate — exactly how
+    ``kv_cache_spec`` already guards the cached heads.
+    """
+    if cfg is None:
+        return spec
+    m = _ATTN_PROJ.search(sub)
+    if not m:
+        return spec
+    heads = cfg.n_heads if m.group(1) == "wq" else cfg.n_kv_heads
+    if heads % max(_axsize(mesh, r.tp), 1) == 0:
+        return spec
+    tp_axes = set(_flat_axes(r.tp))
+
+    def strip(axes):
+        if axes is None:
+            return None
+        kept = tuple(a for a in _flat_axes(axes) if a not in tp_axes)
+        return kept[0] if len(kept) == 1 else (kept or None)
+
+    # only the output-column dim (last) carries tp for these projections
+    return tuple(spec[:-1]) + (strip(spec[-1]),)
+
+
+def param_pspecs(params: PyTree, mesh: Mesh, rules: Optional[Rules] = None,
+                 cfg: Optional[ArchConfig] = None) -> PyTree:
+    """PartitionSpec tree mirroring ``params`` (works on ShapeDtypeStructs).
+
+    ``cfg``, when provided, enables head-aligned attention TP (see
+    :func:`_head_aligned`); without it the raw divisibility guards apply.
+    """
     r = rules or Rules.for_mesh(mesh)
 
     def assign(path_tuple, leaf):
@@ -132,6 +170,7 @@ def param_pspecs(params: PyTree, mesh: Mesh, rules: Optional[Rules] = None
         # strip the stack prefix components from the rule path
         sub = "/".join(path.split("/")[n:]) if n else path
         base = _base_spec(sub, leaf.shape[n:], mesh, r)
+        base = _head_aligned(sub, tuple(base), mesh, r, cfg)
         return P(*((None,) * n + tuple(base)))
 
     return jax.tree_util.tree_map_with_path(assign, params)

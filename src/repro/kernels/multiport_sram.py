@@ -5,6 +5,10 @@ is banked ``[num_banks, words_per_bank, W]``; the grid walks banks; each grid
 step stages ONE bank tile in VMEM and services every enabled port's traffic to
 that bank, in priority order (the FSM walk unrolled — at most 4 slots).
 
+The caller packs ONLY the enabled ports, already in service order (see
+ops.multiport_step): disabled ports contribute zero DMA traffic and zero
+compute, so the kernel's HBM footprint is storage + (enabled-port queues).
+
 TPU adaptation notes (DESIGN.md §2):
   * gather/scatter are realized as one-hot matmuls — MXU-friendly and free of
     dynamic-index hazards (a 65nm address decoder becomes a one-hot row; the
@@ -14,7 +18,7 @@ TPU adaptation notes (DESIGN.md §2):
     traversal regardless of the enabled-port count.
   * BlockSpec tiling: words_per_bank x W tiles; pick W as a multiple of 128
     (lane width) and words_per_bank as a multiple of 8 (sublane) for alignment;
-    the VMEM working set per step is (wpb*W + 4*Q*(W+3)) words.
+    the VMEM working set per step is (wpb*W + P_eff*Q*(W+3)) words.
 
 Priority semantics (claim C3) hold per bank; banks partition the address
 space, so cross-bank ordering is immaterial.
@@ -27,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.ports import MAX_PORTS, WRITE, PortConfig
+from repro.core.ports import WRITE
 
 
 def _iota(n: int, dtype=jnp.int32) -> jax.Array:
@@ -36,7 +40,7 @@ def _iota(n: int, dtype=jnp.int32) -> jax.Array:
 
 
 def _kernel(bank_ref, local_ref, data_ref, mask_ref, storage_ref,
-            out_storage_ref, reads_ref, *, config: PortConfig,
+            out_storage_ref, reads_ref, *, roles: tuple[int, ...],
             words_per_bank: int):
     b = pl.program_id(0)
 
@@ -49,62 +53,64 @@ def _kernel(bank_ref, local_ref, data_ref, mask_ref, storage_ref,
     wpb = words_per_bank
     row_ids = _iota(wpb)                                    # [wpb]
 
-    for port in config.service_order():                     # FSM walk, unrolled
-        lane_m = mask_ref[port] & (bank_ref[port] == b)     # [Q]
+    for slot, role in enumerate(roles):                     # FSM walk, unrolled
+        lane_m = mask_ref[slot] & (bank_ref[slot] == b)     # [Q]
         # one-hot address decode: sel[q, w] == lane q targets word w of this bank
-        sel = (local_ref[port][:, None] == row_ids[None, :]) & lane_m[:, None]
+        sel = (local_ref[slot][:, None] == row_ids[None, :]) & lane_m[:, None]
         sel_f = sel.astype(dtype)
-        if config.roles[port] == WRITE:
+        if role == WRITE:
             written = sel.any(axis=0)                       # [wpb]
-            newvals = jax.lax.dot(sel_f.T, data_ref[port],
+            newvals = jax.lax.dot(sel_f.T, data_ref[slot],
                                   preferred_element_type=dtype)
             tile = jnp.where(written[:, None], newvals, tile)
         else:
             got = jax.lax.dot(sel_f, tile, preferred_element_type=dtype)
-            reads_ref[port] = reads_ref[port] + got
+            reads_ref[slot] = reads_ref[slot] + got
 
     out_storage_ref[0] = tile
 
 
 def multiport_sram_step(storage_banked: jax.Array, bank_id: jax.Array,
                         local_addr: jax.Array, data: jax.Array,
-                        mask: jax.Array, *, config: PortConfig,
+                        mask: jax.Array, *, roles: tuple[int, ...],
                         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """One macro-cycle over banked storage.
 
     Args:
       storage_banked: [num_banks, words_per_bank, W].
-      bank_id/local_addr: int32 [MAX_PORTS, Q] precomputed addr decomposition.
-      data: [MAX_PORTS, Q, W] write payloads.
-      mask: bool [MAX_PORTS, Q]; write masks must already be deduped
+      bank_id/local_addr: int32 [P_eff, Q] precomputed addr decomposition for
+            the ENABLED ports only, stacked in service (priority) order.
+      data: [P_eff, Q, W] write payloads (same order).
+      mask: bool [P_eff, Q]; write masks must already be deduped
             (last-wins) by the caller — see ops.multiport_step.
-      config: static port configuration (jit specialization key).
+      roles: READ/WRITE per packed slot, in service order (jit
+            specialization key).
 
     Returns:
-      (storage_banked', reads[MAX_PORTS, Q, W]).
+      (storage_banked', reads[P_eff, Q, W]) — reads are zeros for write slots.
     """
     nb, wpb, w = storage_banked.shape
-    p, q = bank_id.shape
-    assert p == MAX_PORTS
+    p_eff, q = bank_id.shape
+    assert p_eff == len(roles)
 
-    kernel = functools.partial(_kernel, config=config, words_per_bank=wpb)
+    kernel = functools.partial(_kernel, roles=tuple(roles), words_per_bank=wpb)
     out_storage, reads = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((p, q), lambda b: (0, 0)),            # bank_id
-            pl.BlockSpec((p, q), lambda b: (0, 0)),            # local_addr
-            pl.BlockSpec((p, q, w), lambda b: (0, 0, 0)),      # data
-            pl.BlockSpec((p, q), lambda b: (0, 0)),            # mask
+            pl.BlockSpec((p_eff, q), lambda b: (0, 0)),        # bank_id
+            pl.BlockSpec((p_eff, q), lambda b: (0, 0)),        # local_addr
+            pl.BlockSpec((p_eff, q, w), lambda b: (0, 0, 0)),  # data
+            pl.BlockSpec((p_eff, q), lambda b: (0, 0)),        # mask
             pl.BlockSpec((1, wpb, w), lambda b: (b, 0, 0)),    # storage tile
         ],
         out_specs=[
             pl.BlockSpec((1, wpb, w), lambda b: (b, 0, 0)),    # storage out
-            pl.BlockSpec((p, q, w), lambda b: (0, 0, 0)),      # reads
+            pl.BlockSpec((p_eff, q, w), lambda b: (0, 0, 0)),  # reads
         ],
         out_shape=[
             jax.ShapeDtypeStruct(storage_banked.shape, storage_banked.dtype),
-            jax.ShapeDtypeStruct((p, q, w), storage_banked.dtype),
+            jax.ShapeDtypeStruct((p_eff, q, w), storage_banked.dtype),
         ],
         input_output_aliases={4: 0},                           # storage in-place
         interpret=interpret,

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.multiport import MemorySpec, _dedup_last_wins
-from repro.core.ports import MAX_PORTS, WRITE, PortConfig, PortRequest
+from repro.core.ports import MAX_PORTS, READ, WRITE, PortConfig, PortRequest
 from repro.kernels import flash_attention as fa
 from repro.kernels import kv_multiport as kvmp
 from repro.kernels import multiport_sram as mps
@@ -23,21 +23,25 @@ from repro.kernels import multiport_sram as mps
 def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
                    requests: Sequence[PortRequest], *, interpret: bool = True
                    ) -> tuple[jax.Array, list[jax.Array]]:
-    """Kernel-backed macro-cycle with the same contract as core.multiport.step."""
+    """Kernel-backed macro-cycle with the same contract as core.multiport.step.
+
+    Only the ENABLED ports' queues are packed and shipped to the kernel (in
+    service order), so disabled ports cost zero HBM traffic — the C1 property
+    at the request-metadata level: storage traversal bytes are constant in the
+    port count, and queue bytes scale only with the ports actually enabled.
+    """
     q = requests[0].queue_len
     for r in requests:
         if r.queue_len != q:
             raise ValueError("all port queues must share one queue length")
 
     wpb = spec.words_per_bank
+    order = config.service_order()                    # enabled, priority order
     addrs, datas, masks = [], [], []
-    for p in range(MAX_PORTS):
+    for p in order:
         r = requests[p]
         m = r.mask
-        enabled = config.enabled[p]
-        if not enabled:
-            m = jnp.zeros_like(m)
-        elif config.roles[p] == WRITE:
+        if config.roles[p] == WRITE:
             m = _dedup_last_wins(r.addr, m)          # last-wins in queue order
         # clip OOB to an always-masked sentinel
         in_range = (r.addr >= 0) & (r.addr < spec.num_words)
@@ -46,17 +50,22 @@ def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
         datas.append(r.data.astype(spec.dtype))
         masks.append(m)
 
-    addr = jnp.stack(addrs)                           # [P, Q]
-    data = jnp.stack(datas)                           # [P, Q, W]
-    mask = jnp.stack(masks)                           # [P, Q]
+    addr = jnp.stack(addrs)                           # [P_eff, Q]
+    data = jnp.stack(datas)                           # [P_eff, Q, W]
+    mask = jnp.stack(masks)                           # [P_eff, Q]
     bank_id = addr // wpb
     local = addr % wpb
 
     banked = storage.reshape(spec.num_banks, wpb, spec.word_width)
-    banked, reads = mps.multiport_sram_step(
+    banked, packed = mps.multiport_sram_step(
         banked, bank_id.astype(jnp.int32), local.astype(jnp.int32), data, mask,
-        config=config, interpret=interpret)
-    return banked.reshape(spec.num_words, spec.word_width), [reads[p] for p in range(MAX_PORTS)]
+        roles=tuple(config.roles[p] for p in order), interpret=interpret)
+    reads = [jnp.zeros((q, spec.word_width), spec.dtype)
+             for _ in range(MAX_PORTS)]
+    for slot, p in enumerate(order):
+        if config.roles[p] == READ:
+            reads[p] = packed[slot]
+    return banked.reshape(spec.num_words, spec.word_width), reads
 
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "interpret"))

@@ -162,7 +162,7 @@ def build_cell_fn(cfg, cell, mesh, rules, *, optimizer=None,
             tp=("data", "model"), fsdp=(),
             dp=("pod",) if "pod" in mesh.axis_names else ())
     params = SP.params_shapes(cfg)
-    pspecs = shd.param_pspecs(params, mesh, rules)
+    pspecs = shd.param_pspecs(params, mesh, rules, cfg=cfg)
     state_shapes = SP.decode_state_shapes(cfg, cell.global_batch, cell.seq_len)
     state_specs = shd.decode_state_pspecs(cfg, mesh, rules, state_shapes,
                                           batch=cell.global_batch)

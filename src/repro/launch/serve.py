@@ -25,6 +25,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--single-port", action="store_true")
+    ap.add_argument("--kernel-mode", default="pallas",
+                    choices=["pallas", "reference"])
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="lower Pallas kernels through Mosaic (TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,7 +37,9 @@ def main() -> None:
         raise SystemExit(f"{args.arch} has a stub frontend; serve a token arch")
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = MultiPortEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                          prefill_bucket=16, single_port=args.single_port)
+                          prefill_bucket=16, kernel_mode=args.kernel_mode,
+                          single_port=args.single_port,
+                          interpret=not args.no_interpret)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(list(rng.integers(0, cfg.vocab, int(rng.integers(3, 10)))),
@@ -45,6 +51,8 @@ def main() -> None:
     mode = "single-port" if args.single_port else "multi-port"
     print(f"[{mode}] {len(done)} requests, {toks} tokens, "
           f"{eng.cycles} macro-cycles, {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
+    print(f"pool traversals: {eng.pool_traversals} "
+          f"({eng.pool_traversals / max(toks, 1):.2f}/token)")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
 

@@ -125,7 +125,7 @@ def opt_state_pspecs(opt_shapes: PyTree, param_specs: PyTree, mesh: Mesh,
 
 def train_state_pspecs(cfg: ArchConfig, mesh: Mesh, rules: shd.Rules,
                        state_shapes: PyTree) -> PyTree:
-    pspecs = shd.param_pspecs(state_shapes["params"], mesh, rules)
+    pspecs = shd.param_pspecs(state_shapes["params"], mesh, rules, cfg=cfg)
     out = {"params": pspecs,
            "opt": opt_state_pspecs(state_shapes["opt"], pspecs, mesh, rules)}
     if "ef" in state_shapes:

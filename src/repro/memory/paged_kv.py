@@ -2,29 +2,40 @@
 serving memory manager.
 
 The physical pool is ONE word-addressable MultiPortMemory (a word = one
-token's K or V vector for one layer); sequences own pages of ``page_tokens``
-words through a page table, exactly like vLLM's paged attention — except the
-pool is accessed through the paper's configurable ports:
+token's full KV footprint: K and V vectors for every layer); sequences own
+pages of ``page_tokens`` words through a page table, exactly like vLLM's
+paged attention — except the pool is accessed through the paper's
+configurable ports:
 
     port A (W): decode append     — one word per active sequence
     port B (R): attention reads   — gathers of page-resident words
-    port C (W): prefill bulk fill — a prompt's pages in one macro-cycle
-    port D (W): eviction          — freed pages zeroed (optional scrub)
+    port C (W): prefill bulk fill — admitted prompts' pages in one shot
+    port D (W): eviction scrub    — freed pages zeroed
 
-Every macro-cycle services the enabled ports against the same physical pool
-in priority order (core.multiport semantics), so fragmentation-free sharing
-of HBM between growing/shrinking sequences comes for free, and the
-bandwidth-amplification claim C1 applies verbatim: one pool traversal
-services all four streams.
+One :meth:`cycle` call is ONE physical traversal of the pool servicing every
+enabled port, in the engine's FSM order (priority ``A > D > C > B``): decode
+appends land first, eviction scrubs reclaim pages before bulk prefill can
+reuse them, and attention reads observe everything written earlier in the
+same macro-cycle (the paper's same-cycle W->R visibility). ``traversals``
+counts physical traversals — the serving engine benchmark divides it by
+generated tokens to measure claim C1 at the system level.
 
-This module keeps the page-table bookkeeping host-side (python ints —
-it is control plane, like the engine's scheduler) while all data-plane
-traffic flows through ``core.step``/``step_banked``.
+Each port stream accepts a single ``{"seq": ...}`` dict or a LIST of them
+(multi-sequence transactions): the pool packs all streams of a port into one
+vectorized request queue, so e.g. every active slot's decode append is one
+port-A transaction.
+
+``use_kernel=True`` backs the data plane with ``core.step_banked`` (the
+Pallas one-traversal kernel; ``interpret=`` executes it in Python on CPU
+CI), ``use_kernel=False`` keeps the jnp oracle ``core.step``. The page-table
+bookkeeping stays host-side (python ints — it is control plane, like the
+engine's scheduler).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +43,32 @@ import numpy as np
 
 from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
                         empty_request, step, step_banked)
+
+# pool port indices
+APPEND, ATTN_READ, BULK_FILL, SCRUB = 0, 1, 2, 3
+# service order: appends > scrubs > bulk fills > reads (see module docstring)
+_PRIORITY = (APPEND, SCRUB, BULK_FILL, ATTN_READ)
+_ROLES = (WRITE, READ, WRITE, WRITE)
+
+Stream = Union[dict, Sequence[dict], None]
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Round a queue length up to a power of two (jit shape reuse)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "config", "use_kernel",
+                                             "interpret"))
+def _pool_step(spec, config, storage, requests, *, use_kernel: bool,
+               interpret: bool):
+    if use_kernel:
+        return step_banked(spec, config, storage, requests,
+                           interpret=interpret)
+    return step(spec, config, storage, requests)
 
 
 @dataclasses.dataclass
@@ -45,18 +82,23 @@ class PagedPool:
     tables: dict                       # seq_id -> list[page_id]
     lengths: dict                      # seq_id -> tokens stored
     use_kernel: bool = False
+    interpret: bool = True
+    traversals: int = 0                # physical pool traversals serviced
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
                dtype=jnp.float32, num_banks: int = 8,
-               use_kernel: bool = False) -> "PagedPool":
-        spec = MemorySpec(num_words=n_pages * page_tokens,
+               use_kernel: bool = False, interpret: bool = True) -> "PagedPool":
+        num_words = n_pages * page_tokens
+        while num_words % num_banks:
+            num_banks //= 2                       # geometry guard
+        spec = MemorySpec(num_words=num_words,
                           word_width=word_width, dtype=dtype,
-                          num_banks=num_banks)
+                          num_banks=max(num_banks, 1))
         return cls(spec=spec, page_tokens=page_tokens,
                    storage=spec.init_storage(),
                    free_pages=list(range(n_pages)), tables={}, lengths={},
-                   use_kernel=use_kernel)
+                   use_kernel=use_kernel, interpret=interpret)
 
     # ---- control plane ------------------------------------------------------
     def _ensure_capacity(self, seq: int, new_tokens: int) -> None:
@@ -73,75 +115,121 @@ class PagedPool:
         return (table[token_idx // self.page_tokens] * self.page_tokens
                 + token_idx % self.page_tokens)
 
-    def free(self, seq: int) -> None:
-        self.free_pages.extend(self.tables.pop(seq, []))
+    def free(self, seq: int) -> list:
+        """Release a sequence's pages; returns the freed page ids (so the
+        caller can scrub them through port D in the same macro-cycle)."""
+        pages = self.tables.pop(seq, [])
+        self.free_pages.extend(pages)
         self.lengths.pop(seq, None)
+        return pages
 
     # ---- data plane: one macro-cycle -----------------------------------------
-    def cycle(self, *, append: Optional[dict] = None,
-              read: Optional[dict] = None,
-              prefill: Optional[dict] = None) -> dict:
-        """Service up to three logical streams in ONE pool traversal.
+    def cycle(self, *, append: Stream = None, read: Stream = None,
+              prefill: Stream = None,
+              scrub: Optional[Sequence[int]] = None) -> dict:
+        """Service up to four logical streams in ONE pool traversal.
 
-        append:  {"seq": int, "vectors": [T, W]} — decode appends
-        read:    {"seq": int, "positions": int array} — attention gather
-        prefill: {"seq": int, "vectors": [T, W]} — bulk prompt fill
-        Returns {"read": [Q, W] or None}.
+        append:  {"seq": int, "vectors": [T, W]} or list — decode appends
+        read:    {"seq": int, "positions": int array} or list — attn gathers
+        prefill: {"seq": int, "vectors": [T, W]} or list — bulk prompt fills
+        scrub:   page ids to zero (port D — eviction)
+        Returns {"read": [Q, W] | list thereof | None} mirroring the input
+        shape of ``read``.
         """
-        q = 0
-        for s in (append, read, prefill):
-            if s is not None:
-                n = (len(s["positions"]) if "positions" in s
-                     else s["vectors"].shape[0])
-                q = max(q, n)
-        if q == 0:
-            return {"read": None}
+        read_was_dict = isinstance(read, dict)
+        appends = self._as_streams(append)
+        reads = self._as_streams(read)
+        prefills = self._as_streams(prefill)
+        scrub = list(scrub) if scrub else []
+
+        lanes = [0, 0, 0, 0]
+        lanes[APPEND] = sum(s["vectors"].shape[0] for s in appends)
+        lanes[ATTN_READ] = sum(len(s["positions"]) for s in reads)
+        lanes[BULK_FILL] = sum(s["vectors"].shape[0] for s in prefills)
+        lanes[SCRUB] = len(scrub) * self.page_tokens
+        if not any(lanes):
+            # no traffic: still mirror the read input shape (one result per
+            # stream) so stream->result pairing survives empty gathers
+            if not reads:
+                return {"read": None}
+            empty = jnp.zeros((0, self.spec.word_width), self.spec.dtype)
+            return {"read": empty if read_was_dict
+                    else [empty for _ in reads]}
+        q = _bucket(max(lanes))
 
         reqs = [empty_request(q, self.spec.word_width, self.spec.dtype)
                 for _ in range(4)]
-        roles = [WRITE, READ, WRITE, READ]
 
-        def _fill_write(port, stream):
-            seq, vec = stream["seq"], np.asarray(stream["vectors"])
-            t = vec.shape[0]
-            self._ensure_capacity(seq, t)
-            idx = np.arange(self.lengths[seq], self.lengths[seq] + t)
+        def _write_req(streams):
             addr = np.zeros(q, np.int32)
             data = np.zeros((q, self.spec.word_width), np.float32)
             mask = np.zeros(q, bool)
-            addr[:t] = self._addr(seq, idx)
-            data[:t] = vec
-            mask[:t] = True
-            self.lengths[seq] += t
-            reqs[port] = PortRequest(addr=jnp.asarray(addr),
-                                     data=jnp.asarray(data, self.spec.dtype),
-                                     mask=jnp.asarray(mask))
+            at = 0
+            for s in streams:
+                seq, vec = s["seq"], np.asarray(s["vectors"], np.float32)
+                t = vec.shape[0]
+                self._ensure_capacity(seq, t)
+                idx = np.arange(self.lengths[seq], self.lengths[seq] + t)
+                addr[at:at + t] = self._addr(seq, idx)
+                data[at:at + t] = vec
+                mask[at:at + t] = True
+                self.lengths[seq] += t
+                at += t
+            return PortRequest(addr=jnp.asarray(addr),
+                               data=jnp.asarray(data, self.spec.dtype),
+                               mask=jnp.asarray(mask))
 
-        if append is not None:
-            _fill_write(0, append)
-        if prefill is not None:
-            _fill_write(2, prefill)
-        if read is not None:
-            seq = read["seq"]
-            pos = np.asarray(read["positions"])
+        if appends:
+            reqs[APPEND] = _write_req(appends)
+        if prefills:
+            reqs[BULK_FILL] = _write_req(prefills)
+        if scrub:
             addr = np.zeros(q, np.int32)
             mask = np.zeros(q, bool)
-            addr[: len(pos)] = self._addr(seq, pos)
-            mask[: len(pos)] = True
-            reqs[1] = PortRequest(addr=jnp.asarray(addr),
-                                  data=jnp.zeros((q, self.spec.word_width),
-                                                 self.spec.dtype),
-                                  mask=jnp.asarray(mask))
+            words = (np.asarray(scrub)[:, None] * self.page_tokens
+                     + np.arange(self.page_tokens)[None, :]).reshape(-1)
+            addr[: len(words)] = words
+            mask[: len(words)] = True
+            reqs[SCRUB] = PortRequest(
+                addr=jnp.asarray(addr),
+                data=jnp.zeros((q, self.spec.word_width), self.spec.dtype),
+                mask=jnp.asarray(mask))
+        slices = []
+        if reads:
+            addr = np.zeros(q, np.int32)
+            mask = np.zeros(q, bool)
+            at = 0
+            for s in reads:
+                pos = np.asarray(s["positions"])
+                addr[at:at + len(pos)] = self._addr(s["seq"], pos)
+                mask[at:at + len(pos)] = True
+                slices.append((at, at + len(pos)))
+                at += len(pos)
+            reqs[ATTN_READ] = PortRequest(
+                addr=jnp.asarray(addr),
+                data=jnp.zeros((q, self.spec.word_width), self.spec.dtype),
+                mask=jnp.asarray(mask))
 
-        cfg = PortConfig(enabled=(append is not None, read is not None,
-                                  prefill is not None, False),
-                         roles=tuple(roles))
-        runner = step_banked if self.use_kernel else step
-        self.storage, reads = runner(self.spec, cfg, self.storage, reqs)
-        out = reads[1] if read is not None else None
-        if out is not None:
-            out = out[: len(read["positions"])]
-        return {"read": out}
+        cfg = PortConfig(enabled=(bool(appends), bool(reads), bool(prefills),
+                                  bool(scrub)),
+                         roles=_ROLES, priority=_PRIORITY)
+        self.storage, out = _pool_step(self.spec, cfg, self.storage,
+                                       tuple(reqs),
+                                       use_kernel=self.use_kernel,
+                                       interpret=self.interpret)
+        self.traversals += 1
+        if not reads:
+            return {"read": None}
+        got = [out[ATTN_READ][a:b] for a, b in slices]
+        return {"read": got[0] if read_was_dict else got}
+
+    @staticmethod
+    def _as_streams(stream: Stream) -> list:
+        if stream is None:
+            return []
+        if isinstance(stream, dict):
+            return [stream]
+        return list(stream)
 
     @property
     def utilization(self) -> float:

@@ -130,6 +130,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      pos_embed: str = "rope", rope_theta: float = 10000.0,
                      mrope_sections=(16, 24, 24),
                      kernel_mode: Literal["reference", "multiport"] = "reference",
+                     interpret: bool = True,
                      compute_dtype=None):
     """One decode step. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, D];
     cache_len: [B] current lengths. Returns (out [B,1,d], k', v').
@@ -153,7 +154,8 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
     if kernel_mode == "multiport":
         from repro.kernels import ops
         out, cache_k, cache_v = ops.fused_decode_attention(
-            q1, cache_k, cache_v, new_k, new_v, cache_len)
+            q1, cache_k, cache_v, new_k, new_v, cache_len,
+            interpret=interpret)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.decode_attention_ref(

@@ -75,14 +75,15 @@ def transformer_block_prefill(p: dict, x, positions, cache_k, cache_v,
 
 
 def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
-                             cfg: ArchConfig, kernel_mode: str = "reference"):
+                             cfg: ArchConfig, kernel_mode: str = "reference",
+                             interpret: bool = True):
     h, ck, cv = A.attention_decode(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache_k, cache_v,
         cache_len,
         n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
-        compute_dtype=cfg.cdtype)
+        interpret=interpret, compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:

@@ -238,7 +238,8 @@ def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
 # --------------------------------------------------------------------------
 
 def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
-                *, kernel_mode: str = "reference") -> tuple[PyTree, jax.Array]:
+                *, kernel_mode: str = "reference", interpret: bool = True
+                ) -> tuple[PyTree, jax.Array]:
     """Returns (state', logits [B, V])."""
     inputs = batch["inputs"]
     bsz = inputs.shape[0]
@@ -248,7 +249,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
         def body(h, xs):
             pl, ck, cv = xs
             h, ck, cv = B.transformer_block_decode(
-                pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode)
+                pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
+                interpret=interpret)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], state["cache_k"], state["cache_v"]))
@@ -270,7 +272,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
         def group_body(h, xs):
             pg, ck, cv, conv, ssm_s = xs
             h, ck, cv = B.transformer_block_decode(
-                shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode)
+                shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
+                interpret=interpret)
 
             def inner(hh, ys):
                 pl, cs, ss = ys

@@ -1,20 +1,37 @@
-"""Multi-port serving engine: the paper's wrapper as a request scheduler.
+"""Multi-port serving engine: the paper's wrapper as a request scheduler
+whose data plane IS a paged multi-port memory pool.
 
-The engine's batch of KV-cache slots IS a multi-port memory: each engine
-macro-cycle (one external "CLK") services up to four logical ports against it,
-in priority order, exactly as the paper's FSM walks its ports (Fig. 2):
+The engine's KV storage is not a dense per-slot buffer — it is allocated
+from ONE physical :class:`~repro.memory.paged_kv.PagedPool` (a word = one
+token's K,V for every layer; sequences own pages through page tables, vLLM
+style). Each engine macro-cycle (one external "CLK") walks the paper's FSM
+(Fig. 2) over four logical ports, in priority order:
 
-    port A (W, priority 1): EVICT    — free finished slots
-    port B (W, priority 2): PREFILL  — admit a queued request into a free slot
-    port C (R/W, priority 3): DECODE — one token for every active slot
+    port A (W, priority 1): EVICT    — free finished slots; freed pages are
+                                       scrubbed through the pool's port D
+    port B (W, priority 2): PREFILL  — admit queued requests; ALL admitted
+                                       prompts' K,V land as one bulk-write
+                                       port transaction (pool port C)
+    port C (R/W, priority 3): DECODE — one token for every active slot: the
+                                       previous token's K,V append (pool
+                                       port A) and this step's attention
+                                       gathers (pool port B)
     port D (R, priority 4): STATUS   — scoreboard snapshot (lengths, slots)
 
-Ports are enabled per-cycle by pending work (``port_en``), the service order
-comes from core.clockgen.build_schedule, and utilization per cycle is
-recorded for the engine benchmark. The single-port baseline
-(``single_port=True``) services ONE port per cycle — the paper's bare-macro
-comparison; benchmarks/engine.py measures the throughput ratio (claim C1 at
-the system level: ~Nx fewer cycles at equal work).
+In the default ``kernel_mode="pallas"`` every macro-cycle's traffic is ONE
+physical pool traversal (``PagedPool.cycle`` services append + scrub + bulk
++ read ports in priority order with same-cycle W->R visibility), and the
+decode compute services all active slots through the fused append+attend
+Pallas kernel (``kernels/kv_multiport``) — one VMEM traversal for the W and
+R ports, claim C1 end-to-end. ``kernel_mode="reference"`` keeps the jnp
+oracle ``core.step`` under the pool and two-pass (append-traversal then
+read-traversal) port transactions — the baseline the benchmark compares
+traversal counts against. ``single_port=True`` additionally services ONE
+engine port per macro-cycle (the paper's bare-macro comparison).
+
+``interpret=True`` (default) executes the Pallas kernels in Python — the
+CPU-CI escape hatch; pass ``False`` on TPU deployments to lower through
+Mosaic.
 """
 from __future__ import annotations
 
@@ -29,6 +46,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.clockgen import build_schedule
 from repro.core.ports import READ, WRITE, PortConfig
+from repro.memory.paged_kv import PagedPool
 from repro.models import decode_step, init_decode_state, prefill
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
@@ -47,29 +65,57 @@ class Request:
 class MultiPortEngine:
     def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
                  max_len: int = 256, prefill_bucket: int = 32,
-                 kernel_mode: str = "reference", single_port: bool = False,
-                 greedy: bool = True):
+                 kernel_mode: str = "pallas", single_port: bool = False,
+                 greedy: bool = True, page_tokens: int = 8,
+                 interpret: bool = True):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
+        if kernel_mode not in ("pallas", "reference"):
+            raise ValueError(f"unknown kernel_mode: {kernel_mode!r}")
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len = slots, max_len
         self.bucket = prefill_bucket
+        self.kernel_mode = kernel_mode
         self.single_port = single_port
-        self.state = init_decode_state(cfg, slots, max_len)
+        self.interpret = interpret
+
+        # physical pool: word = one token's (K, V) across all layers
+        self._kv_dims = (cfg.n_layers, 2, cfg.n_kv_heads, cfg.head_dim_)
+        word_width = int(np.prod(self._kv_dims))
+        n_pages = slots * (-(-max_len // page_tokens))
+        self.pool = PagedPool.create(
+            n_pages=n_pages, page_tokens=page_tokens, word_width=word_width,
+            dtype=jnp.float32, use_kernel=(kernel_mode == "pallas"),
+            interpret=interpret)
+
         self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_len: list[int] = [0] * slots      # tokens committed to pool
+        self._pending: dict[int, np.ndarray] = {}   # slot -> KV word to append
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.cycles = 0
+        self.decode_steps = 0           # macro-cycles that carried decode traffic
+        self.decode_traversals = 0      # pool traversals those cycles needed
+        # steady state = decode cycles carrying both an append and a read
+        # (a slot's FIRST decode has no pending append yet)
+        self.steady_decode_steps = 0
+        self.steady_decode_traversals = 0
         self.port_log: list[tuple[int, ...]] = []
         self._next_rid = 0
         self._sp_rotate = 0
 
+        attn_mode = "multiport" if kernel_mode == "pallas" else "reference"
         self._decode = jax.jit(
-            lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=kernel_mode))
+            lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
+                                        interpret=interpret))
         self._prefill1 = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))
 
     # ---- client API --------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, list(prompt), max_new))
@@ -78,7 +124,11 @@ class MultiPortEngine:
     def pending_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
-    # ---- port service routines ----------------------------------------------
+    @property
+    def pool_traversals(self) -> int:
+        return self.pool.traversals
+
+    # ---- port collection routines -------------------------------------------
     def _port_enables(self) -> PortConfig:
         finished = any(r is not None and r.done for r in self.slot_req)
         free = any(r is None for r in self.slot_req)
@@ -90,63 +140,103 @@ class MultiPortEngine:
         return PortConfig(enabled=enabled,
                           roles=(WRITE, WRITE, WRITE, READ))
 
-    def _service_evict(self) -> None:
+    def _collect_evict(self) -> list:
+        """Port A: retire finished requests; return freed pool pages."""
+        freed: list[int] = []
         for i, r in enumerate(self.slot_req):
             if r is not None and r.done:
                 self.finished.append(r)
+                freed.extend(self.pool.free(r.rid))
                 self.slot_req[i] = None
+                self.slot_len[i] = 0
+                self._pending.pop(i, None)
+        return freed
 
-    def _service_prefill(self) -> None:
-        if not self.queue:
-            return
-        slot = next((i for i, r in enumerate(self.slot_req) if r is None), None)
-        if slot is None:
-            return
-        req = self.queue.popleft()
-        req.slot = slot
-        # bucket-pad the prompt, run a single-request prefill, splice caches
-        plen = len(req.prompt)
-        bucket = min(self.max_len,
-                     max(self.bucket, 1 << (plen - 1).bit_length()))
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
-        sub = init_decode_state(self.cfg, 1, self.max_len)
-        batch = {"inputs": jnp.asarray(toks)}
-        if self.cfg.input_mode == "embeddings":
-            raise NotImplementedError("engine demo serves token models")
-        sub, _ = self._prefill1(self.params, sub, batch)
-        # write ports into the engine state: splice slot `slot`
-        st = dict(self.state)
-        for k in ("cache_k", "cache_v"):
-            st[k] = jax.lax.dynamic_update_slice(
-                st[k], sub[k], (0, slot, 0, 0, 0))
-        st["len"] = st["len"].at[slot].set(plen)   # true length, not bucket
-        self.state = st
-        self.slot_req[slot] = req
+    def _kv_words(self, cache_k, cache_v, slot: int, t0: int, t1: int
+                  ) -> np.ndarray:
+        """Flatten cache positions [t0, t1) of one slot into pool words."""
+        nl, _, hkv, hd = self._kv_dims
+        k = np.asarray(cache_k[:, slot, t0:t1], np.float32)   # [L, T, hkv, hd]
+        v = np.asarray(cache_v[:, slot, t0:t1], np.float32)
+        w = np.stack([k, v], axis=1)                          # [L, 2, T, ...]
+        w = np.moveaxis(w, 2, 0)                              # [T, L, 2, ...]
+        return w.reshape(t1 - t0, -1)
 
-    def _service_decode(self) -> None:
+    def _collect_prefill(self) -> list:
+        """Port B: admit as many queued requests as there are free slots;
+        every admitted prompt becomes one stream of the SAME bulk-write
+        port transaction."""
+        streams = []
+        while self.queue:
+            slot = next((i for i, r in enumerate(self.slot_req) if r is None),
+                        None)
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            req.slot = slot
+            plen = len(req.prompt)
+            bucket = min(self.max_len,
+                         max(self.bucket, 1 << (plen - 1).bit_length()))
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt
+            if self.cfg.input_mode == "embeddings":
+                raise NotImplementedError("engine demo serves token models")
+            sub = init_decode_state(self.cfg, 1, self.max_len)
+            sub, _ = self._prefill1(self.params, sub,
+                                    {"inputs": jnp.asarray(toks)})
+            words = self._kv_words(sub["cache_k"], sub["cache_v"], 0, 0, plen)
+            streams.append({"seq": req.rid, "vectors": words})
+            self.slot_req[slot] = req
+            self.slot_len[slot] = plen
+        return streams
+
+    def _collect_decode(self):
+        """Port C: pending appends (last step's KV words) + attention-read
+        gathers for every active slot."""
+        appends = [{"seq": self.slot_req[i].rid, "vectors": w[None]}
+                   for i, w in sorted(self._pending.items())
+                   if self.slot_req[i] is not None]
         active = [i for i, r in enumerate(self.slot_req)
                   if r is not None and not r.done]
-        if not active:
-            return
+        reads = [{"seq": self.slot_req[i].rid,
+                  "positions": np.arange(self._total_len(i))}
+                 for i in active]
+        return appends, active, reads
+
+    def _total_len(self, slot: int) -> int:
+        """Tokens the slot will hold once this cycle's append commits."""
+        return self.slot_len[slot] + (1 if slot in self._pending else 0)
+
+    def _compute_decode(self, active: list, gathered: list) -> None:
+        """Run one fused decode step for all active slots over staging caches
+        assembled from the pool gather; stash each slot's new KV word as the
+        next cycle's append."""
+        nl, _, hkv, hd = self._kv_dims
+        stage_k = np.zeros((nl, self.n_slots, self.max_len, hkv, hd),
+                           np.float32)
+        stage_v = np.zeros_like(stage_k)
+        lens = np.zeros((self.n_slots,), np.int32)
         last_tokens = np.zeros((self.n_slots, 1), np.int32)
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                continue
+        for i, rows in zip(active, gathered):
+            t = rows.shape[0]
+            w = np.asarray(rows, np.float32).reshape(t, nl, 2, hkv, hd)
+            stage_k[:, i, :t] = np.moveaxis(w[:, :, 0], 0, 1)
+            stage_v[:, i, :t] = np.moveaxis(w[:, :, 1], 0, 1)
+            lens[i] = t
+            r = self.slot_req[i]
             seqs = r.generated or r.prompt
             last_tokens[i, 0] = seqs[-1]
-        prev_len = self.state["len"]
-        st, logits = self._decode(self.params, self.state,
+
+        state = {"len": jnp.asarray(lens),
+                 "cache_k": jnp.asarray(stage_k),
+                 "cache_v": jnp.asarray(stage_v)}
+        st, logits = self._decode(self.params, state,
                                   {"inputs": jnp.asarray(last_tokens)})
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        # inactive slots: undo the length advance (their KV write is benign —
-        # it lands at their stale cursor and is overwritten on reuse)
-        mask = np.zeros((self.n_slots,), bool)
+        ck, cv = st["cache_k"], st["cache_v"]
         for i in active:
-            mask[i] = True
-        st = dict(st, len=jnp.where(jnp.asarray(mask), st["len"], prev_len))
-        self.state = st
-        for i in active:
+            self._pending[i] = self._kv_words(ck, cv, i, int(lens[i]),
+                                              int(lens[i]) + 1)[0]
             r = self.slot_req[i]
             r.generated.append(int(nxt[i]))
             if len(r.generated) >= r.max_new:
@@ -157,11 +247,15 @@ class MultiPortEngine:
                 "queue": len(self.queue),
                 "active": sum(r is not None and not r.done
                               for r in self.slot_req),
-                "lens": np.asarray(self.state["len"]).tolist()}
+                "lens": [self._total_len(i) if self.slot_req[i] is not None
+                         else 0 for i in range(self.n_slots)],
+                "pool_utilization": self.pool.utilization,
+                "pool_traversals": self.pool.traversals}
 
     # ---- the macro-cycle -----------------------------------------------------
     def step(self) -> dict:
-        """One external clock cycle: walk enabled ports in priority order."""
+        """One external clock cycle: walk enabled ports in priority order,
+        then issue the collected traffic against the physical pool."""
         cfg = self._port_enables()
         sched = build_schedule(cfg)
         slots = sched.slots
@@ -170,15 +264,52 @@ class MultiPortEngine:
             slots = (slots[self._sp_rotate % len(slots)],)
             self._sp_rotate += 1
         status = {}
+        scrub: list[int] = []
+        admits: list = []
+        appends: list = []
+        active: list = []
+        reads: list = []
         for port in slots:
             if port == EVICT:
-                self._service_evict()
+                scrub = self._collect_evict()
             elif port == PREFILL:
-                self._service_prefill()
+                admits = self._collect_prefill()
             elif port == DECODE:
-                self._service_decode()
+                appends, active, reads = self._collect_decode()
             else:
                 status = self._service_status()
+
+        # commit the cycle's traffic to the physical pool
+        t0 = self.pool.traversals
+        if self.kernel_mode == "pallas" and not self.single_port:
+            # one traversal: append > scrub > bulk > read port slots
+            out = self.pool.cycle(append=appends or None, read=reads or None,
+                                  prefill=admits or None, scrub=scrub or None)
+            gathered = out["read"] or []
+        else:
+            # reference / bare macro: writes and reads are separate
+            # traversals (the two-pass baseline the benchmark measures)
+            if appends or admits or scrub:
+                self.pool.cycle(append=appends or None,
+                                prefill=admits or None, scrub=scrub or None)
+            gathered = []
+            if reads:
+                gathered = self.pool.cycle(read=reads)["read"]
+        for s in appends:                          # appends are now committed
+            slot = next(i for i in range(self.n_slots)
+                        if self.slot_req[i] is not None
+                        and self.slot_req[i].rid == s["seq"])
+            self.slot_len[slot] += 1
+            self._pending.pop(slot, None)
+
+        if active:
+            self.decode_steps += 1
+            self.decode_traversals += self.pool.traversals - t0
+            if appends:
+                self.steady_decode_steps += 1
+                self.steady_decode_traversals += self.pool.traversals - t0
+            self._compute_decode(active, gathered)
+
         self.cycles += 1
         self.port_log.append(slots)
         return status

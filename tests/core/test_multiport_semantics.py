@@ -2,7 +2,10 @@
 baseline agree with the serial reference simulator across random port
 configurations, priorities, addresses and masks."""
 import numpy as np
-import hypothesis as hp
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'dev' extra")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 

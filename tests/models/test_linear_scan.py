@@ -1,6 +1,9 @@
 """Property tests: chunked linear attention == stepwise recurrence for both
 SSD (Mamba2) and bonus (RWKV6) semantics, across chunk sizes and decays."""
-import hypothesis as hp
+import pytest
+
+hp = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'dev' extra")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
