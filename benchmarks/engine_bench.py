@@ -6,9 +6,26 @@ macro-cycles (and less wall time) than single-port scheduling.
 Reported per mode: macro-cycles, wall seconds, generated tokens,
 cycles/token, physical pool traversals, traversals/token, and
 traversals-per-decode-step (the headline C1 ratio: ~1 fused vs >= 2
-reference)."""
+reference).
+
+A second section measures chunked batched prefill: admissions split into
+fixed-size chunks share ONE bulk-write pool transaction per macro-cycle, so
+prefill pool-traversals-per-admitted-token shrinks as the admission batch
+grows — the multi-port scheduling win on the PREFILL port.
+
+CI gate (see .github/workflows/ci.yml bench-smoke and benchmarks/README.md):
+
+    python benchmarks/engine_bench.py --json BENCH_engine.json \
+        --min-traversal-ratio 1.9
+
+writes the ``bench-engine/v1`` record and exits non-zero if the fused-vs-
+reference steady-decode traversal ratio drops below the gate.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -25,10 +42,17 @@ MODES = (
     ("single_port", "reference", True),
 )
 
+PREFILL_BATCHES = (1, 4, 8)
 
-def run(n_requests: int = 8, max_new: int = 6) -> dict:
+
+def _setup():
     cfg = registry.get("tinyllama-1.1b", reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def run(n_requests: int = 8, max_new: int = 6) -> dict:
+    cfg, params = _setup()
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(3, 8))))
                for _ in range(n_requests)]
@@ -70,8 +94,38 @@ def run(n_requests: int = 8, max_new: int = 6) -> dict:
     return out
 
 
-def main() -> None:
-    r = run()
+def run_prefill(batch_sizes=PREFILL_BATCHES, prompt_len: int = 24,
+                chunk_tokens: int = 8) -> dict:
+    """Chunked batched prefill: pool traversals per admitted prompt token as
+    the concurrent admission batch grows (slot pool growing past the seed's
+    4 along the way)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    out = {"prompt_len": prompt_len, "chunk_tokens": chunk_tokens,
+           "per_batch": {}}
+    for n in batch_sizes:
+        eng = MultiPortEngine(params, cfg, slots=1, max_slots=max(n, 1),
+                              max_len=64, chunk_tokens=chunk_tokens)
+        for _ in range(n):
+            eng.submit(list(rng.integers(0, cfg.vocab, prompt_len)),
+                       max_new=1)
+        t0 = time.perf_counter()
+        done = eng.run(max_cycles=2000)
+        dt = time.perf_counter() - t0
+        assert len(done) == n
+        out["per_batch"][str(n)] = {
+            "seconds": dt,
+            "prefill_tokens": eng.prefill_tokens,
+            "prefill_cycles": eng.prefill_steps,
+            "prefill_traversals": eng.prefill_traversals,
+            "traversals_per_token": (eng.prefill_traversals
+                                     / max(eng.prefill_tokens, 1)),
+            "grown_slots": eng.n_slots,
+        }
+    return out
+
+
+def report(r: dict, pf: dict) -> None:
     print("# serving engine: fused multi-port vs reference vs single-port "
           "(claim C1)")
     print("mode,cycles,seconds,tokens,cycles/token,pool_traversals,"
@@ -85,6 +139,61 @@ def main() -> None:
               f"{x['traversals_per_decode_steady']:.2f}")
     print(f"cycle_ratio,{r['cycle_ratio']:.2f}")
     print(f"traversal_ratio,{r['traversal_ratio']:.2f}")
+    print()
+    print("# chunked batched prefill: pool traversals per admitted token "
+          f"(prompt_len={pf['prompt_len']}, chunk={pf['chunk_tokens']})")
+    print("batch,prefill_cycles,prefill_traversals,prefill_tokens,"
+          "traversals/token,grown_slots")
+    for n, x in pf["per_batch"].items():
+        print(f"{n},{x['prefill_cycles']},{x['prefill_traversals']},"
+              f"{x['prefill_tokens']},{x['traversals_per_token']:.3f},"
+              f"{x['grown_slots']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the bench-engine/v1 record (BENCH_engine.json)")
+    ap.add_argument("--min-traversal-ratio", type=float, default=None,
+                    help="exit non-zero if fused-vs-reference steady-decode "
+                         "traversal ratio drops below this gate")
+    args = ap.parse_args(argv)
+
+    r = run(args.requests, args.max_new)
+    pf = run_prefill()
+    report(r, pf)
+
+    if args.json:
+        per_tok = [pf["per_batch"][str(n)]["traversals_per_token"]
+                   for n in PREFILL_BATCHES]
+        record = {
+            "schema": "bench-engine/v1",
+            "config": {"arch": "tinyllama-1.1b", "reduced": True,
+                       "requests": args.requests, "max_new": args.max_new},
+            "decode": {m: r[m] for m, _, _ in MODES},
+            "cycle_ratio": r["cycle_ratio"],
+            "traversal_ratio": r["traversal_ratio"],
+            "prefill": pf,
+            "gate": {
+                "min_traversal_ratio": args.min_traversal_ratio,
+                "traversal_ratio": r["traversal_ratio"],
+                "prefill_traversals_per_token_monotonic":
+                    all(a >= b for a, b in zip(per_tok, per_tok[1:])),
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\nwrote {args.json}")
+
+    if args.min_traversal_ratio is not None:
+        if r["traversal_ratio"] < args.min_traversal_ratio:
+            print(f"GATE FAIL: traversal_ratio {r['traversal_ratio']:.2f} < "
+                  f"{args.min_traversal_ratio}", file=sys.stderr)
+            sys.exit(1)
+        print(f"GATE OK: traversal_ratio {r['traversal_ratio']:.2f} >= "
+              f"{args.min_traversal_ratio}")
 
 
 if __name__ == "__main__":

@@ -119,7 +119,6 @@ class ArchConfig:
             in_proj = d * (2 * d_in + 2 * ssm.state_dim + nheads)
             mamba = in_proj + conv_dim * ssm.conv_kernel + d_in * d + 2 * nheads + d_in
             total += self.n_layers * (mamba + 2 * d)
-            n_groups = self.n_layers // self.hybrid.group_size
             shared = attn + 3 * d * self.hybrid.attn_d_ff + 2 * d
             total += shared                               # shared block counted once
             return total
@@ -139,7 +138,6 @@ class ArchConfig:
         m = self.moe
         full_ffn = m.n_experts * 3 * d * m.d_expert
         active_ffn = m.top_k * 3 * d * m.d_expert
-        shared = 3 * d * m.n_shared * m.d_expert if m.n_shared else 0
         return (self.param_count()
                 - self.n_layers * (full_ffn - active_ffn))
 

@@ -40,6 +40,20 @@ def walk_static(config: PortConfig, state: S,
     return state
 
 
+def rotate_single_port(schedule: tuple[int, ...], phase: int
+                       ) -> tuple[int, ...]:
+    """Bare-macro degradation of a macro-cycle schedule: service ONE slot per
+    external CLK, round-robin over the enabled ports (the paper's 1-port
+    baseline — the FSM never advances past its reset state within a cycle).
+
+    ``schedule`` is a :func:`~repro.core.clockgen.build_schedule` slot tuple;
+    ``phase`` counts external cycles since the engine started.
+    """
+    if not schedule:
+        raise ValueError("cannot rotate an empty schedule")
+    return (schedule[phase % len(schedule)],)
+
+
 def walk_dynamic(enabled_mask: jax.Array, priority_perm: jax.Array, state: S,
                  service: Callable[[S, jax.Array, jax.Array], S]) -> S:
     """In-graph walk: always runs MAX_PORTS slots; disabled slots are no-ops.

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fsm
-from repro.core.ports import (MAX_PORTS, READ, WRITE, PortConfig, PortRequest,
+from repro.core.ports import (MAX_PORTS, WRITE, PortConfig, PortRequest,
                               empty_request)
 
 
@@ -62,7 +62,6 @@ class MemorySpec:
 def _dedup_last_wins(addr: jax.Array, mask: jax.Array) -> jax.Array:
     """Keep only the last valid occurrence of each address (queue order)."""
     # has_later[i] = exists j > i with addr[j] == addr[i] and mask[j]
-    q = addr.shape[0]
     same = (addr[None, :] == addr[:, None]) & mask[None, :]
     later = jnp.triu(same, k=1)                     # j > i
     has_later = later.any(axis=1)

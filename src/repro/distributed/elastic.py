@@ -9,7 +9,7 @@ at the same step with identical results (tests/distributed/test_elastic.py).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding

@@ -21,7 +21,6 @@ import time      # noqa: E402
 import traceback # noqa: E402
 
 import jax                      # noqa: E402
-import jax.numpy as jnp         # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import applicable_shapes  # noqa: E402

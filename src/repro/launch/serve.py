@@ -22,7 +22,12 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="initial slot-table size")
+    ap.add_argument("--max-slots", type=int, default=64,
+                    help="slot-table growth bound (continuous batching)")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="prefill chunk size (tokens per admission per cycle)")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--single-port", action="store_true")
     ap.add_argument("--kernel-mode", default="pallas",
@@ -36,8 +41,11 @@ def main() -> None:
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{args.arch} has a stub frontend; serve a token arch")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    eng = MultiPortEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                          prefill_bucket=16, kernel_mode=args.kernel_mode,
+    eng = MultiPortEngine(params, cfg, slots=args.slots,
+                          max_slots=max(args.max_slots, args.slots),
+                          max_len=args.max_len,
+                          chunk_tokens=args.chunk_tokens,
+                          kernel_mode=args.kernel_mode,
                           single_port=args.single_port,
                           interpret=not args.no_interpret)
     rng = np.random.default_rng(args.seed)
@@ -52,7 +60,10 @@ def main() -> None:
     print(f"[{mode}] {len(done)} requests, {toks} tokens, "
           f"{eng.cycles} macro-cycles, {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
     print(f"pool traversals: {eng.pool_traversals} "
-          f"({eng.pool_traversals / max(toks, 1):.2f}/token)")
+          f"({eng.pool_traversals / max(toks, 1):.2f}/token); "
+          f"slots grown to {eng.n_slots}/{eng.max_slots}; prefill "
+          f"{eng.prefill_traversals / max(eng.prefill_tokens, 1):.3f} "
+          f"traversals/prompt-token over {eng.prefill_steps} chunk cycles")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
 

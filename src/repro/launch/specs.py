@@ -12,7 +12,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.distributed import sharding as shd
 from repro.models import init_decode_state, init_params
-from repro.optim import AdamWConfig
 from repro.train.train_step import TrainConfig, init_train_state
 
 PyTree = Any
@@ -37,6 +36,17 @@ def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
     if cfg.pos_embed == "mrope":
         batch["positions"] = sds((b, s, 3), jnp.int32)
     return batch
+
+
+def prefill_chunk_specs(cfg: ArchConfig, batch: int, chunk: int) -> dict:
+    """Batch ShapeDtypeStructs for one chunked-prefill step — the serving
+    engine's admission compute: ``batch`` concurrently-prefilling sequences
+    each contribute one ``chunk``-token slice of their prompt plus its valid
+    row count (see ``repro.models.prefill_chunk``)."""
+    if cfg.input_mode != "tokens":
+        raise NotImplementedError("chunked prefill serves token models")
+    return {"inputs": sds((batch, chunk), jnp.int32),
+            "chunk_len": sds((batch,), jnp.int32)}
 
 
 def params_shapes(cfg: ArchConfig) -> PyTree:

@@ -53,6 +53,14 @@ _ROLES = (WRITE, READ, WRITE, WRITE)
 Stream = Union[dict, Sequence[dict], None]
 
 
+class PoolCapacityError(MemoryError):
+    """An admission's page demand exceeds the pool's free page supply.
+
+    Raised BEFORE any page-table or length mutation: a failed transaction
+    leaves the pool exactly as it was, so the scheduler can retry the
+    admission after evictions free pages."""
+
+
 def _bucket(n: int, lo: int = 8) -> int:
     """Round a queue length up to a power of two (jit shape reuse)."""
     b = lo
@@ -107,11 +115,63 @@ class PagedPool:
         need = -(-(self.lengths[seq] + new_tokens) // self.page_tokens)
         while len(table) < need:
             if not self.free_pages:
-                raise MemoryError("pool exhausted")
+                raise PoolCapacityError(
+                    f"seq {seq}: growing to {self.lengths[seq] + new_tokens} "
+                    f"tokens needs {need} pages but only {len(table)} are "
+                    f"mapped and the free list is empty")
             table.append(self.free_pages.pop())
 
+    def _check_capacity(self, write_streams: Sequence[dict],
+                        read_streams: Sequence[dict]) -> None:
+        """Transactional admission check, run BEFORE any table mutation:
+        the cycle's total page demand must fit the free list, and every read
+        position must fall inside the words its sequence will have mapped
+        once this cycle's writes land (reads are serviced after writes, so
+        same-cycle append+read of a fresh page is legal)."""
+        demand: dict = {}
+        for s in write_streams:
+            seq = s["seq"]
+            demand[seq] = demand.get(seq, 0) + int(s["vectors"].shape[0])
+        need = 0
+        projected = {}
+        for seq, new_tokens in demand.items():
+            held = len(self.tables.get(seq, []))
+            pages = max(held,
+                        -(-(self.lengths.get(seq, 0) + new_tokens)
+                          // self.page_tokens))
+            projected[seq] = pages
+            need += pages - held
+        if need > len(self.free_pages):
+            raise PoolCapacityError(
+                f"admission of {sum(demand.values())} tokens across "
+                f"{len(demand)} sequence(s) needs {need} new pages but only "
+                f"{len(self.free_pages)} of {self.spec.num_words // self.page_tokens} "
+                f"are free — evict sequences or raise the pool size")
+        for s in read_streams:
+            seq = s["seq"]
+            pages = projected.get(seq, len(self.tables.get(seq, [])))
+            pos = np.asarray(s["positions"])
+            if not pages:
+                raise IndexError(f"seq {seq} has no pages mapped")
+            if pos.size and (pos.min() < 0
+                             or pos.max() >= pages * self.page_tokens):
+                raise IndexError(
+                    f"seq {seq}: positions [{pos.min()}, {pos.max()}] outside "
+                    f"the {pages * self.page_tokens} words its page table "
+                    f"maps this cycle")
+
     def _addr(self, seq: int, token_idx: np.ndarray) -> np.ndarray:
-        table = np.asarray(self.tables[seq])
+        table = self.tables.get(seq)
+        if not table:
+            raise IndexError(f"seq {seq} has no pages mapped")
+        token_idx = np.asarray(token_idx)
+        mapped = len(table) * self.page_tokens
+        if token_idx.size and (token_idx.min() < 0
+                               or token_idx.max() >= mapped):
+            raise IndexError(
+                f"seq {seq}: positions [{token_idx.min()}, {token_idx.max()}]"
+                f" outside the {mapped} words mapped by its page table")
+        table = np.asarray(table)
         return (table[token_idx // self.page_tokens] * self.page_tokens
                 + token_idx % self.page_tokens)
 
@@ -141,6 +201,8 @@ class PagedPool:
         reads = self._as_streams(read)
         prefills = self._as_streams(prefill)
         scrub = list(scrub) if scrub else []
+
+        self._check_capacity(appends + prefills, reads)
 
         lanes = [0, 0, 0, 0]
         lanes[APPEND] = sum(s["vectors"].shape[0] for s in appends)

@@ -1,7 +1,7 @@
 """Model zoo: scan-based decoder families (dense/GQA, MoE, Mamba2 hybrid,
 RWKV6) with train / prefill / decode entry points in model.py."""
 from repro.models.model import (decode_step, forward, init_decode_state,
-                                init_params, loss_fn, prefill)
+                                init_params, loss_fn, prefill, prefill_chunk)
 
 __all__ = ["init_params", "forward", "loss_fn", "init_decode_state",
-           "decode_step", "prefill"]
+           "decode_step", "prefill", "prefill_chunk"]

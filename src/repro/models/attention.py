@@ -124,6 +124,68 @@ def attention_prefill(p: dict, x: jax.Array, positions: jax.Array,
     return out, cache_k, cache_v
 
 
+def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
+                            chunk_len: jax.Array, cache_k: jax.Array,
+                            cache_v: jax.Array, *,
+                            n_heads: int, n_kv_heads: int, head_dim: int,
+                            pos_embed: str = "rope",
+                            rope_theta: float = 10000.0,
+                            mrope_sections=(16, 24, 24),
+                            compute_dtype=None):
+    """One fixed-size prompt chunk per sequence, mid-prefill.
+
+    The chunked-prefill analogue of the multi-port decode step: the cache is
+    serviced as a 2-port memory — the W port scatters the chunk's K,V at
+    positions [offset, offset+chunk_len) and the R port attends causally over
+    everything cached so far INCLUDING the just-written chunk (same-cycle
+    W->R visibility, exactly the FSM's priority order).
+
+    x: [B, C, d] chunk activations (rows >= chunk_len are padding);
+    offset/chunk_len: [B] int32 per-sequence cache offset / valid-row count;
+    cache_k/v: [B, S_max, Hkv, D]. Returns (out [B, C, d], k', v').
+    Padded rows produce garbage outputs — callers gather row chunk_len-1.
+    """
+    b, c = x.shape[:2]
+    s_max = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, compute_dtype)
+    rel = jnp.arange(c)
+    positions = offset[:, None] + rel[None, :]                    # [B, C]
+    if pos_embed == "mrope":
+        pos3 = jnp.broadcast_to(positions[..., None], (b, c, 3))
+        q = L.mrope_apply(q, pos3, mrope_sections, rope_theta)
+        k = L.mrope_apply(k, pos3, mrope_sections, rope_theta)
+    elif pos_embed == "rope":
+        q = L.rope_apply(q, positions, rope_theta)
+        k = L.rope_apply(k, positions, rope_theta)
+
+    # W port (priority A): scatter valid chunk rows; padded lanes are routed
+    # out of bounds and dropped by the scatter.
+    valid = rel[None, :] < chunk_len[:, None]                     # [B, C]
+    dest = jnp.where(valid, positions, s_max)
+    bidx = jnp.arange(b)[:, None]
+    cache_k = cache_k.at[bidx, dest].set(k.astype(cache_k.dtype), mode="drop")
+    cache_v = cache_v.at[bidx, dest].set(v.astype(cache_v.dtype), mode="drop")
+
+    # R port (priority B): causal attention over the updated cache.
+    g = n_heads // n_kv_heads
+    f32 = jnp.float32
+    qg = q.reshape(b, c, n_kv_heads, g, head_dim)
+    scale = 1.0 / (head_dim ** 0.5)
+    sc = jnp.einsum("bchgd,bshd->bchgs", qg, cache_k.astype(qg.dtype),
+                    preferred_element_type=f32) * scale
+    kpos = jnp.arange(s_max)
+    # padded query rows replicate the chunk's first row so their softmax
+    # stays finite (their outputs are discarded anyway)
+    qpos = jnp.where(valid, positions, offset[:, None])
+    mask = kpos[None, None, :] <= qpos[..., None]                 # [B, C, S]
+    sc = jnp.where(mask[:, :, None, None, :], sc, -jnp.inf)
+    pr = jax.nn.softmax(sc, axis=-1).astype(cache_v.dtype)
+    oc = jnp.einsum("bchgs,bshd->bchgd", pr, cache_v,
+                    preferred_element_type=f32)
+    out = oc.astype(q.dtype).reshape(b, c, n_heads * head_dim)
+    return L.linear(p["wo"], out, compute_dtype), cache_k, cache_v
+
+
 def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      cache_v: jax.Array, cache_len: jax.Array, *,
                      n_heads: int, n_kv_heads: int, head_dim: int,

@@ -74,6 +74,23 @@ def transformer_block_prefill(p: dict, x, positions, cache_k, cache_v,
     return x + h, ck, cv
 
 
+def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
+                                    cache_k, cache_v, cfg: ArchConfig):
+    h, ck, cv = A.attention_prefill_chunk(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), offset, chunk_len,
+        cache_k, cache_v,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
+        mrope_sections=tuple(cfg.mrope_sections), compute_dtype=cfg.cdtype)
+    x = x + h
+    y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        h, _ = M.moe_apply(p["moe"], y, cfg.moe, compute_dtype=cfg.cdtype)
+    else:
+        h = M.swiglu_apply(p["ffn"], y, compute_dtype=cfg.cdtype)
+    return x + h, ck, cv
+
+
 def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
                              cfg: ArchConfig, kernel_mode: str = "reference",
                              interpret: bool = True):

@@ -13,7 +13,6 @@ Decode state (per family) is a dict pytree with a shared "len": [B] field.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -242,7 +241,6 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 ) -> tuple[PyTree, jax.Array]:
     """Returns (state', logits [B, V])."""
     inputs = batch["inputs"]
-    bsz = inputs.shape[0]
     x = _stem(params, cfg, inputs, offset=state["len"])
 
     if cfg.family in ("dense", "moe", "vlm", "audio"):
@@ -370,4 +368,47 @@ def prefill(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
 
     logits = _head(params, cfg, x[:, -1:])[:, 0]
     state = dict(state, len=state["len"] + seq)
+    return state, logits
+
+
+# --------------------------------------------------------------------------
+# chunked prefill (populate caches one fixed-size chunk per macro-cycle)
+# --------------------------------------------------------------------------
+
+def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
+                  ) -> tuple[PyTree, jax.Array]:
+    """Process ONE fixed-size prompt chunk for a batch of sequences.
+
+    The continuous-batching prefill step: each sequence contributes its next
+    ``C`` prompt tokens (rows past ``chunk_len`` are padding), chunks from
+    different sequences are stacked into one padded batch, and every chunk's
+    K,V is written into the cache at [len, len+chunk_len) while attention
+    reads back over everything cached so far — the cache serviced as a
+    2-port (1W+1R) memory, same as decode.
+
+    batch: {"inputs": ids [B, C], "chunk_len": [B] valid rows per sequence}.
+    Returns (state', logits [B, V]) where the logits row for each sequence is
+    taken at its LAST VALID chunk position — when the chunk completes a
+    prompt these are the prefill logits that seed the first generated token.
+    """
+    if cfg.family not in ("dense", "moe", "vlm", "audio"):
+        raise NotImplementedError("chunked prefill serves KV-cache families")
+    inputs = batch["inputs"]
+    c = inputs.shape[1]
+    chunk_len = jnp.asarray(batch["chunk_len"], jnp.int32)
+    offset = state["len"]
+    x = _stem(params, cfg, inputs, offset=offset)
+
+    def body(h, xs):
+        pl, ck, cv = xs
+        h, ck, cv = B.transformer_block_prefill_chunk(
+            pl, h, offset, chunk_len, ck, cv, cfg)
+        return h, (ck, cv)
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["layers"], state["cache_k"], state["cache_v"]))
+
+    last = jnp.clip(chunk_len - 1, 0, c - 1)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)      # [B, 1, d]
+    logits = _head(params, cfg, xl)[:, 0]
+    state = dict(state, cache_k=ck, cache_v=cv, len=offset + chunk_len)
     return state, logits

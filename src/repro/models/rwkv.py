@@ -9,8 +9,6 @@ keeps the full data-dependent LoRA, which is the architectural hallmark.
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

@@ -6,7 +6,7 @@ training: bf16 params, f32 master states is available via ``master_weights``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

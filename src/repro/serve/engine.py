@@ -9,14 +9,28 @@ style). Each engine macro-cycle (one external "CLK") walks the paper's FSM
 
     port A (W, priority 1): EVICT    — free finished slots; freed pages are
                                        scrubbed through the pool's port D
-    port B (W, priority 2): PREFILL  — admit queued requests; ALL admitted
-                                       prompts' K,V land as one bulk-write
-                                       port transaction (pool port C)
+    port B (W, priority 2): PREFILL  — admit queued requests and advance every
+                                       mid-prefill slot by ONE fixed-size
+                                       token chunk: chunks from different
+                                       requests are stacked into one padded
+                                       batch, run through a single chunked
+                                       prefill step, and ALL chunks' K,V land
+                                       as one bulk-write port transaction
+                                       (pool port C)
     port C (R/W, priority 3): DECODE — one token for every active slot: the
                                        previous token's K,V append (pool
                                        port A) and this step's attention
                                        gathers (pool port B)
     port D (R, priority 4): STATUS   — scoreboard snapshot (lengths, slots)
+
+Continuous batching: the slot table starts at ``slots`` entries and grows on
+demand up to ``max_slots`` (config-driven, well past the seed's fixed 4).
+Both the decode batch and the prefill chunk batch are padded to power-of-two
+buckets, so slot-pool regrowth retraces the jitted steps only at bucket
+boundaries (log2(max_slots) times over the engine's lifetime), never per
+request. A request's FIRST generated token comes from its prefill logits
+(the last valid position of its final chunk) — decode never re-feeds
+``prompt[-1]``, so each KV word lands in the pool exactly once.
 
 In the default ``kernel_mode="pallas"`` every macro-cycle's traffic is ONE
 physical pool traversal (``PagedPool.cycle`` services append + scrub + bulk
@@ -44,10 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import fsm
 from repro.core.clockgen import build_schedule
 from repro.core.ports import READ, WRITE, PortConfig
-from repro.memory.paged_kv import PagedPool
-from repro.models import decode_step, init_decode_state, prefill
+from repro.memory.paged_kv import PagedPool, _bucket
+from repro.models import decode_step, prefill_chunk
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
 
@@ -62,9 +77,20 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _PrefillState:
+    """A slot mid-prefill: chunks consumed so far + the staged K,V of those
+    chunks (the chunk compute's running cache; the pool stays the decode-side
+    source of truth)."""
+    consumed: int
+    stage_k: np.ndarray                 # [L, max_len, Hkv, D]
+    stage_v: np.ndarray
+
+
 class MultiPortEngine:
     def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
-                 max_len: int = 256, prefill_bucket: int = 32,
+                 max_slots: Optional[int] = None, max_len: int = 256,
+                 prefill_bucket: int = 32, chunk_tokens: Optional[int] = None,
                  kernel_mode: str = "pallas", single_port: bool = False,
                  greedy: bool = True, page_tokens: int = 8,
                  interpret: bool = True):
@@ -73,16 +99,22 @@ class MultiPortEngine:
         if kernel_mode not in ("pallas", "reference"):
             raise ValueError(f"unknown kernel_mode: {kernel_mode!r}")
         self.params, self.cfg = params, cfg
-        self.n_slots, self.max_len = slots, max_len
-        self.bucket = prefill_bucket
+        self.max_slots = slots if max_slots is None else max_slots
+        if self.max_slots < slots:
+            raise ValueError(f"max_slots ({self.max_slots}) < slots ({slots})")
+        self._init_slots = slots
+        self.max_len = max_len
+        # chunked prefill: admissions advance chunk_tokens per macro-cycle
+        self.chunk_tokens = chunk_tokens or prefill_bucket
         self.kernel_mode = kernel_mode
         self.single_port = single_port
         self.interpret = interpret
 
-        # physical pool: word = one token's (K, V) across all layers
+        # physical pool: word = one token's (K, V) across all layers, sized
+        # for the FULL grown slot table
         self._kv_dims = (cfg.n_layers, 2, cfg.n_kv_heads, cfg.head_dim_)
         word_width = int(np.prod(self._kv_dims))
-        n_pages = slots * (-(-max_len // page_tokens))
+        n_pages = self.max_slots * (-(-max_len // page_tokens))
         self.pool = PagedPool.create(
             n_pages=n_pages, page_tokens=page_tokens, word_width=word_width,
             dtype=jnp.float32, use_kernel=(kernel_mode == "pallas"),
@@ -91,6 +123,7 @@ class MultiPortEngine:
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_len: list[int] = [0] * slots      # tokens committed to pool
         self._pending: dict[int, np.ndarray] = {}   # slot -> KV word to append
+        self._prefilling: dict[int, _PrefillState] = {}
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.cycles = 0
@@ -100,6 +133,9 @@ class MultiPortEngine:
         # (a slot's FIRST decode has no pending append yet)
         self.steady_decode_steps = 0
         self.steady_decode_traversals = 0
+        self.prefill_steps = 0          # macro-cycles that carried chunk traffic
+        self.prefill_traversals = 0     # pool traversals those cycles needed
+        self.prefill_tokens = 0         # prompt tokens committed to the pool
         self.port_log: list[tuple[int, ...]] = []
         self._next_rid = 0
         self._sp_rotate = 0
@@ -108,14 +144,22 @@ class MultiPortEngine:
         self._decode = jax.jit(
             lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
                                         interpret=interpret))
-        self._prefill1 = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))
+        self._prefill_chunk = jax.jit(
+            lambda p, s, b: prefill_chunk(p, cfg, s, b))
 
     # ---- client API --------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        """Current slot-table size (grows on demand up to ``max_slots``)."""
+        return len(self.slot_req)
+
     def submit(self, prompt: list[int], max_new: int = 16) -> int:
         if len(prompt) + max_new > self.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
                 f"max_len ({self.max_len})")
+        if not prompt:
+            raise ValueError("empty prompt")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, list(prompt), max_new))
@@ -129,11 +173,24 @@ class MultiPortEngine:
         return self.pool.traversals
 
     # ---- port collection routines -------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        """Lowest free slot index; grows the slot table (bounded by
+        ``max_slots``) when every existing slot is occupied."""
+        slot = next((i for i, r in enumerate(self.slot_req) if r is None),
+                    None)
+        if slot is None and len(self.slot_req) < self.max_slots:
+            self.slot_req.append(None)
+            self.slot_len.append(0)
+            slot = len(self.slot_req) - 1
+        return slot
+
     def _port_enables(self) -> PortConfig:
         finished = any(r is not None and r.done for r in self.slot_req)
-        free = any(r is None for r in self.slot_req)
-        admit = bool(self.queue) and free
-        active = any(r is not None and not r.done for r in self.slot_req)
+        can_place = (any(r is None for r in self.slot_req)
+                     or len(self.slot_req) < self.max_slots)
+        admit = (bool(self.queue) and can_place) or bool(self._prefilling)
+        active = any(r is not None and not r.done and i not in self._prefilling
+                     for i, r in enumerate(self.slot_req))
         enabled = (finished, admit, active, True)
         if not any(enabled[:3]):
             enabled = (False, False, False, True)
@@ -150,12 +207,12 @@ class MultiPortEngine:
                 self.slot_req[i] = None
                 self.slot_len[i] = 0
                 self._pending.pop(i, None)
+                self._prefilling.pop(i, None)
         return freed
 
     def _kv_words(self, cache_k, cache_v, slot: int, t0: int, t1: int
                   ) -> np.ndarray:
         """Flatten cache positions [t0, t1) of one slot into pool words."""
-        nl, _, hkv, hd = self._kv_dims
         k = np.asarray(cache_k[:, slot, t0:t1], np.float32)   # [L, T, hkv, hd]
         v = np.asarray(cache_v[:, slot, t0:t1], np.float32)
         w = np.stack([k, v], axis=1)                          # [L, 2, T, ...]
@@ -163,31 +220,76 @@ class MultiPortEngine:
         return w.reshape(t1 - t0, -1)
 
     def _collect_prefill(self) -> list:
-        """Port B: admit as many queued requests as there are free slots;
-        every admitted prompt becomes one stream of the SAME bulk-write
-        port transaction."""
-        streams = []
+        """Port B: admit queued requests into free (or newly grown) slots,
+        then advance EVERY mid-prefill slot by one fixed-size token chunk.
+        Chunks from different requests are stacked into one padded batch, run
+        through a single chunked-prefill compute step, and all chunks' K,V
+        become streams of the SAME bulk-write port transaction."""
+        nl, _, hkv, hd = self._kv_dims
         while self.queue:
-            slot = next((i for i, r in enumerate(self.slot_req) if r is None),
-                        None)
+            slot = self._free_slot()
             if slot is None:
                 break
             req = self.queue.popleft()
             req.slot = slot
-            plen = len(req.prompt)
-            bucket = min(self.max_len,
-                         max(self.bucket, 1 << (plen - 1).bit_length()))
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = req.prompt
             if self.cfg.input_mode == "embeddings":
                 raise NotImplementedError("engine demo serves token models")
-            sub = init_decode_state(self.cfg, 1, self.max_len)
-            sub, _ = self._prefill1(self.params, sub,
-                                    {"inputs": jnp.asarray(toks)})
-            words = self._kv_words(sub["cache_k"], sub["cache_v"], 0, 0, plen)
-            streams.append({"seq": req.rid, "vectors": words})
             self.slot_req[slot] = req
-            self.slot_len[slot] = plen
+            self._prefilling[slot] = _PrefillState(
+                consumed=0,
+                stage_k=np.zeros((nl, self.max_len, hkv, hd), np.float32),
+                stage_v=np.zeros((nl, self.max_len, hkv, hd), np.float32))
+        if not self._prefilling:
+            return []
+
+        # one padded chunk batch across all prefilling slots (batch dim
+        # bucketed to a power of two so admissions don't retrace the jit)
+        order = sorted(self._prefilling)
+        c = self.chunk_tokens
+        nb = _bucket(len(order), lo=1)
+        toks = np.zeros((nb, c), np.int32)
+        clen = np.zeros((nb,), np.int32)
+        offs = np.zeros((nb,), np.int32)
+        stage_k = np.zeros((nl, nb, self.max_len, hkv, hd), np.float32)
+        stage_v = np.zeros_like(stage_k)
+        for j, slot in enumerate(order):
+            ps = self._prefilling[slot]
+            req = self.slot_req[slot]
+            t0 = ps.consumed
+            n = min(c, len(req.prompt) - t0)
+            toks[j, :n] = req.prompt[t0:t0 + n]
+            clen[j] = n
+            offs[j] = t0
+            stage_k[:, j] = ps.stage_k
+            stage_v[:, j] = ps.stage_v
+
+        state = {"len": jnp.asarray(offs),
+                 "cache_k": jnp.asarray(stage_k),
+                 "cache_v": jnp.asarray(stage_v)}
+        st, logits = self._prefill_chunk(self.params, state,
+                                         {"inputs": jnp.asarray(toks),
+                                          "chunk_len": jnp.asarray(clen)})
+        ck, cv = np.asarray(st["cache_k"]), np.asarray(st["cache_v"])
+        lg = np.asarray(logits)
+
+        streams = []
+        for j, slot in enumerate(order):
+            ps = self._prefilling[slot]
+            req = self.slot_req[slot]
+            t0, n = int(offs[j]), int(clen[j])
+            ps.stage_k, ps.stage_v = ck[:, j], cv[:, j]
+            streams.append({"seq": req.rid,
+                            "vectors": self._kv_words(ck, cv, j, t0, t0 + n)})
+            ps.consumed = t0 + n
+            self.slot_len[slot] += n          # committed later this same cycle
+            self.prefill_tokens += n
+            if ps.consumed == len(req.prompt):
+                # prefill complete: the FIRST generated token comes from the
+                # prefill logits (no re-feed of prompt[-1] through decode)
+                del self._prefilling[slot]
+                req.generated.append(int(np.argmax(lg[j])))
+                if len(req.generated) >= req.max_new:
+                    req.done = True
         return streams
 
     def _collect_decode(self):
@@ -197,7 +299,8 @@ class MultiPortEngine:
                    for i, w in sorted(self._pending.items())
                    if self.slot_req[i] is not None]
         active = [i for i, r in enumerate(self.slot_req)
-                  if r is not None and not r.done]
+                  if r is not None and not r.done
+                  and i not in self._prefilling]
         reads = [{"seq": self.slot_req[i].rid,
                   "positions": np.arange(self._total_len(i))}
                  for i in active]
@@ -210,13 +313,14 @@ class MultiPortEngine:
     def _compute_decode(self, active: list, gathered: list) -> None:
         """Run one fused decode step for all active slots over staging caches
         assembled from the pool gather; stash each slot's new KV word as the
-        next cycle's append."""
+        next cycle's append. The staging batch is padded to a power-of-two
+        bucket so slot-pool growth retraces the jit only at bucket edges."""
         nl, _, hkv, hd = self._kv_dims
-        stage_k = np.zeros((nl, self.n_slots, self.max_len, hkv, hd),
-                           np.float32)
+        nb = _bucket(len(self.slot_req), lo=self._init_slots)
+        stage_k = np.zeros((nl, nb, self.max_len, hkv, hd), np.float32)
         stage_v = np.zeros_like(stage_k)
-        lens = np.zeros((self.n_slots,), np.int32)
-        last_tokens = np.zeros((self.n_slots, 1), np.int32)
+        lens = np.zeros((nb,), np.int32)
+        last_tokens = np.zeros((nb, 1), np.int32)
         for i, rows in zip(active, gathered):
             t = rows.shape[0]
             w = np.asarray(rows, np.float32).reshape(t, nl, 2, hkv, hd)
@@ -247,8 +351,10 @@ class MultiPortEngine:
                 "queue": len(self.queue),
                 "active": sum(r is not None and not r.done
                               for r in self.slot_req),
+                "prefilling": len(self._prefilling),
+                "slots": len(self.slot_req),
                 "lens": [self._total_len(i) if self.slot_req[i] is not None
-                         else 0 for i in range(self.n_slots)],
+                         else 0 for i in range(len(self.slot_req))],
                 "pool_utilization": self.pool.utilization,
                 "pool_traversals": self.pool.traversals}
 
@@ -261,23 +367,32 @@ class MultiPortEngine:
         slots = sched.slots
         if self.single_port:
             # bare macro: one port per CLK (rotate through enabled ports)
-            slots = (slots[self._sp_rotate % len(slots)],)
+            slots = fsm.rotate_single_port(slots, self._sp_rotate)
             self._sp_rotate += 1
-        status = {}
-        scrub: list[int] = []
-        admits: list = []
-        appends: list = []
-        active: list = []
-        reads: list = []
-        for port in slots:
+
+        collected = {"status": {}, "scrub": [], "admits": [],
+                     "appends": [], "active": [], "reads": []}
+
+        def service(state, port):
             if port == EVICT:
-                scrub = self._collect_evict()
+                state["scrub"] = self._collect_evict()
             elif port == PREFILL:
-                admits = self._collect_prefill()
+                state["admits"] = self._collect_prefill()
             elif port == DECODE:
-                appends, active, reads = self._collect_decode()
+                (state["appends"], state["active"],
+                 state["reads"]) = self._collect_decode()
             else:
-                status = self._service_status()
+                state["status"] = self._service_status()
+            return state
+
+        walk_cfg = PortConfig(
+            enabled=tuple(p in slots for p in range(4)),
+            roles=cfg.roles, priority=cfg.priority)
+        collected = fsm.walk_static(walk_cfg, collected, service)
+        status = collected["status"]
+        scrub, admits = collected["scrub"], collected["admits"]
+        appends, active, reads = (collected["appends"], collected["active"],
+                                  collected["reads"])
 
         # commit the cycle's traffic to the physical pool
         t0 = self.pool.traversals
@@ -296,18 +411,22 @@ class MultiPortEngine:
             if reads:
                 gathered = self.pool.cycle(read=reads)["read"]
         for s in appends:                          # appends are now committed
-            slot = next(i for i in range(self.n_slots)
+            slot = next(i for i in range(len(self.slot_req))
                         if self.slot_req[i] is not None
                         and self.slot_req[i].rid == s["seq"])
             self.slot_len[slot] += 1
             self._pending.pop(slot, None)
 
+        dt = self.pool.traversals - t0
+        if admits:
+            self.prefill_steps += 1
+            self.prefill_traversals += dt
         if active:
             self.decode_steps += 1
-            self.decode_traversals += self.pool.traversals - t0
+            self.decode_traversals += dt
             if appends:
                 self.steady_decode_steps += 1
-                self.steady_decode_traversals += self.pool.traversals - t0
+                self.steady_decode_traversals += dt
             self._compute_decode(active, gathered)
 
         self.cycles += 1

@@ -1,7 +1,5 @@
 """Clock generator invariants from paper Fig. 4: per external CLK cycle,
 BACK has N pulses and CLK2 has N-1 pulses for an N-port configuration."""
-import numpy as np
-
 from repro.core import PortConfig, READ, build_schedule, simulate_waveform
 from repro.core.clockgen import effective_access_rate
 

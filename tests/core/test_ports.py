@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import pytest
 
-from repro.core import MAX_PORTS, READ, WRITE, PortConfig, quad_port, single_port
+from repro.core import READ, PortConfig, quad_port
 from repro.core.priority import (encode_dynamic, encode_static,
                                  next_port_dynamic, order_static)
 

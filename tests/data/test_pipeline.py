@@ -1,7 +1,6 @@
 """Data pipeline: step-addressable determinism (the fault-tolerance
 substrate) and the learnable chain structure."""
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, ShardedLoader, make_batch

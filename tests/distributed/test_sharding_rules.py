@@ -2,7 +2,6 @@
 dimensionally valid — sharded dims divide by their mesh axes (the
 divisibility guards), stack axes unsharded, norms replicated."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

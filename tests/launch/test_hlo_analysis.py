@@ -2,7 +2,6 @@
 hand-countable programs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch import hlo_analysis as HA
 

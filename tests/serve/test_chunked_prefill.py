@@ -1,0 +1,104 @@
+"""Property: chunked batched prefill is token-identical to per-request
+(single-chunk) prefill for random prompt lengths, chunk sizes and slot
+counts — including slot pools grown past the seed's 4 and requests admitted
+mid-stream while earlier requests are already decoding."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, *, chunk_tokens, slots, max_slots,
+           admit_split, max_new=3):
+    """Run the engine admitting ``prompts[:admit_split]`` up front and the
+    rest mid-stream (after the first batch has started decoding)."""
+    eng = MultiPortEngine(params, cfg, slots=slots, max_slots=max_slots,
+                          max_len=64, chunk_tokens=chunk_tokens)
+    for p in prompts[:admit_split]:
+        eng.submit(p, max_new=max_new)
+    for _ in range(3):                     # first admissions reach decode
+        if eng.pending_work():
+            eng.step()
+    for p in prompts[admit_split:]:
+        eng.submit(p, max_new=max_new)
+    done = eng.run(max_cycles=2000)
+    assert len(done) == len(prompts)
+    return {r.rid: tuple(r.generated) for r in done}, eng
+
+
+def _check(cfg, params, prompt_lens, chunk_tokens, slots, max_slots,
+           admit_split):
+    rng = np.random.default_rng(sum(prompt_lens) + chunk_tokens + slots)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in prompt_lens]
+    got, eng = _serve(cfg, params, prompts, chunk_tokens=chunk_tokens,
+                      slots=slots, max_slots=max_slots,
+                      admit_split=admit_split)
+    # baseline: every prompt prefilled in ONE chunk (per-request prefill
+    # compute), ample slots, all admitted up front
+    want, _ = _serve(cfg, params, prompts, chunk_tokens=64,
+                     slots=len(prompts), max_slots=len(prompts),
+                     admit_split=len(prompts))
+    assert got == want, (chunk_tokens, slots, max_slots, got, want)
+    return eng
+
+
+def test_chunked_prefill_fixed_cases(setup):
+    """Deterministic spot-checks of the property (run even without the
+    ``dev`` extra): tiny chunks, growth past 4 slots, mid-stream admission."""
+    cfg, params = setup
+    eng = _check(cfg, params, [3, 9, 5, 12, 7, 4], chunk_tokens=4, slots=2,
+                 max_slots=6, admit_split=6)     # one burst: must grow
+    assert eng.n_slots == 6                      # grew past the seed's cap
+    _check(cfg, params, [3, 9, 5, 12, 7, 4], chunk_tokens=4, slots=2,
+           max_slots=6, admit_split=3)           # mid-stream admissions
+    _check(cfg, params, [11, 2], chunk_tokens=1, slots=1, max_slots=2,
+           admit_split=1)
+
+
+def test_prefill_chunk_specs_match_model_contract(setup):
+    """launch.specs.prefill_chunk_specs must stay in sync with the batch
+    dict repro.models.prefill_chunk actually consumes (the dry-run's
+    no-allocation stand-in for the engine's admission compute)."""
+    cfg, params = setup
+    from repro.launch.specs import decode_state_shapes, prefill_chunk_specs
+    from repro.models import prefill_chunk
+    batch = prefill_chunk_specs(cfg, 4, 8)
+    state = decode_state_shapes(cfg, 4, 64)
+    out_state, logits = jax.eval_shape(
+        lambda p, s, b: prefill_chunk(p, cfg, s, b), params, state, batch)
+    assert logits.shape == (4, cfg.vocab)
+    assert out_state["cache_k"].shape == state["cache_k"].shape
+
+
+def test_chunked_prefill_property(setup):
+    """Randomized version (CI installs the ``dev`` extra; skips locally)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = setup
+
+    @hyp.settings(max_examples=5, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(
+        prompt_lens=st.lists(st.integers(2, 12), min_size=1, max_size=6),
+        chunk_tokens=st.sampled_from([1, 3, 4, 8]),
+        slots=st.integers(1, 3),
+        extra_slots=st.integers(0, 5),
+        data=st.data())
+    def prop(prompt_lens, chunk_tokens, slots, extra_slots, data):
+        max_slots = min(slots + extra_slots, 8)
+        admit_split = data.draw(
+            st.integers(1, len(prompt_lens)), label="admit_split")
+        _check(cfg, params, prompt_lens, chunk_tokens, slots, max_slots,
+               admit_split)
+
+    prop()

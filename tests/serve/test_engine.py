@@ -34,7 +34,11 @@ def test_engine_completes_all_requests(setup):
 
 
 def test_engine_matches_unbatched_decode(setup):
-    """Engine output for one request == direct prefill+decode."""
+    """Engine output for one request == direct prefill+decode with the
+    prefill-logits contract: the FIRST generated token is the argmax of the
+    prefill logits (the prompt's last position), and decode then feeds each
+    generated token exactly once — no re-feed of prompt[-1], no KV word
+    landing twice at positions plen-1 and plen."""
     cfg, params = setup
     from repro.models import decode_step, init_decode_state, prefill
     import jax.numpy as jnp
@@ -47,19 +51,65 @@ def test_engine_matches_unbatched_decode(setup):
     got = done[0].generated
 
     state = init_decode_state(cfg, 1, 64)
-    toks = np.zeros((1, 8), np.int32)
-    toks[0, :5] = prompt
-    state, _ = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))(
-        params, state, {"inputs": jnp.asarray(toks)})
-    state = dict(state, len=jnp.asarray([5], jnp.int32))
-    cur = prompt[-1]
-    want = []
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])   # exact length
+    state, lg = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))(
+        params, state, {"inputs": toks})
+    cur = int(jnp.argmax(lg[0]))
+    want = [cur]
     step = jax.jit(lambda p, s, b: decode_step(p, cfg, s, b))
-    for _ in range(5):
+    for _ in range(4):
         state, lg = step(params, state, {"inputs": jnp.asarray([[cur]])})
         cur = int(jnp.argmax(lg[0]))
         want.append(cur)
     assert got == want, (got, want)
+
+
+def test_first_token_comes_from_prefill_logits(setup):
+    """A max_new=1 request never enters decode at all: its single token is
+    the prefill argmax, and the engine carries no decode traffic for it."""
+    cfg, params = setup
+    from repro.models import init_decode_state, prefill
+    import jax.numpy as jnp
+    rng = np.random.default_rng(7)
+    prompt = list(rng.integers(0, cfg.vocab, 6))
+
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64, prefill_bucket=8)
+    eng.submit(prompt, max_new=1)
+    done = eng.run(max_cycles=50)
+    assert eng.decode_steps == 0
+
+    state = init_decode_state(cfg, 1, 64)
+    _, lg = jax.jit(lambda p, s, b: prefill(p, cfg, s, b))(
+        params, state, {"inputs": jnp.asarray(np.asarray(prompt)[None],
+                                              dtype=jnp.int32)})
+    assert done[0].generated == [int(jnp.argmax(lg[0]))]
+
+
+def test_slot_pool_grows_on_demand(setup):
+    """The slot table starts at ``slots`` and grows (bounded by
+    ``max_slots``) when admissions outnumber free slots — continuous
+    batching past the seed's fixed 4, token-identical to a small pool."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    prompts = _prompts(cfg, 12, rng)
+
+    big = MultiPortEngine(params, cfg, slots=2, max_slots=12, max_len=64,
+                          prefill_bucket=8)
+    small = MultiPortEngine(params, cfg, slots=2, max_len=64,
+                            prefill_bucket=8)
+    for p in prompts:
+        big.submit(p, max_new=3)
+        small.submit(p, max_new=3)
+    done_b = big.run(max_cycles=1000)
+    done_s = small.run(max_cycles=1000)
+    assert len(done_b) == len(done_s) == 12
+    assert big.n_slots > 4 and big.n_slots <= 12
+    assert small.n_slots == 2
+    for a, b in zip(sorted(done_b, key=lambda r: r.rid),
+                    sorted(done_s, key=lambda r: r.rid)):
+        assert a.generated == b.generated
+    # all 12 requests decode concurrently: far fewer macro-cycles
+    assert big.cycles < small.cycles
 
 
 def test_multiport_uses_fewer_cycles_than_single_port(setup):

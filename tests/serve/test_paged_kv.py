@@ -1,10 +1,9 @@
 """Paged KV pool on the multi-port memory: paging correctness, port
 priority semantics (append visible to same-cycle reads), allocation reuse."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.memory.paged_kv import PagedPool
+from repro.memory.paged_kv import PagedPool, PoolCapacityError
 
 
 def _pool(**kw):
@@ -68,3 +67,67 @@ def test_pool_exhaustion_raises():
     pool = _pool()
     with pytest.raises(MemoryError):
         pool.cycle(prefill={"seq": 1, "vectors": np.ones((33, 8), np.float32)})
+
+
+def test_over_capacity_admission_is_transactional():
+    """An admission that exceeds pool capacity raises a clear error BEFORE
+    any state mutation: no pages leak, and a fitting admission still works."""
+    pool = _pool()                                  # 8 pages x 4 tokens
+    pool.cycle(prefill={"seq": 1, "vectors": np.ones((16, 8), np.float32)})
+    free_before = list(pool.free_pages)
+    with pytest.raises(PoolCapacityError, match="pages"):
+        pool.cycle(prefill=[{"seq": 2, "vectors": np.ones((12, 8), np.float32)},
+                            {"seq": 3, "vectors": np.ones((8, 8), np.float32)}])
+    # nothing committed: free list, tables and lengths are untouched
+    assert pool.free_pages == free_before
+    assert 2 not in pool.tables and 3 not in pool.tables
+    assert pool.lengths == {1: 16}
+    # the pool is still serviceable after the refused transaction
+    pool.cycle(prefill={"seq": 2, "vectors": np.ones((16, 8), np.float32)})
+    assert pool.lengths[2] == 16
+
+
+def test_over_capacity_append_counts_existing_pages():
+    """Growing an existing sequence only demands the DELTA pages; a grow that
+    fits the partially-filled tail page is not refused."""
+    pool = _pool()
+    pool.cycle(prefill={"seq": 1, "vectors": np.ones((30, 8), np.float32)})
+    pool.cycle(append={"seq": 1, "vectors": np.ones((2, 8), np.float32)})
+    assert pool.lengths[1] == 32
+    with pytest.raises(PoolCapacityError):
+        pool.cycle(append={"seq": 1, "vectors": np.ones((1, 8), np.float32)})
+
+
+def test_bad_read_aborts_cycle_before_writes_land():
+    """A cycle whose READ stream is out of range is refused up front: its
+    write streams must not land either (no half-committed transactions).
+    Same-cycle append + read of the just-appended fresh-page position stays
+    legal — reads are validated against the projected post-write mapping."""
+    pool = _pool()
+    pool.cycle(prefill={"seq": 1, "vectors": np.ones((4, 8), np.float32)})
+    free_before = list(pool.free_pages)
+    with pytest.raises(IndexError):
+        pool.cycle(append={"seq": 1, "vectors": np.ones((1, 8), np.float32)},
+                   read={"seq": 1, "positions": np.arange(99)})
+    assert pool.lengths == {1: 4}
+    assert pool.free_pages == free_before
+    # append crosses into a fresh page; reading position 4 in the SAME cycle
+    # is within the projected mapping and must succeed
+    out = pool.cycle(append={"seq": 1,
+                             "vectors": 2 * np.ones((1, 8), np.float32)},
+                     read={"seq": 1, "positions": np.arange(5)})["read"]
+    assert pool.lengths[1] == 5
+    np.testing.assert_allclose(np.asarray(out)[4], 2.0)
+
+
+def test_read_past_mapped_words_raises():
+    """Out-of-range positions (including negative ones, which numpy would
+    silently wrap around to the table's tail) raise a clear IndexError."""
+    pool = _pool()
+    pool.cycle(prefill={"seq": 1, "vectors": np.ones((6, 8), np.float32)})
+    with pytest.raises(IndexError, match="page table"):
+        pool.cycle(read={"seq": 1, "positions": np.arange(6, 12)})
+    with pytest.raises(IndexError, match="page table"):
+        pool.cycle(read={"seq": 1, "positions": np.asarray([-1])})
+    with pytest.raises(IndexError, match="no pages"):
+        pool.cycle(read={"seq": 9, "positions": np.arange(2)})

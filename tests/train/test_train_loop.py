@@ -2,7 +2,6 @@
 decreases), with checkpointing + restart reproducing bit-identical results."""
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, ShardedLoader
