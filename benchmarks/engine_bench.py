@@ -4,22 +4,31 @@ two-pass reference does >= 2, and the 4-port schedule finishes in fewer
 macro-cycles (and less wall time) than single-port scheduling.
 
 Reported per mode: macro-cycles, wall seconds, generated tokens,
-cycles/token, physical pool traversals, traversals/token, and
+cycles/token, physical pool traversals, traversals/token,
 traversals-per-decode-step (the headline C1 ratio: ~1 fused vs >= 2
-reference).
+reference), and seq_tile-tile reads per steady decode step (the
+length-bounded-traversal metric: the fused kernel touches only live tiles).
 
 A second section measures chunked batched prefill: admissions split into
 fixed-size chunks share ONE bulk-write pool transaction per macro-cycle, so
 prefill pool-traversals-per-admitted-token shrinks as the admission batch
-grows — the multi-port scheduling win on the PREFILL port.
+grows — and the fused chunk kernel reads only live tiles per chunk where the
+dense reference reads the whole S_max staging cache.
+
+A third section sweeps decode tile reads against cache length: the
+length-bounded kernel's read traffic tracks cache_len while the unbounded
+kernel pays the full allocated capacity every step (>= 4x fewer tile reads
+at cache_len = S_max/8).
 
 CI gate (see .github/workflows/ci.yml bench-smoke and benchmarks/README.md):
 
     python benchmarks/engine_bench.py --json BENCH_engine.json \
-        --min-traversal-ratio 1.9
+        --min-traversal-ratio 1.9 --enforce-tile-bound --min-tile-ratio 3.9
 
-writes the ``bench-engine/v1`` record and exits non-zero if the fused-vs-
-reference steady-decode traversal ratio drops below the gate.
+writes the ``bench-engine/v2`` record and exits non-zero if the fused-vs-
+reference steady-decode traversal ratio, the steady-decode tile budget
+(ceil((cache_len+1)/seq_tile) per step), or the bounded-vs-unbounded tile
+ratio at cache_len = S_max/8 regresses.
 """
 from __future__ import annotations
 
@@ -44,6 +53,12 @@ MODES = (
 
 PREFILL_BATCHES = (1, 4, 8)
 
+# tile sweep workload: S_max and the tile size the decode kernel traverses
+TILE_S_MAX = 64
+TILE_SEQ = 8
+# steady decode cache_len targets as fractions of S_max
+TILE_FRACS = (8, 4, 2)
+
 
 def _setup():
     cfg = registry.get("tinyllama-1.1b", reduced=True)
@@ -61,8 +76,8 @@ def run(n_requests: int = 8, max_new: int = 6) -> dict:
     tokens_by_mode = {}
     for mode, kernel_mode, single in MODES:
         eng = MultiPortEngine(params, cfg, slots=4, max_len=64,
-                              prefill_bucket=8, kernel_mode=kernel_mode,
-                              single_port=single)
+                              prefill_bucket=8, seq_tile=TILE_SEQ,
+                              kernel_mode=kernel_mode, single_port=single)
         for p in prompts:
             eng.submit(p, max_new=max_new)
         t0 = time.perf_counter()
@@ -71,6 +86,7 @@ def run(n_requests: int = 8, max_new: int = 6) -> dict:
         assert len(done) == n_requests
         toks = sum(len(r.generated) for r in done)
         tokens_by_mode[mode] = {r.rid: tuple(r.generated) for r in done}
+        steady = max(eng.steady_decode_steps, 1)
         out[mode] = {
             "cycles": eng.cycles, "seconds": dt, "tokens": toks,
             "cycles_per_token": eng.cycles / toks,
@@ -80,8 +96,19 @@ def run(n_requests: int = 8, max_new: int = 6) -> dict:
                                       / max(eng.decode_steps, 1)),
             # steady state: decode cycles carrying both append + read ports
             "traversals_per_decode_steady": (eng.steady_decode_traversals
-                                             / max(eng.steady_decode_steps,
-                                                   1)),
+                                             / steady),
+            # length-bounded traversal accounting (seq_tile tiles the decode
+            # R port touches vs the ideal ceil((cache_len+1)/seq_tile) budget)
+            "seq_tile": eng.seq_tile,
+            "tile_reads": eng.decode_tile_reads,
+            "tile_reads_per_decode_steady": (eng.steady_decode_tile_reads
+                                             / steady),
+            "tile_bound_per_decode_steady": (eng.steady_decode_tile_bound
+                                             / steady),
+            "within_tile_bound": (eng.steady_decode_tile_reads
+                                  <= eng.steady_decode_tile_bound),
+            "pool_tile_reads": eng.pool.tile_reads,
+            "pool_tile_writes": eng.pool.tile_writes,
         }
     # all modes must agree token-for-token (same greedy decode)
     assert (tokens_by_mode["pallas"] == tokens_by_mode["reference"]
@@ -98,14 +125,18 @@ def run_prefill(batch_sizes=PREFILL_BATCHES, prompt_len: int = 24,
                 chunk_tokens: int = 8) -> dict:
     """Chunked batched prefill: pool traversals per admitted prompt token as
     the concurrent admission batch grows (slot pool growing past the seed's
-    4 along the way)."""
+    4 along the way), plus tile reads per chunk — the fused chunk kernel
+    touches only live tiles where the dense reference reads all of S_max."""
     cfg, params = _setup()
     rng = np.random.default_rng(1)
+    dense_tiles = -(-TILE_S_MAX // TILE_SEQ)
     out = {"prompt_len": prompt_len, "chunk_tokens": chunk_tokens,
+           "seq_tile": TILE_SEQ, "dense_tiles_per_chunk": dense_tiles,
            "per_batch": {}}
     for n in batch_sizes:
         eng = MultiPortEngine(params, cfg, slots=1, max_slots=max(n, 1),
-                              max_len=64, chunk_tokens=chunk_tokens)
+                              max_len=TILE_S_MAX, chunk_tokens=chunk_tokens,
+                              seq_tile=TILE_SEQ)
         for _ in range(n):
             eng.submit(list(rng.integers(0, cfg.vocab, prompt_len)),
                        max_new=1)
@@ -120,34 +151,152 @@ def run_prefill(batch_sizes=PREFILL_BATCHES, prompt_len: int = 24,
             "prefill_traversals": eng.prefill_traversals,
             "traversals_per_token": (eng.prefill_traversals
                                      / max(eng.prefill_tokens, 1)),
+            "tile_reads_per_chunk": (eng.prefill_tile_reads
+                                     / max(eng.prefill_chunks, 1)),
             "grown_slots": eng.n_slots,
         }
     return out
 
 
-def report(r: dict, pf: dict) -> None:
+def measure_kernel_tiles() -> dict:
+    """Direct KERNEL-MEASURED serviced-tile check — the teeth behind
+    ``--enforce-tile-bound``. The engine's per-step counters are host-side
+    accounting of the kernels' skip formula; this probe asks the kernels
+    themselves (``return_tiles``) how many tiles they serviced for a
+    steady-decode-shaped batch (including a dead padded row) and for one
+    prefill chunk, and compares against the ceil budgets. A kernel
+    regression that stops skipping dead tiles fails HERE, in the bench job,
+    independent of the tier-1 suite."""
+    import jax.numpy as jnp
+
+    from repro.kernels.kv_multiport import fused_append_attend
+    from repro.kernels.kv_prefill_chunk import fused_chunk_append_attend
+
+    rng = np.random.default_rng(3)
+    s, tile, hkv, g, d = TILE_S_MAX, TILE_SEQ, 2, 2, 16
+    h = hkv * g
+
+    lens = np.array([s // 8, s // 4, s // 2 - 1, -1])     # last row = padding
+    q = jnp.asarray(rng.normal(size=(4, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(4, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(4, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(4, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(4, hkv, d)), jnp.float32)
+    *_, dec = fused_append_attend(q, ck, cv, nk, nv,
+                                  jnp.asarray(lens, jnp.int32),
+                                  seq_tile=tile, return_tiles=True)
+    dec_budget = [int(-(-(p + 1) // tile)) if p >= 0 else 0 for p in lens]
+
+    c = 4
+    offs = np.array([0, s // 4, -1])                      # last row = padding
+    cls = np.array([c, c - 1, 0])
+    qc = jnp.asarray(rng.normal(size=(3, c, h, d)), jnp.float32)
+    ck3, cv3 = ck[:3], cv[:3]
+    nk3 = jnp.asarray(rng.normal(size=(3, c, hkv, d)), jnp.float32)
+    nv3 = jnp.asarray(rng.normal(size=(3, c, hkv, d)), jnp.float32)
+    *_, pf = fused_chunk_append_attend(qc, ck3, cv3, nk3, nv3,
+                                       jnp.asarray(offs, jnp.int32),
+                                       jnp.asarray(cls, jnp.int32),
+                                       seq_tile=tile, return_tiles=True)
+    pf_budget = [int(-(-(o + n) // tile)) if o >= 0 else 0
+                 for o, n in zip(offs, cls)]
+
+    dec, pf = np.asarray(dec).tolist(), np.asarray(pf).tolist()
+    return {"seq_tile": tile, "s_max": s,
+            "decode_measured": dec, "decode_budget": dec_budget,
+            "prefill_measured": pf, "prefill_budget": pf_budget,
+            "within": (all(m <= b for m, b in zip(dec, dec_budget))
+                       and all(m <= b for m, b in zip(pf, pf_budget)))}
+
+
+def run_tiles(max_new: int = 4, requests: int = 4) -> dict:
+    """Decode read traffic vs live cache length: steady-decode tile reads
+    per step per slot for the length-bounded kernel against the unbounded
+    traversal, at cache_len targets S_max/8, S_max/4, S_max/2."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    out = {"s_max": TILE_S_MAX, "seq_tile": TILE_SEQ, "per_cache_len": {}}
+
+    def measure(prompt_len, length_bound):
+        eng = MultiPortEngine(params, cfg, slots=requests,
+                              max_len=TILE_S_MAX, seq_tile=TILE_SEQ,
+                              chunk_tokens=8, length_bound=length_bound)
+        for _ in range(requests):
+            eng.submit(list(rng.integers(0, cfg.vocab, prompt_len)),
+                       max_new=max_new)
+        done = eng.run(max_cycles=2000)
+        assert len(done) == requests
+        steps = max(eng.steady_decode_steps, 1)
+        return {
+            "tile_reads_per_step": (eng.steady_decode_tile_reads
+                                    / steps / requests),
+            "tile_bound_per_step": (eng.steady_decode_tile_bound
+                                    / steps / requests),
+            "within_tile_bound": (eng.steady_decode_tile_reads
+                                  <= eng.steady_decode_tile_bound),
+        }
+
+    for frac in TILE_FRACS:
+        target = TILE_S_MAX // frac
+        prompt_len = max(2, target - max_new // 2)
+        bounded = measure(prompt_len, True)
+        unbounded = measure(prompt_len, False)
+        out["per_cache_len"][str(target)] = {
+            "prompt_len": prompt_len,
+            "bounded": bounded,
+            "unbounded": unbounded,
+            "tile_ratio": (unbounded["tile_reads_per_step"]
+                           / max(bounded["tile_reads_per_step"], 1e-9)),
+        }
+    # headline: the ratio at cache_len = S_max/8
+    out["tile_ratio_at_s8"] = (
+        out["per_cache_len"][str(TILE_S_MAX // 8)]["tile_ratio"])
+    out["kernel_measured"] = measure_kernel_tiles()
+    return out
+
+
+def report(r: dict, pf: dict, tl: dict) -> None:
     print("# serving engine: fused multi-port vs reference vs single-port "
           "(claim C1)")
     print("mode,cycles,seconds,tokens,cycles/token,pool_traversals,"
-          "traversals/token,traversals/decode,traversals/decode(steady)")
+          "traversals/token,traversals/decode,traversals/decode(steady),"
+          "tiles/decode(steady),tile_bound(steady)")
     for m, _, _ in MODES:
         x = r[m]
         print(f"{m},{x['cycles']},{x['seconds']:.3f},{x['tokens']},"
               f"{x['cycles_per_token']:.2f},{x['pool_traversals']},"
               f"{x['traversals_per_token']:.2f},"
               f"{x['traversals_per_decode']:.2f},"
-              f"{x['traversals_per_decode_steady']:.2f}")
+              f"{x['traversals_per_decode_steady']:.2f},"
+              f"{x['tile_reads_per_decode_steady']:.2f},"
+              f"{x['tile_bound_per_decode_steady']:.2f}")
     print(f"cycle_ratio,{r['cycle_ratio']:.2f}")
     print(f"traversal_ratio,{r['traversal_ratio']:.2f}")
     print()
     print("# chunked batched prefill: pool traversals per admitted token "
-          f"(prompt_len={pf['prompt_len']}, chunk={pf['chunk_tokens']})")
+          f"(prompt_len={pf['prompt_len']}, chunk={pf['chunk_tokens']}); "
+          f"fused chunk tile reads vs {pf['dense_tiles_per_chunk']} dense "
+          "tiles/chunk")
     print("batch,prefill_cycles,prefill_traversals,prefill_tokens,"
-          "traversals/token,grown_slots")
+          "traversals/token,tiles/chunk,grown_slots")
     for n, x in pf["per_batch"].items():
         print(f"{n},{x['prefill_cycles']},{x['prefill_traversals']},"
               f"{x['prefill_tokens']},{x['traversals_per_token']:.3f},"
-              f"{x['grown_slots']}")
+              f"{x['tile_reads_per_chunk']:.2f},{x['grown_slots']}")
+    print()
+    print("# length-bounded decode: steady tile reads/step/slot vs "
+          f"cache_len (S_max={tl['s_max']}, seq_tile={tl['seq_tile']})")
+    print("cache_len,bounded_tiles,unbounded_tiles,tile_bound,tile_ratio")
+    for cl, x in tl["per_cache_len"].items():
+        print(f"{cl},{x['bounded']['tile_reads_per_step']:.2f},"
+              f"{x['unbounded']['tile_reads_per_step']:.2f},"
+              f"{x['bounded']['tile_bound_per_step']:.2f},"
+              f"{x['tile_ratio']:.2f}")
+    print(f"tile_ratio_at_s8,{tl['tile_ratio_at_s8']:.2f}")
+    km = tl["kernel_measured"]
+    print(f"kernel_measured: decode {km['decode_measured']} <= "
+          f"{km['decode_budget']}, prefill {km['prefill_measured']} <= "
+          f"{km['prefill_budget']} -> within={km['within']}")
 
 
 def main(argv=None) -> None:
@@ -155,45 +304,86 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the bench-engine/v1 record (BENCH_engine.json)")
+                    help="write the bench-engine/v2 record (BENCH_engine.json)")
     ap.add_argument("--min-traversal-ratio", type=float, default=None,
                     help="exit non-zero if fused-vs-reference steady-decode "
                          "traversal ratio drops below this gate")
+    ap.add_argument("--enforce-tile-bound", action="store_true",
+                    help="exit non-zero if fused steady-decode tile reads "
+                         "exceed ceil((cache_len+1)/seq_tile) per step")
+    ap.add_argument("--min-tile-ratio", type=float, default=None,
+                    help="exit non-zero if bounded-vs-unbounded decode tile "
+                         "reads at cache_len=S_max/8 drop below this gate")
     args = ap.parse_args(argv)
 
     r = run(args.requests, args.max_new)
     pf = run_prefill()
-    report(r, pf)
+    tl = run_tiles()
+    report(r, pf, tl)
 
+    # the gate combines the engine's accounting invariant with the DIRECT
+    # kernel-measured serviced-tile probe (the part that can actually catch
+    # a kernel that stops skipping dead tiles)
+    tile_bound_ok = (r["pallas"]["within_tile_bound"]
+                     and all(x["bounded"]["within_tile_bound"]
+                             for x in tl["per_cache_len"].values())
+                     and tl["kernel_measured"]["within"])
     if args.json:
         per_tok = [pf["per_batch"][str(n)]["traversals_per_token"]
                    for n in PREFILL_BATCHES]
         record = {
-            "schema": "bench-engine/v1",
+            "schema": "bench-engine/v2",
             "config": {"arch": "tinyllama-1.1b", "reduced": True,
-                       "requests": args.requests, "max_new": args.max_new},
+                       "requests": args.requests, "max_new": args.max_new,
+                       "seq_tile": TILE_SEQ, "s_max": TILE_S_MAX},
             "decode": {m: r[m] for m, _, _ in MODES},
             "cycle_ratio": r["cycle_ratio"],
             "traversal_ratio": r["traversal_ratio"],
             "prefill": pf,
+            "tiles": tl,
             "gate": {
                 "min_traversal_ratio": args.min_traversal_ratio,
                 "traversal_ratio": r["traversal_ratio"],
                 "prefill_traversals_per_token_monotonic":
                     all(a >= b for a, b in zip(per_tok, per_tok[1:])),
+                "enforce_tile_bound": args.enforce_tile_bound,
+                "within_tile_bound": tile_bound_ok,
+                "min_tile_ratio": args.min_tile_ratio,
+                "tile_ratio_at_s8": tl["tile_ratio_at_s8"],
             },
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
         print(f"\nwrote {args.json}")
 
+    failed = False
     if args.min_traversal_ratio is not None:
         if r["traversal_ratio"] < args.min_traversal_ratio:
             print(f"GATE FAIL: traversal_ratio {r['traversal_ratio']:.2f} < "
                   f"{args.min_traversal_ratio}", file=sys.stderr)
-            sys.exit(1)
-        print(f"GATE OK: traversal_ratio {r['traversal_ratio']:.2f} >= "
-              f"{args.min_traversal_ratio}")
+            failed = True
+        else:
+            print(f"GATE OK: traversal_ratio {r['traversal_ratio']:.2f} >= "
+                  f"{args.min_traversal_ratio}")
+    if args.enforce_tile_bound:
+        if not tile_bound_ok:
+            print("GATE FAIL: steady-decode tile reads exceed "
+                  "ceil((cache_len+1)/seq_tile) per step", file=sys.stderr)
+            failed = True
+        else:
+            print("GATE OK: steady-decode tile reads within the "
+                  "ceil((cache_len+1)/seq_tile) budget")
+    if args.min_tile_ratio is not None:
+        if tl["tile_ratio_at_s8"] < args.min_tile_ratio:
+            print(f"GATE FAIL: tile_ratio at S_max/8 "
+                  f"{tl['tile_ratio_at_s8']:.2f} < {args.min_tile_ratio}",
+                  file=sys.stderr)
+            failed = True
+        else:
+            print(f"GATE OK: tile_ratio at S_max/8 "
+                  f"{tl['tile_ratio_at_s8']:.2f} >= {args.min_tile_ratio}")
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

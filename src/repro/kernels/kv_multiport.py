@@ -14,6 +14,23 @@ KV tile is VMEM-resident, the tile containing ``cache_len`` takes the append
 accumulation (R slot) — W-before-R visibility exactly as the wrapper's FSM
 orders same-cycle traffic, so attention sees the just-appended token.
 
+The traversal is LENGTH-BOUNDED two ways, so per-token read traffic scales
+with the live sequence length instead of the allocated capacity:
+
+  * ``live_len`` (static) slices the cache to a bucketed live prefix before
+    launching, bounding the outer grid to ``ceil(live_len / seq_tile)``
+    tiles; the suffix passes through untouched.
+  * per-sequence, tiles wholly past ``cache_len`` skip the W/R service
+    under ``pl.when`` (``length_mask=True``) and copy their cache block
+    through unchanged — every output block is written on every grid step,
+    so the kernel is safe under compiled Mosaic's output-revolving buffers,
+    not just interpret-mode aliasing. A skipped tile is exactly a no-op of
+    the online softmax (fully-masked tiles keep m/l/acc unchanged), so
+    bounded and unbounded traversals agree bit-for-bit.
+  * a sentinel ``cache_len = -1`` marks a DEAD batch row (the engine's
+    padded slots): no tile is serviced at all and the attention output is
+    zeros — so serviced-tile counts stay exact under batch padding.
+
 Grid: (batch, seq_tiles); accumulators in VMEM scratch, persisted across the
 inner (seq_tiles) grid dimension.
 """
@@ -26,14 +43,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _iota(n: int, dtype=jnp.int32) -> jax.Array:
-    return jax.lax.broadcasted_iota(dtype, (n, 1), 0)[:, 0]
+from repro.kernels.tiling import fit_seq_tile, iota, restore_live, slice_live
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
-            out_k_ref, out_v_ref, o_ref, m_scr, l_scr, acc_scr,
-            *, seq_tile: int, n_tiles: int, scale: float):
+            out_k_ref, out_v_ref, o_ref, t_ref, m_scr, l_scr, acc_scr,
+            n_scr, *, seq_tile: int, n_tiles: int, scale: float,
+            length_mask: bool):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -41,80 +57,116 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
         m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
 
     p = len_ref[0, 0]                                     # append position
     tile_start = t * seq_tile
-    pos = tile_start + _iota(seq_tile)                    # global positions [T]
+    # length bound: a tile whose first position is past the append slot holds
+    # neither the W-port landing site nor any valid R-port position; a dead
+    # row (p < 0, batch padding) has no live tile at all
+    touched = (tile_start <= p) if length_mask else (p >= 0)
 
-    k_tile = k_ref[0]                                     # [T, Hkv, D]
-    v_tile = v_ref[0]
+    @pl.when(touched)
+    def _service():
+        n_scr[0, 0] += 1                                  # serviced-tile count
+        pos = tile_start + iota(seq_tile)                 # global positions [T]
 
-    # --- W slot (priority A): append new token if it lands in this tile -----
-    hit = (pos == p)                                      # [T]
-    k_tile = jnp.where(hit[:, None, None], new_k_ref[0][None], k_tile)
-    v_tile = jnp.where(hit[:, None, None], new_v_ref[0][None], v_tile)
-    out_k_ref[0] = k_tile                                 # write-through (aliased)
-    out_v_ref[0] = v_tile
+        k_tile = k_ref[0]                                 # [T, Hkv, D]
+        v_tile = v_ref[0]
 
-    # --- R slot (priority B): attention over valid positions (<= p) ---------
-    q = q_ref[0]                                          # [Hkv, G, D]
-    f32 = jnp.float32
-    s = jnp.einsum("hgd,thd->hgt", q.astype(f32), k_tile.astype(f32)) * scale
-    valid = (pos <= p)[None, None, :]                     # new token included
-    s = jnp.where(valid, s, -jnp.inf)
+        # --- W slot (priority A): append new token if it lands in this tile -
+        hit = (pos == p)                                  # [T]
+        k_tile = jnp.where(hit[:, None, None], new_k_ref[0][None], k_tile)
+        v_tile = jnp.where(hit[:, None, None], new_v_ref[0][None], v_tile)
+        out_k_ref[0] = k_tile                             # write-thru (aliased)
+        out_v_ref[0] = v_tile
 
-    m_prev = m_scr[...]                                   # [Hkv, G]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    # guard: fully-masked tile keeps m at -inf; exp(-inf - -inf) -> use where
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
-    pr = jnp.exp(s - m_new[..., None])
-    pr = jnp.where(valid, pr, 0.0)
-    l_new = l_scr[...] * alpha + pr.sum(axis=-1)
-    acc = acc_scr[...] * alpha[..., None]
-    acc = acc + jnp.einsum("hgt,thd->hgd", pr, v_tile.astype(f32))
+        # --- R slot (priority B): attention over valid positions (<= p) -----
+        q = q_ref[0]                                      # [Hkv, G, D]
+        f32 = jnp.float32
+        s = jnp.einsum("hgd,thd->hgt", q.astype(f32),
+                       k_tile.astype(f32)) * scale
+        valid = (pos <= p)[None, None, :]                 # new token included
+        s = jnp.where(valid, s, -jnp.inf)
 
-    m_scr[...] = m_new
-    l_scr[...] = l_new
-    acc_scr[...] = acc
+        m_prev = m_scr[...]                               # [Hkv, G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # guard: fully-masked tile keeps m at -inf; exp(-inf - -inf) -> where
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        pr = jnp.exp(s - m_new[..., None])
+        pr = jnp.where(valid, pr, 0.0)
+        l_new = l_scr[...] * alpha + pr.sum(axis=-1)
+        acc = acc_scr[...] * alpha[..., None]
+        acc = acc + jnp.einsum("hgt,thd->hgd", pr, v_tile.astype(f32))
+
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(jnp.logical_not(touched))
+    def _pass_through():
+        # every output block is written every grid step: compiled Mosaic
+        # recycles output VMEM buffers, so an unwritten block would copy
+        # back stale data — the skip saves the W/R service, not the copy
+        out_k_ref[0] = k_ref[0]
+        out_v_ref[0] = v_ref[0]
 
     @pl.when(t == n_tiles - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        t_ref[0, 0] = n_scr[0, 0]
 
 
 def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                         new_k: jax.Array, new_v: jax.Array,
                         cache_len: jax.Array, *, seq_tile: int = 128,
-                        interpret: bool = True
-                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                        live_len: int | None = None, length_mask: bool = True,
+                        return_tiles: bool = False, interpret: bool = True
+                        ) -> tuple[jax.Array, ...]:
     """One decode step for a batch of sequences.
 
     Args:
       q:        [B, H, D] query for the new token (H = Hkv * G).
-      cache_k:  [B, S, Hkv, D]; cache_v same. S must divide by seq_tile.
+      cache_k:  [B, S, Hkv, D]; cache_v same. When S is not a multiple of
+                seq_tile the tile is clamped to the largest divisor.
       new_k/v:  [B, Hkv, D] the new token's K,V (appended in-kernel).
       cache_len:[B] int32 — current length; the new token is written at this
                 position and attended to (post-append length is cache_len+1).
+                A NEGATIVE length marks a dead (padded) batch row: nothing
+                is written or read for it and its attention output is zeros.
+      live_len: static bound on ``max(cache_len) + 1`` — only cache tiles
+                below it are traversed; the suffix [live_len, S) is returned
+                untouched. Callers bucket it (powers of two of seq_tile) so
+                retraces stay logarithmic.
+      length_mask: skip tiles past each sequence's own append position under
+                ``pl.when`` (False restores the unbounded traversal — the
+                benchmark's comparator).
+      return_tiles: also return the KERNEL-MEASURED count of serviced tiles
+                per sequence ([B] int32) — the ground truth the host-side
+                tile accounting is pinned against in tests.
 
     Returns:
-      (attn_out [B, H, D], cache_k', cache_v') — caches updated in place.
+      (attn_out [B, H, D], cache_k', cache_v') — caches updated in place —
+      plus the serviced-tile counts when ``return_tiles``.
     """
     b, s, hkv, d = cache_k.shape
     h = q.shape[1]
     assert h % hkv == 0, "GQA requires H % Hkv == 0"
     g = h // hkv
-    seq_tile = min(seq_tile, s)
-    assert s % seq_tile == 0, (s, seq_tile)
-    n_tiles = s // seq_tile
+
+    full_k, full_v = cache_k, cache_v
+    cache_k, cache_v, bound = slice_live(cache_k, cache_v, live_len)
+    seq_tile = fit_seq_tile(bound, seq_tile)
+    n_tiles = bound // seq_tile
     scale = 1.0 / (d ** 0.5)
 
     qg = q.reshape(b, hkv, g, d)
     lens = cache_len.reshape(b, 1).astype(jnp.int32)
 
     kernel = functools.partial(_kernel, seq_tile=seq_tile, n_tiles=n_tiles,
-                               scale=scale)
-    out_k, out_v, out = pl.pallas_call(
+                               scale=scale, length_mask=length_mask)
+    out_k, out_v, out, tiles = pl.pallas_call(
         kernel,
         grid=(b, n_tiles),
         in_specs=[
@@ -129,18 +181,24 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
             pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
             pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
             pl.BlockSpec((1, hkv, g, d), lambda bb, t: (bb, 0, 0, 0)),   # out
+            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),    # serviced tiles
         ],
         out_shape=[
             jax.ShapeDtypeStruct(cache_k.shape, cache_k.dtype),
             jax.ShapeDtypeStruct(cache_v.shape, cache_v.dtype),
             jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((hkv, g), jnp.float32),          # m
             pltpu.VMEM((hkv, g), jnp.float32),          # l
             pltpu.VMEM((hkv, g, d), jnp.float32),       # acc
+            pltpu.VMEM((1, 1), jnp.int32),              # serviced tiles
         ],
         input_output_aliases={2: 0, 3: 1},              # caches in-place
         interpret=interpret,
     )(lens, qg, cache_k, cache_v, new_k, new_v)
+    out_k, out_v = restore_live(full_k, full_v, out_k, out_v)
+    if return_tiles:
+        return out.reshape(b, h, d), out_k, out_v, tiles[:, 0]
     return out.reshape(b, h, d), out_k, out_v

@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: fused chunked-prefill append+attend over the multi-port
+KV cache — the length-bounded traversal for the PREFILL port.
+
+The chunked-prefill analogue of ``kv_multiport.fused_append_attend``: one
+mid-prefill macro-cycle conventionally pays a scatter pass (write the chunk's
+K,V at ``[offset, offset+chunk_len)``) plus a DENSE read of the entire
+``S_max`` staging cache for the chunk's attention. This kernel configures the
+cache as a 2-port (1W+1R) memory and services both ports in one length-
+bounded traversal:
+
+  W port (priority A): each cache tile takes the chunk rows whose destination
+      ``offset + row`` lands inside it (routed by a one-hot matmul so the
+      scatter lowers through the MXU, no gather needed);
+  R port (priority B): every LIVE tile feeds the chunk's online-softmax
+      attention — same-cycle W->R visibility, so queries see their own and
+      earlier rows of the just-written chunk.
+
+Length bounding is the point: only tiles ``[0, ceil((offset+chunk_len) /
+seq_tile))`` are serviced — tiles wholly past a sequence's last query
+position skip the W/R service under ``pl.when`` and copy their cache block
+through unchanged (every output block is written on every grid step, so the
+kernel is safe under compiled Mosaic's output-revolving buffers, not just
+interpret-mode aliasing) — per-chunk read traffic scales with the LIVE
+sequence length, not the allocated ``S_max``. A sentinel ``offset = -1``
+marks a dead (padded) batch row: no tile is serviced for it at all.
+Callers additionally bound the outer grid by slicing the cache to a
+bucketed live prefix (see ``live_len``).
+
+Grid: (batch, seq_tiles); per-row accumulators in VMEM scratch persist
+across the inner (seq_tiles) dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import fit_seq_tile, iota, restore_live, slice_live
+
+
+def _kernel(off_ref, clen_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
+            out_k_ref, out_v_ref, o_ref, t_ref, m_scr, l_scr, acc_scr,
+            n_scr, *, seq_tile: int, n_tiles: int, chunk: int, scale: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+
+    off = off_ref[0, 0]
+    cl = clen_ref[0, 0]
+    tile_start = t * seq_tile
+    # last position any query row attends to: padded rows (row >= chunk_len)
+    # replicate position ``offset``, live rows reach offset + chunk_len - 1;
+    # a dead batch row (offset < 0) has no live tile at all
+    qpos_max = off + jnp.maximum(cl - 1, 0)
+    touched = (tile_start <= qpos_max) & (off >= 0)
+
+    @pl.when(touched)
+    def _service():
+        n_scr[0, 0] += 1                                  # serviced-tile count
+        f32 = jnp.float32
+        pos = tile_start + iota(seq_tile)                 # global [T]
+        rel = pos - off                                   # chunk row per slot
+        row = iota(chunk)
+
+        # --- W port (priority A): land the chunk rows that map to this tile.
+        # One-hot routing matrix [T, C] -> the scatter is an MXU matmul.
+        w_hit = (rel >= 0) & (rel < cl)                   # [T]
+        route = ((rel[:, None] == row[None, :])
+                 & w_hit[:, None]).astype(f32)            # [T, C]
+        k_new = jnp.einsum("tc,chd->thd", route, new_k_ref[0].astype(f32))
+        v_new = jnp.einsum("tc,chd->thd", route, new_v_ref[0].astype(f32))
+        k_tile = jnp.where(w_hit[:, None, None],
+                           k_new.astype(k_ref.dtype), k_ref[0])
+        v_tile = jnp.where(w_hit[:, None, None],
+                           v_new.astype(v_ref.dtype), v_ref[0])
+        out_k_ref[0] = k_tile                             # aliased write-thru
+        out_v_ref[0] = v_tile
+
+        # --- R port (priority B): causal online-softmax over the live tile.
+        q = q_ref[0].astype(f32)                          # [C, Hkv, G, D]
+        s = jnp.einsum("chgd,thd->chgt", q, k_tile.astype(f32)) * scale
+        qpos = jnp.where(row < cl, off + row, off)        # [C]
+        valid = pos[None, :] <= qpos[:, None]             # [C, T]
+        vmask = valid[:, None, None, :]
+        s = jnp.where(vmask, s, -jnp.inf)
+
+        m_prev = m_scr[...]                               # [C, Hkv, G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        pr = jnp.exp(s - m_new[..., None])
+        pr = jnp.where(vmask, pr, 0.0)
+        l_scr[...] = l_scr[...] * alpha + pr.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[..., None]
+                        + jnp.einsum("chgt,thd->chgd", pr, v_tile.astype(f32)))
+        m_scr[...] = m_new
+
+    @pl.when(jnp.logical_not(touched))
+    def _pass_through():
+        # every output block is written every grid step (compiled Mosaic
+        # recycles output VMEM buffers; an unwritten block would copy back
+        # stale data) — the skip saves the W/R service, not the copy
+        out_k_ref[0] = k_ref[0]
+        out_v_ref[0] = v_ref[0]
+
+    @pl.when(t == n_tiles - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        t_ref[0, 0] = n_scr[0, 0]
+
+
+def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
+                              cache_v: jax.Array, new_k: jax.Array,
+                              new_v: jax.Array, offset: jax.Array,
+                              chunk_len: jax.Array, *, seq_tile: int = 128,
+                              live_len: int | None = None,
+                              return_tiles: bool = False,
+                              interpret: bool = True
+                              ) -> tuple[jax.Array, ...]:
+    """One chunked-prefill step for a batch of mid-prefill sequences.
+
+    Args:
+      q:         [B, C, H, D] chunk queries (H = Hkv * G); rows past
+                 ``chunk_len`` are padding (their outputs are garbage-but-
+                 finite, exactly like the jnp oracle).
+      cache_k/v: [B, S, Hkv, D] staging caches.
+      new_k/v:   [B, C, Hkv, D] the chunk's K,V (rope already applied).
+      offset:    [B] int32 — each sequence's cache write offset. A NEGATIVE
+                 offset marks a dead (padded) batch row: nothing is written
+                 or read for it and its attention output is zeros.
+      chunk_len: [B] int32 — valid rows of each sequence's chunk.
+      seq_tile:  tile size; clamped to the largest divisor of the traversed
+                 length when it does not divide evenly.
+      live_len:  static bound on the live prefix ``max(offset + chunk_len)``
+                 — only cache tiles below it are traversed; the suffix
+                 ``[live_len, S)`` is returned untouched.
+      return_tiles: also return the KERNEL-MEASURED count of serviced tiles
+                 per sequence ([B] int32) — the ground truth the host-side
+                 tile accounting is pinned against in tests.
+
+    Returns: (attn_out [B, C, H, D], cache_k', cache_v') plus the
+    serviced-tile counts when ``return_tiles``.
+    """
+    b, s, hkv, d = cache_k.shape
+    c = q.shape[1]
+    h = q.shape[2]
+    assert h % hkv == 0, "GQA requires H % Hkv == 0"
+    g = h // hkv
+
+    full_k, full_v = cache_k, cache_v
+    cache_k, cache_v, bound = slice_live(cache_k, cache_v, live_len)
+    seq_tile = fit_seq_tile(bound, seq_tile)
+    n_tiles = bound // seq_tile
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, c, hkv, g, d)
+    offs = offset.reshape(b, 1).astype(jnp.int32)
+    clens = chunk_len.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, seq_tile=seq_tile, n_tiles=n_tiles,
+                               chunk=c, scale=scale)
+    out_k, out_v, out, tiles = pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                # off
+            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                # clen
+            pl.BlockSpec((1, c, hkv, g, d), lambda bb, t: (bb, 0, 0, 0, 0)),
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, c, hkv, d), lambda bb, t: (bb, 0, 0, 0)),  # newk
+            pl.BlockSpec((1, c, hkv, d), lambda bb, t: (bb, 0, 0, 0)),  # newv
+        ],
+        out_specs=[
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
+            pl.BlockSpec((1, c, hkv, g, d), lambda bb, t: (bb, 0, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),    # serviced tiles
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(cache_k.shape, cache_k.dtype),
+            jax.ShapeDtypeStruct(cache_v.shape, cache_v.dtype),
+            jax.ShapeDtypeStruct((b, c, hkv, g, d), q.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c, hkv, g), jnp.float32),          # m
+            pltpu.VMEM((c, hkv, g), jnp.float32),          # l
+            pltpu.VMEM((c, hkv, g, d), jnp.float32),       # acc
+            pltpu.VMEM((1, 1), jnp.int32),                 # serviced tiles
+        ],
+        input_output_aliases={3: 0, 4: 1},                 # caches in-place
+        interpret=interpret,
+    )(offs, clens, qg, cache_k, cache_v, new_k, new_v)
+
+    out_k, out_v = restore_live(full_k, full_v, out_k, out_v)
+    if return_tiles:
+        return out.reshape(b, c, h, d), out_k, out_v, tiles[:, 0]
+    return out.reshape(b, c, h, d), out_k, out_v

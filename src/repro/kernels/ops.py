@@ -17,6 +17,7 @@ from repro.core.multiport import MemorySpec, _dedup_last_wins
 from repro.core.ports import MAX_PORTS, READ, WRITE, PortConfig, PortRequest
 from repro.kernels import flash_attention as fa
 from repro.kernels import kv_multiport as kvmp
+from repro.kernels import kv_prefill_chunk as kvpc
 from repro.kernels import multiport_sram as mps
 
 
@@ -68,15 +69,38 @@ def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
     return banked.reshape(spec.num_words, spec.word_width), reads
 
 
-@functools.partial(jax.jit, static_argnames=("seq_tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
+                                             "length_mask", "interpret"))
 def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            new_k: jax.Array, new_v: jax.Array,
                            cache_len: jax.Array, *, seq_tile: int = 128,
+                           live_len: int | None = None,
+                           length_mask: bool = True,
                            interpret: bool = True):
-    """Fused 2-port (1W+1R) decode step. See kv_multiport.py."""
+    """Fused 2-port (1W+1R) length-bounded decode step. See kv_multiport.py."""
     return kvmp.fused_append_attend(q, cache_k, cache_v, new_k, new_v,
                                     cache_len, seq_tile=seq_tile,
+                                    live_len=live_len, length_mask=length_mask,
                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
+                                             "interpret"))
+def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
+                                  cache_v: jax.Array, new_k: jax.Array,
+                                  new_v: jax.Array, offset: jax.Array,
+                                  chunk_len: jax.Array, *,
+                                  seq_tile: int = 128,
+                                  live_len: int | None = None,
+                                  interpret: bool = True):
+    """Fused 2-port (1W+1R) length-bounded chunked-prefill step.
+
+    See kv_prefill_chunk.py; the jnp oracle is ref.prefill_chunk_attention_ref.
+    """
+    return kvpc.fused_chunk_append_attend(q, cache_k, cache_v, new_k, new_v,
+                                          offset, chunk_len,
+                                          seq_tile=seq_tile, live_len=live_len,
+                                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_tile", "k_tile", "interpret"))

@@ -46,6 +46,52 @@ def decode_attention_ref(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return out.reshape(b, h, d).astype(q.dtype), cache_k, cache_v
 
 
+def prefill_chunk_attention_ref(q: jax.Array, cache_k: jax.Array,
+                                cache_v: jax.Array, new_k: jax.Array,
+                                new_v: jax.Array, offset: jax.Array,
+                                chunk_len: jax.Array
+                                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-pass chunked-prefill oracle: scatter the chunk's K,V at
+    [offset, offset+chunk_len), then attend causally over the WHOLE cache
+    (the O(S_max) dense read the fused kernel's bounded traversal replaces).
+
+    q: [B, C, H, D]; cache_k/v: [B, S, Hkv, D]; new_k/v: [B, C, Hkv, D];
+    offset/chunk_len: [B]. Padded rows (>= chunk_len) replicate position
+    ``offset`` so their softmax stays finite; outputs there are discarded by
+    callers. Returns (out [B, C, H, D], cache_k', cache_v').
+    """
+    b, c, h, d = q.shape
+    s_max = cache_k.shape[1]
+    hkv = cache_k.shape[2]
+    g = h // hkv
+    rel = jnp.arange(c)
+    positions = offset[:, None] + rel[None, :]                    # [B, C]
+    valid = rel[None, :] < chunk_len[:, None]                     # [B, C]
+
+    # W port: scatter valid chunk rows; padded lanes routed out of bounds.
+    dest = jnp.where(valid, positions, s_max)
+    bidx = jnp.arange(b)[:, None]
+    cache_k = cache_k.at[bidx, dest].set(new_k.astype(cache_k.dtype),
+                                         mode="drop")
+    cache_v = cache_v.at[bidx, dest].set(new_v.astype(cache_v.dtype),
+                                         mode="drop")
+
+    # R port: dense causal attention over the updated cache.
+    f32 = jnp.float32
+    qg = q.reshape(b, c, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    sc = jnp.einsum("bchgd,bshd->bchgs", qg, cache_k.astype(qg.dtype),
+                    preferred_element_type=f32) * scale
+    kpos = jnp.arange(s_max)
+    qpos = jnp.where(valid, positions, offset[:, None])
+    mask = kpos[None, None, :] <= qpos[..., None]                 # [B, C, S]
+    sc = jnp.where(mask[:, :, None, None, :], sc, -jnp.inf)
+    pr = jax.nn.softmax(sc, axis=-1).astype(cache_v.dtype)
+    oc = jnp.einsum("bchgs,bshd->bchgd", pr, cache_v,
+                    preferred_element_type=f32)
+    return oc.astype(q.dtype).reshape(b, c, h, d), cache_k, cache_v
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True) -> jax.Array:
     """Dense softmax attention with GQA. q:[B,H,Sq,D], k/v:[B,Hkv,Sk,D]."""

@@ -1,0 +1,52 @@
+"""Shared tiling helpers for the length-bounded KV-cache kernels
+(`kv_multiport` decode, `kv_prefill_chunk` chunked prefill).
+
+Both kernels traverse the cache in ``seq_tile``-sized tiles and bound the
+traversal to a static live prefix: the wrapper slices the caches to
+``live_len`` words before launching (so the grid covers only live tiles)
+and splices the computed prefix back afterwards, returning the suffix
+untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fit_seq_tile(s: int, seq_tile: int) -> int:
+    """Largest tile <= seq_tile that divides s (clamp instead of crash for
+    capacities that are not tile-multiples). The serving engine never relies
+    on this fallback — its staging buckets are whole tile counts — but
+    direct kernel callers with awkward caches degrade gracefully."""
+    t = max(1, min(seq_tile, s))
+    while s % t:
+        t -= 1
+    return t
+
+
+def iota(n: int, dtype=jnp.int32) -> jax.Array:
+    """1-D iota via the TPU-legal 2-D broadcasted form."""
+    return jax.lax.broadcasted_iota(dtype, (n, 1), 0)[:, 0]
+
+
+def slice_live(cache_k: jax.Array, cache_v: jax.Array,
+               live_len: int | None) -> tuple[jax.Array, jax.Array, int]:
+    """Bound two [B, S, ...] caches to the static live prefix.
+
+    Returns (k_prefix, v_prefix, bound) where bound == S when live_len is
+    None or does not actually shrink the cache."""
+    s = cache_k.shape[1]
+    bound = s if live_len is None else max(1, min(live_len, s))
+    if bound < s:
+        return cache_k[:, :bound], cache_v[:, :bound], bound
+    return cache_k, cache_v, bound
+
+
+def restore_live(full_k: jax.Array, full_v: jax.Array, out_k: jax.Array,
+                 out_v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Splice computed prefixes back over the full caches (no-op when the
+    traversal was unbounded)."""
+    if out_k.shape[1] < full_k.shape[1]:
+        out_k = jax.lax.dynamic_update_slice(full_k, out_k, (0, 0, 0, 0))
+        out_v = jax.lax.dynamic_update_slice(full_v, out_v, (0, 0, 0, 0))
+    return out_k, out_v

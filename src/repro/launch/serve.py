@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.launch.specs import seq_tile_buckets
 from repro.models import init_params
 from repro.serve.engine import MultiPortEngine
 
@@ -29,6 +30,13 @@ def main() -> None:
     ap.add_argument("--chunk-tokens", type=int, default=16,
                     help="prefill chunk size (tokens per admission per cycle)")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seq-tile", type=int, default=None,
+                    help="KV-cache tile size for length-bounded traversals "
+                         "(default: min(64, max_len)); validated against "
+                         "--max-len's bucket ladder at startup")
+    ap.add_argument("--no-length-bound", action="store_true",
+                    help="disable live-length bounding (stage full max_len "
+                         "caches every step — the unbounded baseline)")
     ap.add_argument("--single-port", action="store_true")
     ap.add_argument("--kernel-mode", default="pallas",
                     choices=["pallas", "reference"])
@@ -40,6 +48,14 @@ def main() -> None:
     cfg = registry.get(args.arch, reduced=args.reduced)
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{args.arch} has a stub frontend; serve a token arch")
+    seq_tile = (min(64, args.max_len) if args.seq_tile is None
+                else args.seq_tile)
+    try:
+        buckets = seq_tile_buckets(args.max_len, seq_tile)
+    except ValueError as e:
+        raise SystemExit(f"--seq-tile: {e}")
+    print(f"length-bounded staging buckets (seq_tile={seq_tile}, "
+          f"S_max={args.max_len}): {list(buckets)}")
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = MultiPortEngine(params, cfg, slots=args.slots,
                           max_slots=max(args.max_slots, args.slots),
@@ -47,6 +63,8 @@ def main() -> None:
                           chunk_tokens=args.chunk_tokens,
                           kernel_mode=args.kernel_mode,
                           single_port=args.single_port,
+                          seq_tile=seq_tile,
+                          length_bound=not args.no_length_bound,
                           interpret=not args.no_interpret)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -64,6 +82,12 @@ def main() -> None:
           f"slots grown to {eng.n_slots}/{eng.max_slots}; prefill "
           f"{eng.prefill_traversals / max(eng.prefill_tokens, 1):.3f} "
           f"traversals/prompt-token over {eng.prefill_steps} chunk cycles")
+    print(f"tile reads (seq_tile={eng.seq_tile}): decode "
+          f"{eng.steady_decode_tile_reads} steady "
+          f"(bound {eng.steady_decode_tile_bound}), prefill "
+          f"{eng.prefill_tile_reads / max(eng.prefill_chunks, 1):.2f}/chunk "
+          f"vs {-(-args.max_len // eng.seq_tile)} dense; pool "
+          f"r/w {eng.pool.tile_reads}/{eng.pool.tile_writes}")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
 

@@ -11,6 +11,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.distributed import sharding as shd
+# re-export: the launcher's --seq-tile startup validation is the SAME bucket
+# ladder the engine's length-bounded dispatch actually stages (single source
+# of truth in memory/paged_kv.py, next to the queue bucketing it mirrors)
+from repro.memory.paged_kv import seq_tile_buckets  # noqa: F401
 from repro.models import init_decode_state, init_params
 from repro.train.train_step import TrainConfig, init_train_state
 

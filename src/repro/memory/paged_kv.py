@@ -18,7 +18,11 @@ appends land first, eviction scrubs reclaim pages before bulk prefill can
 reuse them, and attention reads observe everything written earlier in the
 same macro-cycle (the paper's same-cycle W->R visibility). ``traversals``
 counts physical traversals — the serving engine benchmark divides it by
-generated tokens to measure claim C1 at the system level.
+generated tokens to measure claim C1 at the system level. ``tile_reads`` /
+``tile_writes`` additionally count the DISTINCT ``seq_tile``-word tiles each
+traversal actually touches per port role, so a traversal over a short live
+sequence is visibly cheaper than one over a full-capacity sequence — the
+length-bounded-traversal discipline measured at the pool level.
 
 Each port stream accepts a single ``{"seq": ...}`` dict or a LIST of them
 (multi-sequence transactions): the pool packs all streams of a port into one
@@ -69,6 +73,35 @@ def _bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def seq_tile_buckets(max_len: int, seq_tile: int) -> tuple[int, ...]:
+    """The staging-cache lengths the engine's length-bounded dispatch can
+    stage (and so the shapes its jitted decode / prefill-chunk steps retrace
+    at): power-of-two counts of ``seq_tile`` tiles, the last PADDED up to
+    ``ceil(max_len / seq_tile) * seq_tile`` so every staged length is a
+    whole number of tiles (the kernels never fall back to degenerate
+    tile-1 grids for awkward capacities).
+
+    The single source of truth for the ladder: the engine's ``_stage_len``
+    walks it and ``launch/serve.py`` validates ``--seq-tile`` against it at
+    startup. Raises ValueError when ``seq_tile`` cannot tile a ``max_len``
+    cache.
+    """
+    if seq_tile < 1:
+        raise ValueError(f"seq_tile must be >= 1, got {seq_tile}")
+    if seq_tile > max_len:
+        raise ValueError(
+            f"seq_tile ({seq_tile}) exceeds the model's S_max ({max_len}); "
+            f"the smallest live bucket would overrun the cache")
+    cap = -(-max_len // seq_tile) * seq_tile       # padded full capacity
+    lens = []
+    n = 1
+    while n * seq_tile < cap:
+        lens.append(n * seq_tile)
+        n *= 2
+    lens.append(cap)
+    return tuple(lens)
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "config", "use_kernel",
                                              "interpret"))
 def _pool_step(spec, config, storage, requests, *, use_kernel: bool,
@@ -92,11 +125,15 @@ class PagedPool:
     use_kernel: bool = False
     interpret: bool = True
     traversals: int = 0                # physical pool traversals serviced
+    seq_tile: int = 0                  # words per accounting tile
+    tile_reads: int = 0                # distinct R-port tiles touched
+    tile_writes: int = 0               # distinct W-port tiles touched
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
                dtype=jnp.float32, num_banks: int = 8,
-               use_kernel: bool = False, interpret: bool = True) -> "PagedPool":
+               use_kernel: bool = False, interpret: bool = True,
+               seq_tile: int = 0) -> "PagedPool":
         num_words = n_pages * page_tokens
         while num_words % num_banks:
             num_banks //= 2                       # geometry guard
@@ -106,7 +143,8 @@ class PagedPool:
         return cls(spec=spec, page_tokens=page_tokens,
                    storage=spec.init_storage(),
                    free_pages=list(range(n_pages)), tables={}, lengths={},
-                   use_kernel=use_kernel, interpret=interpret)
+                   use_kernel=use_kernel, interpret=interpret,
+                   seq_tile=seq_tile or page_tokens)
 
     # ---- control plane ------------------------------------------------------
     def _ensure_capacity(self, seq: int, new_tokens: int) -> None:
@@ -221,6 +259,8 @@ class PagedPool:
 
         reqs = [empty_request(q, self.spec.word_width, self.spec.dtype)
                 for _ in range(4)]
+        w_tiles: set = set()               # distinct W-port tiles this cycle
+        r_tiles: set = set()               # distinct R-port tiles this cycle
 
         def _write_req(streams):
             addr = np.zeros(q, np.int32)
@@ -237,6 +277,7 @@ class PagedPool:
                 mask[at:at + t] = True
                 self.lengths[seq] += t
                 at += t
+            w_tiles.update(np.unique(addr[:at] // self.seq_tile).tolist())
             return PortRequest(addr=jnp.asarray(addr),
                                data=jnp.asarray(data, self.spec.dtype),
                                mask=jnp.asarray(mask))
@@ -252,6 +293,7 @@ class PagedPool:
                      + np.arange(self.page_tokens)[None, :]).reshape(-1)
             addr[: len(words)] = words
             mask[: len(words)] = True
+            w_tiles.update(np.unique(words // self.seq_tile).tolist())
             reqs[SCRUB] = PortRequest(
                 addr=jnp.asarray(addr),
                 data=jnp.zeros((q, self.spec.word_width), self.spec.dtype),
@@ -267,6 +309,7 @@ class PagedPool:
                 mask[at:at + len(pos)] = True
                 slices.append((at, at + len(pos)))
                 at += len(pos)
+            r_tiles.update(np.unique(addr[:at] // self.seq_tile).tolist())
             reqs[ATTN_READ] = PortRequest(
                 addr=jnp.asarray(addr),
                 data=jnp.zeros((q, self.spec.word_width), self.spec.dtype),
@@ -280,6 +323,8 @@ class PagedPool:
                                        use_kernel=self.use_kernel,
                                        interpret=self.interpret)
         self.traversals += 1
+        self.tile_writes += len(w_tiles)
+        self.tile_reads += len(r_tiles)
         if not reads:
             return {"read": None}
         got = [out[ATTN_READ][a:b] for a, b in slices]

@@ -131,6 +131,9 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
                             pos_embed: str = "rope",
                             rope_theta: float = 10000.0,
                             mrope_sections=(16, 24, 24),
+                            kernel_mode: Literal["reference", "multiport"] = "reference",
+                            seq_tile: int = 128,
+                            interpret: bool = True,
                             compute_dtype=None):
     """One fixed-size prompt chunk per sequence, mid-prefill.
 
@@ -138,7 +141,10 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
     serviced as a 2-port memory — the W port scatters the chunk's K,V at
     positions [offset, offset+chunk_len) and the R port attends causally over
     everything cached so far INCLUDING the just-written chunk (same-cycle
-    W->R visibility, exactly the FSM's priority order).
+    W->R visibility, exactly the FSM's priority order). ``kernel_mode``
+    selects the fused length-bounded Pallas traversal (``"multiport"``, tiles
+    [0, ceil((offset+chunk_len)/seq_tile)) only) or the two-pass jnp oracle
+    (``"reference"``, an O(S_max) dense read per chunk).
 
     x: [B, C, d] chunk activations (rows >= chunk_len are padding);
     offset/chunk_len: [B] int32 per-sequence cache offset / valid-row count;
@@ -146,7 +152,6 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
     Padded rows produce garbage outputs — callers gather row chunk_len-1.
     """
     b, c = x.shape[:2]
-    s_max = cache_k.shape[1]
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, compute_dtype)
     rel = jnp.arange(c)
     positions = offset[:, None] + rel[None, :]                    # [B, C]
@@ -158,31 +163,18 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
         q = L.rope_apply(q, positions, rope_theta)
         k = L.rope_apply(k, positions, rope_theta)
 
-    # W port (priority A): scatter valid chunk rows; padded lanes are routed
-    # out of bounds and dropped by the scatter.
-    valid = rel[None, :] < chunk_len[:, None]                     # [B, C]
-    dest = jnp.where(valid, positions, s_max)
-    bidx = jnp.arange(b)[:, None]
-    cache_k = cache_k.at[bidx, dest].set(k.astype(cache_k.dtype), mode="drop")
-    cache_v = cache_v.at[bidx, dest].set(v.astype(cache_v.dtype), mode="drop")
-
-    # R port (priority B): causal attention over the updated cache.
-    g = n_heads // n_kv_heads
-    f32 = jnp.float32
-    qg = q.reshape(b, c, n_kv_heads, g, head_dim)
-    scale = 1.0 / (head_dim ** 0.5)
-    sc = jnp.einsum("bchgd,bshd->bchgs", qg, cache_k.astype(qg.dtype),
-                    preferred_element_type=f32) * scale
-    kpos = jnp.arange(s_max)
-    # padded query rows replicate the chunk's first row so their softmax
-    # stays finite (their outputs are discarded anyway)
-    qpos = jnp.where(valid, positions, offset[:, None])
-    mask = kpos[None, None, :] <= qpos[..., None]                 # [B, C, S]
-    sc = jnp.where(mask[:, :, None, None, :], sc, -jnp.inf)
-    pr = jax.nn.softmax(sc, axis=-1).astype(cache_v.dtype)
-    oc = jnp.einsum("bchgs,bshd->bchgd", pr, cache_v,
-                    preferred_element_type=f32)
-    out = oc.astype(q.dtype).reshape(b, c, n_heads * head_dim)
+    new_k = k.astype(cache_k.dtype)
+    new_v = v.astype(cache_v.dtype)
+    if kernel_mode == "multiport":
+        from repro.kernels import ops
+        out, cache_k, cache_v = ops.fused_prefill_chunk_attention(
+            q, cache_k, cache_v, new_k, new_v, offset, chunk_len,
+            seq_tile=seq_tile, interpret=interpret)
+    else:
+        from repro.kernels import ref
+        out, cache_k, cache_v = ref.prefill_chunk_attention_ref(
+            q, cache_k, cache_v, new_k, new_v, offset, chunk_len)
+    out = out.reshape(b, c, n_heads * head_dim)
     return L.linear(p["wo"], out, compute_dtype), cache_k, cache_v
 
 
@@ -192,10 +184,15 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      pos_embed: str = "rope", rope_theta: float = 10000.0,
                      mrope_sections=(16, 24, 24),
                      kernel_mode: Literal["reference", "multiport"] = "reference",
+                     seq_tile: int = 128, length_mask: bool = True,
                      interpret: bool = True,
                      compute_dtype=None):
     """One decode step. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, D];
     cache_len: [B] current lengths. Returns (out [B,1,d], k', v').
+
+    The multiport path traverses ``seq_tile``-sized cache tiles and, under
+    ``length_mask``, skips tiles past each sequence's live length — callers
+    additionally bound S_max itself by staging a bucketed live prefix.
     """
     b = x.shape[0]
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, compute_dtype)
@@ -217,7 +214,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
         from repro.kernels import ops
         out, cache_k, cache_v = ops.fused_decode_attention(
             q1, cache_k, cache_v, new_k, new_v, cache_len,
-            interpret=interpret)
+            seq_tile=seq_tile, length_mask=length_mask, interpret=interpret)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.decode_attention_ref(

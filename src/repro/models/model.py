@@ -237,9 +237,15 @@ def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
 # --------------------------------------------------------------------------
 
 def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
-                *, kernel_mode: str = "reference", interpret: bool = True
+                *, kernel_mode: str = "reference", seq_tile: int = 128,
+                length_mask: bool = True, interpret: bool = True
                 ) -> tuple[PyTree, jax.Array]:
-    """Returns (state', logits [B, V])."""
+    """Returns (state', logits [B, V]).
+
+    ``seq_tile``/``length_mask`` bound the multiport kernel's traversal to
+    live cache tiles; callers bound the allocated length itself by passing a
+    state whose caches hold a bucketed live prefix (the engine does both).
+    """
     inputs = batch["inputs"]
     x = _stem(params, cfg, inputs, offset=state["len"])
 
@@ -248,6 +254,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             pl, ck, cv = xs
             h, ck, cv = B.transformer_block_decode(
                 pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
+                seq_tile=seq_tile, length_mask=length_mask,
                 interpret=interpret)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
@@ -271,6 +278,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             pg, ck, cv, conv, ssm_s = xs
             h, ck, cv = B.transformer_block_decode(
                 shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
+                seq_tile=seq_tile, length_mask=length_mask,
                 interpret=interpret)
 
             def inner(hh, ys):
@@ -375,8 +383,9 @@ def prefill(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
 # chunked prefill (populate caches one fixed-size chunk per macro-cycle)
 # --------------------------------------------------------------------------
 
-def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
-                  ) -> tuple[PyTree, jax.Array]:
+def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
+                  *, kernel_mode: str = "reference", seq_tile: int = 128,
+                  interpret: bool = True) -> tuple[PyTree, jax.Array]:
     """Process ONE fixed-size prompt chunk for a batch of sequences.
 
     The continuous-batching prefill step: each sequence contributes its next
@@ -384,7 +393,10 @@ def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
     different sequences are stacked into one padded batch, and every chunk's
     K,V is written into the cache at [len, len+chunk_len) while attention
     reads back over everything cached so far — the cache serviced as a
-    2-port (1W+1R) memory, same as decode.
+    2-port (1W+1R) memory, same as decode. Under
+    ``kernel_mode="multiport"`` both ports run through the fused Pallas
+    traversal bounded to live ``seq_tile``-tiles; ``"reference"`` keeps the
+    two-pass jnp oracle and its O(S_max) dense read.
 
     batch: {"inputs": ids [B, C], "chunk_len": [B] valid rows per sequence}.
     Returns (state', logits [B, V]) where the logits row for each sequence is
@@ -402,7 +414,8 @@ def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
     def body(h, xs):
         pl, ck, cv = xs
         h, ck, cv = B.transformer_block_prefill_chunk(
-            pl, h, offset, chunk_len, ck, cv, cfg)
+            pl, h, offset, chunk_len, ck, cv, cfg, kernel_mode=kernel_mode,
+            seq_tile=seq_tile, interpret=interpret)
         return h, (ck, cv)
     x, (ck, cv) = jax.lax.scan(
         body, x, (params["layers"], state["cache_k"], state["cache_v"]))

@@ -43,6 +43,16 @@ read-traversal) port transactions — the baseline the benchmark compares
 traversal counts against. ``single_port=True`` additionally services ONE
 engine port per macro-cycle (the paper's bare-macro comparison).
 
+Traversals are LENGTH-BOUNDED (``length_bound=True``, pallas mode): both
+the decode and chunked-prefill staging caches cover only the batch's live
+length rounded up to a power-of-two count of ``seq_tile`` tiles (retraces
+stay at tile-count buckets, mirroring the slot buckets), and the kernels
+skip tiles past each sequence's own live length under ``pl.when`` — so
+per-token read traffic scales with ``cache_len``, not the allocated
+``max_len``. ``decode_tile_reads`` / ``prefill_tile_reads`` count the tiles
+actually touched; ``steady_decode_tile_bound`` is the ideal
+``ceil((cache_len+1)/seq_tile)`` budget the CI bench gate checks against.
+
 ``interpret=True`` (default) executes the Pallas kernels in Python — the
 CPU-CI escape hatch; pass ``False`` on TPU deployments to lower through
 Mosaic.
@@ -61,7 +71,8 @@ from repro.configs.base import ArchConfig
 from repro.core import fsm
 from repro.core.clockgen import build_schedule
 from repro.core.ports import READ, WRITE, PortConfig
-from repro.memory.paged_kv import PagedPool, _bucket
+from repro.kernels.tiling import fit_seq_tile
+from repro.memory.paged_kv import PagedPool, _bucket, seq_tile_buckets
 from repro.models import decode_step, prefill_chunk
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
@@ -93,11 +104,14 @@ class MultiPortEngine:
                  prefill_bucket: int = 32, chunk_tokens: Optional[int] = None,
                  kernel_mode: str = "pallas", single_port: bool = False,
                  greedy: bool = True, page_tokens: int = 8,
+                 seq_tile: int = 128, length_bound: bool = True,
                  interpret: bool = True):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
             raise ValueError(f"unknown kernel_mode: {kernel_mode!r}")
+        if seq_tile < 1:
+            raise ValueError(f"seq_tile must be >= 1, got {seq_tile}")
         self.params, self.cfg = params, cfg
         self.max_slots = slots if max_slots is None else max_slots
         if self.max_slots < slots:
@@ -109,6 +123,21 @@ class MultiPortEngine:
         self.kernel_mode = kernel_mode
         self.single_port = single_port
         self.interpret = interpret
+        # length-bounded traversals: staging caches (and so the Pallas
+        # kernels' tile grids) cover the batch's LIVE length rounded up to a
+        # power-of-two count of seq_tile tiles, not the allocated max_len.
+        # The ladder is the same one launch/serve validates --seq-tile
+        # against; every entry is a whole number of tiles (the last padded
+        # past max_len if needed) so kernels never fall back to degenerate
+        # fit-down tile sizes.
+        self.seq_tile = min(seq_tile, max_len)
+        self.length_bound = length_bound
+        self._stage_buckets = seq_tile_buckets(max_len, self.seq_tile)
+        # padded batch rows carry the Pallas kernels' dead-row sentinel
+        # (cache_len/offset -1: zero tiles serviced) so tile accounting
+        # stays exact under padding; the jnp reference keeps 0 (its dense
+        # read needs finite positions)
+        self._dead_row = -1 if kernel_mode == "pallas" else 0
 
         # physical pool: word = one token's (K, V) across all layers, sized
         # for the FULL grown slot table
@@ -118,7 +147,7 @@ class MultiPortEngine:
         self.pool = PagedPool.create(
             n_pages=n_pages, page_tokens=page_tokens, word_width=word_width,
             dtype=jnp.float32, use_kernel=(kernel_mode == "pallas"),
-            interpret=interpret)
+            interpret=interpret, seq_tile=self.seq_tile)
 
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_len: list[int] = [0] * slots      # tokens committed to pool
@@ -136,16 +165,27 @@ class MultiPortEngine:
         self.prefill_steps = 0          # macro-cycles that carried chunk traffic
         self.prefill_traversals = 0     # pool traversals those cycles needed
         self.prefill_tokens = 0         # prompt tokens committed to the pool
+        self.prefill_chunks = 0         # per-slot chunk computations
+        # tile accounting: seq_tile-sized staging-cache tiles the attention
+        # kernels' R ports touch (per slot per layer-normalized traversal)
+        self.decode_tile_reads = 0
+        self.steady_decode_tile_reads = 0
+        self.steady_decode_tile_bound = 0   # sum of ceil((len+1)/seq_tile)
+        self.prefill_tile_reads = 0
         self.port_log: list[tuple[int, ...]] = []
         self._next_rid = 0
         self._sp_rotate = 0
 
         attn_mode = "multiport" if kernel_mode == "pallas" else "reference"
+        tile = self.seq_tile
         self._decode = jax.jit(
             lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
+                                        seq_tile=tile,
+                                        length_mask=length_bound,
                                         interpret=interpret))
         self._prefill_chunk = jax.jit(
-            lambda p, s, b: prefill_chunk(p, cfg, s, b))
+            lambda p, s, b: prefill_chunk(p, cfg, s, b, kernel_mode=attn_mode,
+                                          seq_tile=tile, interpret=interpret))
 
     # ---- client API --------------------------------------------------------
     @property
@@ -210,6 +250,32 @@ class MultiPortEngine:
                 self._prefilling.pop(i, None)
         return freed
 
+    def _stage_len(self, need: int) -> int:
+        """Length-bounded staging-cache size for this cycle: the smallest
+        ladder bucket (power-of-two counts of seq_tile tiles — see
+        ``seq_tile_buckets``) covering ``need`` live tokens, so jit retraces
+        stay at tile-count buckets like the slot buckets. Unbounded pallas
+        stages the padded full capacity; the jnp reference stages max_len."""
+        if self.kernel_mode != "pallas":
+            return self.max_len
+        if not self.length_bound:
+            return self._stage_buckets[-1]
+        for b in self._stage_buckets:
+            if b >= need:
+                return b
+        return self._stage_buckets[-1]
+
+    def _tiles_touched(self, needs: list, stage_s: int,
+                       bounded: bool) -> tuple[int, int]:
+        """(tiles the kernel's R port touches, ideal ceil-bound) summed over
+        the traversals of ``needs`` live-lengths against a ``stage_s``-long
+        staging cache. Unbounded traversals touch every grid tile."""
+        tile = fit_seq_tile(stage_s, self.seq_tile)
+        grid = stage_s // tile
+        bound = sum(min(-(-n // tile), grid) for n in needs)
+        touched = bound if bounded else grid * len(needs)
+        return touched, bound
+
     def _kv_words(self, cache_k, cache_v, slot: int, t0: int, t1: int
                   ) -> np.ndarray:
         """Flatten cache positions [t0, t1) of one slot into pool words."""
@@ -243,14 +309,21 @@ class MultiPortEngine:
             return []
 
         # one padded chunk batch across all prefilling slots (batch dim
-        # bucketed to a power of two so admissions don't retrace the jit)
+        # bucketed to a power of two so admissions don't retrace the jit);
+        # the staging caches cover a bucketed LIVE prefix, not max_len, so
+        # the chunk kernel's tile grid is bounded by the longest live prefix
         order = sorted(self._prefilling)
         c = self.chunk_tokens
         nb = _bucket(len(order), lo=1)
+        needs = [self._prefilling[s].consumed
+                 + min(c, len(self.slot_req[s].prompt)
+                       - self._prefilling[s].consumed) for s in order]
+        stage_s = self._stage_len(max(needs))
+        live = min(stage_s, self.max_len)   # last bucket may pad past max_len
         toks = np.zeros((nb, c), np.int32)
         clen = np.zeros((nb,), np.int32)
-        offs = np.zeros((nb,), np.int32)
-        stage_k = np.zeros((nl, nb, self.max_len, hkv, hd), np.float32)
+        offs = np.full((nb,), self._dead_row, np.int32)
+        stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
         stage_v = np.zeros_like(stage_k)
         for j, slot in enumerate(order):
             ps = self._prefilling[slot]
@@ -260,8 +333,8 @@ class MultiPortEngine:
             toks[j, :n] = req.prompt[t0:t0 + n]
             clen[j] = n
             offs[j] = t0
-            stage_k[:, j] = ps.stage_k
-            stage_v[:, j] = ps.stage_v
+            stage_k[:, j, :live] = ps.stage_k[:, :live]
+            stage_v[:, j, :live] = ps.stage_v[:, :live]
 
         state = {"len": jnp.asarray(offs),
                  "cache_k": jnp.asarray(stage_k),
@@ -271,13 +344,20 @@ class MultiPortEngine:
                                           "chunk_len": jnp.asarray(clen)})
         ck, cv = np.asarray(st["cache_k"]), np.asarray(st["cache_v"])
         lg = np.asarray(logits)
+        # the chunk kernel masks dead tiles per sequence; the jnp reference
+        # reads the whole staged cache densely per chunk
+        touched, _ = self._tiles_touched(needs, stage_s,
+                                         bounded=self.kernel_mode == "pallas")
+        self.prefill_tile_reads += touched
+        self.prefill_chunks += len(order)
 
         streams = []
         for j, slot in enumerate(order):
             ps = self._prefilling[slot]
             req = self.slot_req[slot]
             t0, n = int(offs[j]), int(clen[j])
-            ps.stage_k, ps.stage_v = ck[:, j], cv[:, j]
+            ps.stage_k[:, :live] = ck[:, j, :live]
+            ps.stage_v[:, :live] = cv[:, j, :live]
             streams.append({"seq": req.rid,
                             "vectors": self._kv_words(ck, cv, j, t0, t0 + n)})
             ps.consumed = t0 + n
@@ -310,16 +390,22 @@ class MultiPortEngine:
         """Tokens the slot will hold once this cycle's append commits."""
         return self.slot_len[slot] + (1 if slot in self._pending else 0)
 
-    def _compute_decode(self, active: list, gathered: list) -> None:
+    def _compute_decode(self, active: list, gathered: list) -> tuple[int, int]:
         """Run one fused decode step for all active slots over staging caches
         assembled from the pool gather; stash each slot's new KV word as the
         next cycle's append. The staging batch is padded to a power-of-two
-        bucket so slot-pool growth retraces the jit only at bucket edges."""
+        bucket so slot-pool growth retraces the jit only at bucket edges, and
+        the staging LENGTH covers a bucketed count of live seq_tile tiles so
+        the decode kernel's grid scales with cache_len, not max_len.
+
+        Returns (R-port tiles touched, ideal per-slot ceil tile bound)."""
         nl, _, hkv, hd = self._kv_dims
         nb = _bucket(len(self.slot_req), lo=self._init_slots)
-        stage_k = np.zeros((nl, nb, self.max_len, hkv, hd), np.float32)
+        needs = [rows.shape[0] + 1 for rows in gathered]  # post-append lens
+        stage_s = self._stage_len(max(needs, default=1))
+        stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
         stage_v = np.zeros_like(stage_k)
-        lens = np.zeros((nb,), np.int32)
+        lens = np.full((nb,), self._dead_row, np.int32)
         last_tokens = np.zeros((nb, 1), np.int32)
         for i, rows in zip(active, gathered):
             t = rows.shape[0]
@@ -345,6 +431,8 @@ class MultiPortEngine:
             r.generated.append(int(nxt[i]))
             if len(r.generated) >= r.max_new:
                 r.done = True
+        bounded = self.kernel_mode == "pallas" and self.length_bound
+        return self._tiles_touched(needs, stage_s, bounded=bounded)
 
     def _service_status(self) -> dict:
         return {"cycle": self.cycles,
@@ -424,10 +512,13 @@ class MultiPortEngine:
         if active:
             self.decode_steps += 1
             self.decode_traversals += dt
+            tiles, bound = self._compute_decode(active, gathered)
+            self.decode_tile_reads += tiles
             if appends:
                 self.steady_decode_steps += 1
                 self.steady_decode_traversals += dt
-            self._compute_decode(active, gathered)
+                self.steady_decode_tile_reads += tiles
+                self.steady_decode_tile_bound += bound
 
         self.cycles += 1
         self.port_log.append(slots)

@@ -51,6 +51,95 @@ def test_fused_decode_edge_positions(rng):
         np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r))
 
 
+@pytest.mark.parametrize("s,tile", [(100, 64), (63, 32), (33, 8)])
+def test_fused_decode_odd_capacity(rng, s, tile):
+    """Regression: S_max not a multiple of seq_tile must clamp the tile to
+    the largest divisor instead of crashing on the divisibility assert."""
+    b, hkv, g, d = 2, 2, 2, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    lens = jnp.asarray([0, s - 1], jnp.int32)
+    o_r, ck_r, _ = ref.decode_attention_ref(q, ck, cv, nk, nv, lens)
+    o_k, ck_k, _ = ops.fused_decode_attention(q, ck, cv, nk, nv, lens,
+                                              seq_tile=tile)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r))
+
+
+def test_fused_decode_length_bounded(rng):
+    """live_len bounding + per-sequence tile masking are numerically
+    transparent, and the suffix past the bound rides through untouched."""
+    b, s, hkv, g, d, tile = 2, 128, 2, 2, 16, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    lens = jnp.asarray([5, 30], jnp.int32)
+    o_r, ck_r, cv_r = ref.decode_attention_ref(q, ck, cv, nk, nv, lens)
+    for live in (32, 48, s):
+        for mask in (True, False):
+            o_k, ck_k, cv_k = ops.fused_decode_attention(
+                q, ck, cv, nk, nv, lens, seq_tile=tile, live_len=live,
+                length_mask=mask)
+            np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r))
+            np.testing.assert_allclose(np.asarray(cv_k), np.asarray(cv_r))
+    # suffix untouched under the tightest bound
+    o_k, ck_k, cv_k = ops.fused_decode_attention(
+        q, ck, cv, nk, nv, lens, seq_tile=tile, live_len=32)
+    np.testing.assert_array_equal(np.asarray(ck_k)[:, 32:],
+                                  np.asarray(ck)[:, 32:])
+
+
+def test_fused_decode_tile_counts_measured(rng):
+    """The KERNEL-MEASURED serviced-tile counts equal the analytic
+    ceil((cache_len+1)/seq_tile) budget the engine accounts (and the CI
+    bench gate enforces) — masked tiles are genuinely not serviced."""
+    from repro.kernels import kv_multiport as kvmp
+    b, s, hkv, g, d, tile = 3, 128, 2, 2, 16, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    lens = jnp.asarray([0, 17, 100], jnp.int32)
+    *_, tiles = kvmp.fused_append_attend(q, ck, cv, nk, nv, lens,
+                                         seq_tile=tile, return_tiles=True)
+    np.testing.assert_array_equal(np.asarray(tiles),
+                                  [-(-(int(p) + 1) // tile) for p in lens])
+    # live_len bounding doesn't change serviced counts, only the grid
+    *_, tiles = kvmp.fused_append_attend(q, ck, cv, nk, nv, lens,
+                                         seq_tile=tile, live_len=112,
+                                         return_tiles=True)
+    np.testing.assert_array_equal(np.asarray(tiles), [1, 2, 7])
+    # the unbounded comparator really does service every grid tile
+    *_, tiles = kvmp.fused_append_attend(q, ck, cv, nk, nv, lens,
+                                         seq_tile=tile, length_mask=False,
+                                         return_tiles=True)
+    np.testing.assert_array_equal(np.asarray(tiles), [s // tile] * b)
+    # dead-row sentinel (engine batch padding): zero tiles serviced, zero
+    # output, cache row untouched — under BOTH masking modes
+    lens = jnp.asarray([-1, 17, -1], jnp.int32)
+    for mask in (True, False):
+        o, ck_k, cv_k, tiles = kvmp.fused_append_attend(
+            q, ck, cv, nk, nv, lens, seq_tile=tile, length_mask=mask,
+            return_tiles=True)
+        np.testing.assert_array_equal(
+            np.asarray(tiles), [0, s // tile if not mask else 2, 0])
+        np.testing.assert_array_equal(np.asarray(o)[0], 0.0)
+        np.testing.assert_array_equal(np.asarray(ck_k)[0], np.asarray(ck)[0])
+        np.testing.assert_array_equal(np.asarray(cv_k)[2], np.asarray(cv)[2])
+
+
 @pytest.mark.parametrize("b,h,hkv,sq,sk,d,qt,kt", [
     (1, 2, 1, 128, 128, 32, 64, 64),
     (2, 4, 2, 128, 128, 64, 128, 64),

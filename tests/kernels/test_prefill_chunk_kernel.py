@@ -1,0 +1,141 @@
+"""Fused chunked-prefill append+attend kernel vs the jnp oracle: the cache
+serviced as a 2-port (1W+1R) memory with the R port bounded to live tiles
+must agree with the dense two-pass reference for every offset/chunk_len/
+seq_tile/S_max combination (the `attention_prefill_chunk` contract)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.kv_prefill_chunk import fit_seq_tile
+
+
+def _case(rng, b, c, s, hkv, g, d, lo_off=0):
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, c, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    off = jnp.asarray(rng.integers(lo_off, s - c + 1, b), jnp.int32)
+    cl = jnp.asarray(rng.integers(0, c + 1, b), jnp.int32)
+    return q, ck, cv, nk, nv, off, cl
+
+
+def _assert_matches(q, ck, cv, nk, nv, off, cl, *, seq_tile, live_len=None):
+    o_r, ck_r, cv_r = ref.prefill_chunk_attention_ref(q, ck, cv, nk, nv,
+                                                      off, cl)
+    o_k, ck_k, cv_k = ops.fused_prefill_chunk_attention(
+        q, ck, cv, nk, nv, off, cl, seq_tile=seq_tile, live_len=live_len)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cv_k), np.asarray(cv_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("b,c,s,hkv,g,d,tile", [
+    (1, 4, 32, 1, 1, 16, 8),
+    (2, 8, 64, 2, 2, 16, 16),
+    (3, 4, 33, 1, 2, 8, 8),       # S_max not a tile multiple: clamp, no crash
+    (2, 5, 50, 2, 1, 16, 16),
+])
+def test_fused_prefill_chunk_sweep(rng, b, c, s, hkv, g, d, tile):
+    _assert_matches(*_case(rng, b, c, s, hkv, g, d), seq_tile=tile)
+
+
+def test_fused_prefill_chunk_live_len_bound(rng):
+    """Bounding the traversal to a bucketed live prefix leaves the suffix
+    untouched and changes nothing numerically."""
+    b, c, s, hkv, g, d, tile = 2, 4, 64, 2, 2, 16, 8
+    q, ck, cv, nk, nv, _, cl = _case(rng, b, c, s, hkv, g, d)
+    off = jnp.asarray([0, 3], jnp.int32)       # live prefix well under S_max
+    need = int(np.max(np.asarray(off) + np.asarray(cl)))
+    n_tiles = 1
+    while n_tiles * tile < need:
+        n_tiles *= 2
+    live = min(n_tiles * tile, s)
+    _assert_matches(q, ck, cv, nk, nv, off, cl, seq_tile=tile, live_len=live)
+    # the suffix [live, S) must ride through bit-identical
+    _, ck_k, cv_k = ops.fused_prefill_chunk_attention(
+        q, ck, cv, nk, nv, off, cl, seq_tile=tile, live_len=live)
+    np.testing.assert_array_equal(np.asarray(ck_k)[:, live:],
+                                  np.asarray(ck)[:, live:])
+    np.testing.assert_array_equal(np.asarray(cv_k)[:, live:],
+                                  np.asarray(cv)[:, live:])
+
+
+def test_fused_prefill_chunk_zero_len_rows(rng):
+    """chunk_len = 0 (a padded batch row): nothing written, finite output."""
+    b, c, s, hkv, g, d = 2, 4, 32, 1, 1, 8
+    q, ck, cv, nk, nv, off, _ = _case(rng, b, c, s, hkv, g, d, lo_off=1)
+    cl = jnp.zeros((b,), jnp.int32)
+    _assert_matches(q, ck, cv, nk, nv, off, cl, seq_tile=8)
+    o_k, ck_k, _ = ops.fused_prefill_chunk_attention(
+        q, ck, cv, nk, nv, off, cl, seq_tile=8)
+    assert np.isfinite(np.asarray(o_k)).all()
+    np.testing.assert_array_equal(np.asarray(ck_k), np.asarray(ck))
+
+
+def test_fused_prefill_chunk_tile_counts_measured(rng):
+    """KERNEL-MEASURED serviced-tile counts match the analytic bound the
+    engine accounts: tiles [0, ceil((offset+chunk_len)/seq_tile)) only."""
+    from repro.kernels.kv_prefill_chunk import fused_chunk_append_attend
+    b, c, s, hkv, g, d, tile = 3, 4, 64, 1, 1, 8, 8
+    q, ck, cv, nk, nv, _, _ = _case(rng, b, c, s, hkv, g, d)
+    off = jnp.asarray([0, 10, 40], jnp.int32)
+    cl = jnp.asarray([4, 3, 0], jnp.int32)
+    *_, tiles = fused_chunk_append_attend(q, ck, cv, nk, nv, off, cl,
+                                          seq_tile=tile, return_tiles=True)
+    # last query position is offset + max(chunk_len-1, 0)
+    want = [(-(-(int(o) + int(n)) // tile)) if int(n) else int(o) // tile + 1
+            for o, n in zip(off, cl)]
+    np.testing.assert_array_equal(np.asarray(tiles), want)   # [1, 2, 6]
+    # dead-row sentinel (engine batch padding): offset -1 services nothing
+    off = jnp.asarray([-1, 10, -1], jnp.int32)
+    o, ck_k, cv_k, tiles = fused_chunk_append_attend(
+        q, ck, cv, nk, nv, off, cl, seq_tile=tile, return_tiles=True)
+    np.testing.assert_array_equal(np.asarray(tiles), [0, 2, 0])
+    np.testing.assert_array_equal(np.asarray(o)[0], 0.0)
+    np.testing.assert_array_equal(np.asarray(ck_k)[0], np.asarray(ck)[0])
+    np.testing.assert_array_equal(np.asarray(cv_k)[2], np.asarray(cv)[2])
+
+
+def test_fit_seq_tile():
+    assert fit_seq_tile(64, 128) == 64
+    assert fit_seq_tile(64, 16) == 16
+    assert fit_seq_tile(33, 8) == 3          # largest divisor <= 8
+    assert fit_seq_tile(63, 32) == 21
+    assert fit_seq_tile(7, 1) == 1
+
+
+def test_fused_prefill_chunk_property(rng):
+    """Property (CI installs the ``dev`` extra; skips locally): kernel ==
+    oracle over random offset / chunk_len / seq_tile / S_max."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=20, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(
+        b=st.integers(1, 3),
+        c=st.integers(1, 6),
+        s_extra=st.integers(0, 40),
+        hkv=st.sampled_from([1, 2]),
+        g=st.sampled_from([1, 2]),
+        seq_tile=st.sampled_from([1, 4, 8, 16, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data())
+    def prop(b, c, s_extra, hkv, g, seq_tile, seed, data):
+        s = c + s_extra                      # S_max always fits the chunk
+        d = 8
+        r = np.random.default_rng(seed)
+        q, ck, cv, nk, nv, off, cl = _case(r, b, c, s, hkv, g, d)
+        # any live bound covering the written range must be transparent
+        need = int(np.max(np.asarray(off) + np.asarray(cl)))
+        live = data.draw(st.one_of(st.none(),
+                                   st.integers(max(need, 1), s + 8)),
+                         label="live_len")
+        _assert_matches(q, ck, cv, nk, nv, off, cl, seq_tile=seq_tile,
+                        live_len=live)
+
+    prop()

@@ -80,6 +80,37 @@ def test_prefill_chunk_specs_match_model_contract(setup):
     assert out_state["cache_k"].shape == state["cache_k"].shape
 
 
+def test_seq_tile_buckets_validation():
+    """launch.specs.seq_tile_buckets is the --seq-tile startup validation:
+    the bucket ladder covers S_max in power-of-two tile counts and rejects
+    tiles that cannot tile the cache."""
+    from repro.launch.specs import seq_tile_buckets
+    assert seq_tile_buckets(64, 8) == (8, 16, 32, 64)
+    assert seq_tile_buckets(128, 128) == (128,)
+    # awkward capacity: the tail pads UP to a whole tile count (112 = 7*16)
+    # so staged lengths never need degenerate fit-down tile sizes
+    assert seq_tile_buckets(100, 16) == (16, 32, 64, 112)
+    with pytest.raises(ValueError):
+        seq_tile_buckets(64, 0)
+    with pytest.raises(ValueError):
+        seq_tile_buckets(64, 128)              # tile exceeds S_max
+
+
+def test_engine_stage_lengths_walk_the_bucket_ladder(setup):
+    """The engine's length-bounded dispatch stages exactly the ladder the
+    launcher validates --seq-tile against — including awkward capacities,
+    where the padded tail keeps every staged length a whole tile count."""
+    cfg, params = setup
+    from repro.launch.specs import seq_tile_buckets
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=100, seq_tile=16)
+    ladder = seq_tile_buckets(100, 16)
+    assert eng._stage_buckets == ladder == (16, 32, 64, 112)
+    for need in range(1, 101):
+        got = eng._stage_len(need)
+        assert got in ladder and got >= need
+        assert got % eng.seq_tile == 0
+
+
 def test_chunked_prefill_property(setup):
     """Randomized version (CI installs the ``dev`` extra; skips locally)."""
     hyp = pytest.importorskip("hypothesis")
