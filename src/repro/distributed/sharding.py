@@ -126,22 +126,40 @@ _ATTN_PROJ = re.compile(r"attn/(wq|wk|wv)/(w|b)$")
 
 def _head_aligned(sub: str, spec, mesh: Mesh, r: Rules,
                   cfg: Optional[ArchConfig]):
-    """Drop tp from attention q/k/v projections that would split a head.
+    """Drop tp from attention K/V projections that would split a head.
 
     Megatron-style TP must shard q/k/v on the HEAD boundary: a tp axis that
     does not divide the head count would slice inside a single head's
     ``head_dim`` columns, which breaks RoPE's half-dim pairing (and, on some
-    XLA versions, miscompiles under the layer scan). When the head count does
-    not divide, the projection's output columns replicate — exactly how
-    ``kv_cache_spec`` already guards the cached heads.
+    XLA versions, miscompiles under the layer scan). The GQA-standard
+    fallback — K/V columns replicate while Q still shards — applies when
+    ``n_heads`` divides the tp axis but ``n_kv_heads`` does not
+    (tp > n_kv_heads with grouped queries), exactly how ``kv_cache_spec``
+    already guards the cached heads.
+
+    When even the QUERY heads cannot shard (``n_heads % tp != 0``), the old
+    behavior silently replicated ALL q/k/v columns — attention ran with no
+    tensor parallelism at all, and the only symptom was a quietly flat
+    memory-per-device curve. That mesh/head mismatch is now a hard error;
+    a head-group resharding rule for it stays a ROADMAP item.
     """
     if cfg is None:
         return spec
     m = _ATTN_PROJ.search(sub)
     if not m:
         return spec
+    tp_size = max(_axsize(mesh, r.tp), 1)
+    if cfg.n_heads % tp_size != 0:
+        raise ValueError(
+            f"attention TP mesh/head mismatch for {sub!r}: tp axes "
+            f"{tuple(_flat_axes(r.tp))} (size {tp_size}) do not divide "
+            f"n_heads={cfg.n_heads} (n_kv_heads={cfg.n_kv_heads}) — every "
+            f"q/k/v column would silently replicate, disabling attention "
+            f"tensor parallelism. Shrink the tp axis to a divisor of "
+            f"n_heads, or wait for the head-group resharding rule "
+            f"(ROADMAP: attention TP for tp > head count).")
     heads = cfg.n_heads if m.group(1) == "wq" else cfg.n_kv_heads
-    if heads % max(_axsize(mesh, r.tp), 1) == 0:
+    if heads % tp_size == 0:
         return spec
     tp_axes = set(_flat_axes(r.tp))
 

@@ -14,25 +14,40 @@ KV tile is VMEM-resident, the tile containing ``cache_len`` takes the append
 accumulation (R slot) — W-before-R visibility exactly as the wrapper's FSM
 orders same-cycle traffic, so attention sees the just-appended token.
 
-The traversal is LENGTH-BOUNDED two ways, so per-token read traffic scales
+Geometry is Mosaic-ready (the paper's point that an algorithmic multi-port
+memory only pays off once its geometry matches the target array):
+
+  * the cache is traversed in WORD layout ``[B, Sp, hkv * Dp]`` (see
+    ``tiling.pack_words``): tiles are ``[seq_tile, word]`` with the minor
+    dim a 128-lane multiple (``word_pad``) and per-head columns on lane
+    boundaries; q/out ride as 3-D ``[B, Hp, Dp]`` blocks (the old rank-5
+    ``[1, C, Hkv, G, D]`` shapes do not lower);
+  * per-sequence append positions live in SMEM via scalar prefetch
+    (``PrefetchScalarGridSpec``), not in a vector block.
+
+The traversal is LENGTH-BOUNDED three ways, so per-token read traffic scales
 with the live sequence length instead of the allocated capacity:
 
+  * ``dynamic_grid=True``: the inner grid bound is a RUNTIME scalar — the
+    live-tile count ``ceil((max(cache_len) + 1) / seq_tile)`` computed from
+    the prefetched lengths — so ONE trace services every cache length
+    (``pl.num_programs(1)`` closes the traversal); tiles past the bound are
+    never launched and their (aliased) cache blocks stay untouched.
   * ``live_len`` (static) slices the cache to a bucketed live prefix before
-    launching, bounding the outer grid to ``ceil(live_len / seq_tile)``
-    tiles; the suffix passes through untouched.
+    launching — the retrace-per-bucket fallback the engine keeps for
+    ``dynamic_grid=False``.
   * per-sequence, tiles wholly past ``cache_len`` skip the W/R service
     under ``pl.when`` (``length_mask=True``) and copy their cache block
-    through unchanged — every output block is written on every grid step,
-    so the kernel is safe under compiled Mosaic's output-revolving buffers,
-    not just interpret-mode aliasing. A skipped tile is exactly a no-op of
-    the online softmax (fully-masked tiles keep m/l/acc unchanged), so
-    bounded and unbounded traversals agree bit-for-bit.
+    through unchanged (every LAUNCHED output block is written on every grid
+    step, so the kernel is safe under compiled Mosaic's output-revolving
+    buffers). A skipped tile is exactly a no-op of the online softmax, so
+    bounded, bucketed and dynamic-grid traversals agree bit-for-bit.
   * a sentinel ``cache_len = -1`` marks a DEAD batch row (the engine's
     padded slots): no tile is serviced at all and the attention output is
     zeros — so serviced-tile counts stay exact under batch padding.
 
-Grid: (batch, seq_tiles); accumulators in VMEM scratch, persisted across the
-inner (seq_tiles) grid dimension.
+Grid: (batch, live_tiles); accumulators in VMEM scratch, persisted across
+the inner grid dimension.
 """
 from __future__ import annotations
 
@@ -43,14 +58,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import fit_seq_tile, iota, restore_live, slice_live
+from repro.kernels.tiling import (LANE, SUBLANE, iota, pack_words, pad_dim,
+                                  restore_live, slice_live, unpack_words,
+                                  word_pad)
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
             out_k_ref, out_v_ref, o_ref, t_ref, m_scr, l_scr, acc_scr,
-            n_scr, *, seq_tile: int, n_tiles: int, scale: float,
-            length_mask: bool):
+            n_scr, *, seq_tile: int, hkv: int, g: int, dp: int,
+            scale: float, length_mask: bool):
+    bb = pl.program_id(0)
     t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)          # static OR the dynamic live bound
+    h = hkv * g
 
     @pl.when(t == 0)
     def _init():
@@ -59,7 +79,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
         n_scr[...] = jnp.zeros_like(n_scr)
 
-    p = len_ref[0, 0]                                     # append position
+    p = len_ref[bb]                                       # append pos (SMEM)
     tile_start = t * seq_tile
     # length bound: a tile whose first position is past the append slot holds
     # neither the W-port landing site nor any valid R-port position; a dead
@@ -69,67 +89,83 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
     @pl.when(touched)
     def _service():
         n_scr[0, 0] += 1                                  # serviced-tile count
+        f32 = jnp.float32
         pos = tile_start + iota(seq_tile)                 # global positions [T]
 
-        k_tile = k_ref[0]                                 # [T, Hkv, D]
+        k_tile = k_ref[0]                                 # [T, hkv * Dp]
         v_tile = v_ref[0]
 
         # --- W slot (priority A): append new token if it lands in this tile -
         hit = (pos == p)                                  # [T]
-        k_tile = jnp.where(hit[:, None, None], new_k_ref[0][None], k_tile)
-        v_tile = jnp.where(hit[:, None, None], new_v_ref[0][None], v_tile)
+        k_tile = jnp.where(hit[:, None], new_k_ref[0, 0][None, :], k_tile)
+        v_tile = jnp.where(hit[:, None], new_v_ref[0, 0][None, :], v_tile)
         out_k_ref[0] = k_tile                             # write-thru (aliased)
         out_v_ref[0] = v_tile
 
         # --- R slot (priority B): attention over valid positions (<= p) -----
-        q = q_ref[0]                                      # [Hkv, G, D]
-        f32 = jnp.float32
-        s = jnp.einsum("hgd,thd->hgt", q.astype(f32),
-                       k_tile.astype(f32)) * scale
-        valid = (pos <= p)[None, None, :]                 # new token included
+        # per-kv-head scores on lane-aligned word columns (unrolled over the
+        # small static hkv; each slice is a [G, Dp] x [Dp, T] MXU matmul)
+        q = q_ref[0].astype(f32)                          # [Hp, Dp]
+        dots = (((1,), (1,)), ((), ()))
+        s = jnp.concatenate(
+            [jax.lax.dot_general(q[hk * g:(hk + 1) * g],
+                                 k_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                                 dots, preferred_element_type=f32)
+             for hk in range(hkv)], axis=0) * scale       # [H, T]
+        valid = (pos <= p)[None, :]                       # new token included
         s = jnp.where(valid, s, -jnp.inf)
 
-        m_prev = m_scr[...]                               # [Hkv, G]
+        m_prev = m_scr[:, 0]                              # [H]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         # guard: fully-masked tile keeps m at -inf; exp(-inf - -inf) -> where
         alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
-        pr = jnp.exp(s - m_new[..., None])
-        pr = jnp.where(valid, pr, 0.0)
-        l_new = l_scr[...] * alpha + pr.sum(axis=-1)
-        acc = acc_scr[...] * alpha[..., None]
-        acc = acc + jnp.einsum("hgt,thd->hgd", pr, v_tile.astype(f32))
-
-        m_scr[...] = m_new
-        l_scr[...] = l_new
-        acc_scr[...] = acc
+        pr = jnp.exp(s - m_new[:, None])
+        pr = jnp.where(valid, pr, 0.0)                    # [H, T]
+        l_scr[:, 0] = l_scr[:, 0] * alpha + pr.sum(axis=-1)
+        pv = jnp.concatenate(
+            [jax.lax.dot_general(pr[hk * g:(hk + 1) * g],
+                                 v_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=f32)
+             for hk in range(hkv)], axis=0)               # [H, Dp]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[:, 0] = m_new
 
     @pl.when(jnp.logical_not(touched))
     def _pass_through():
-        # every output block is written every grid step: compiled Mosaic
-        # recycles output VMEM buffers, so an unwritten block would copy
-        # back stale data — the skip saves the W/R service, not the copy
+        # every LAUNCHED output block is written every grid step: compiled
+        # Mosaic recycles output VMEM buffers, so an unwritten block would
+        # copy back stale data — the skip saves the W/R service, not the copy
         out_k_ref[0] = k_ref[0]
         out_v_ref[0] = v_ref[0]
 
     @pl.when(t == n_tiles - 1)
     def _finalize():
-        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
-        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
-        t_ref[0, 0] = n_scr[0, 0]
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        res = (acc_scr[...] / denom).astype(o_ref.dtype)  # [H, Dp]
+        hp = o_ref.shape[1]
+        if hp > h:                                        # head-pad rows
+            res = jnp.concatenate(
+                [res, jnp.zeros((hp - h, dp), o_ref.dtype)], axis=0)
+        o_ref[0] = res
+        t_ref[bb, 0] = n_scr[0, 0]
 
 
 def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                         new_k: jax.Array, new_v: jax.Array,
                         cache_len: jax.Array, *, seq_tile: int = 128,
                         live_len: int | None = None, length_mask: bool = True,
+                        dynamic_grid: bool = False,
                         return_tiles: bool = False, interpret: bool = True
                         ) -> tuple[jax.Array, ...]:
     """One decode step for a batch of sequences.
 
     Args:
       q:        [B, H, D] query for the new token (H = Hkv * G).
-      cache_k:  [B, S, Hkv, D]; cache_v same. When S is not a multiple of
-                seq_tile the tile is clamped to the largest divisor.
+      cache_k:  [B, S, Hkv, D]; cache_v same. S is zero-padded up to a whole
+                tile count before the traversal (and cropped after), so
+                awkward capacities keep aligned tiles instead of degrading
+                the tile size.
       new_k/v:  [B, Hkv, D] the new token's K,V (appended in-kernel).
       cache_len:[B] int32 — current length; the new token is written at this
                 position and attended to (post-append length is cache_len+1).
@@ -138,10 +174,15 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
       live_len: static bound on ``max(cache_len) + 1`` — only cache tiles
                 below it are traversed; the suffix [live_len, S) is returned
                 untouched. Callers bucket it (powers of two of seq_tile) so
-                retraces stay logarithmic.
+                retraces stay logarithmic. Ignored under ``dynamic_grid``.
       length_mask: skip tiles past each sequence's own append position under
                 ``pl.when`` (False restores the unbounded traversal — the
                 benchmark's comparator).
+      dynamic_grid: bound the traversal grid with the RUNTIME live-tile
+                count ``ceil((max(cache_len) + 1) / seq_tile)`` instead of a
+                static prefix — one trace services every cache length.
+                Requires ``length_mask`` (the per-sequence skip is what
+                keeps rows shorter than the batch max exact).
       return_tiles: also return the KERNEL-MEASURED count of serviced tiles
                 per sequence ([B] int32) — the ground truth the host-side
                 tile accounting is pinned against in tests.
@@ -154,51 +195,112 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     h = q.shape[1]
     assert h % hkv == 0, "GQA requires H % Hkv == 0"
     g = h // hkv
+    if dynamic_grid and not length_mask:
+        raise ValueError("dynamic_grid requires length_mask=True: rows "
+                         "shorter than the batch max rely on the tile skip")
 
-    full_k, full_v = cache_k, cache_v
-    cache_k, cache_v, bound = slice_live(cache_k, cache_v, live_len)
-    seq_tile = fit_seq_tile(bound, seq_tile)
-    n_tiles = bound // seq_tile
+    dp = word_pad(d)
+    hp = word_pad(h, SUBLANE)
+    wp = hkv * dp
     scale = 1.0 / (d ** 0.5)
+    seq_tile = max(1, min(seq_tile, s))
 
-    qg = q.reshape(b, hkv, g, d)
-    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+    # word layout: [B, Sp, hkv * Dp], Sp a whole tile count
+    ck_w = pack_words(cache_k, seq_tile)
+    cv_w = pack_words(cache_v, seq_tile)
+    full_k, full_v = ck_w, cv_w
+    if not dynamic_grid:
+        live = None if live_len is None else word_pad(live_len, seq_tile)
+        ck_w, cv_w, bound = slice_live(ck_w, cv_w, live)
+    else:
+        bound = ck_w.shape[1]
+    grid_tiles = bound // seq_tile
 
-    kernel = functools.partial(_kernel, seq_tile=seq_tile, n_tiles=n_tiles,
-                               scale=scale, length_mask=length_mask)
-    out_k, out_v, out, tiles = pl.pallas_call(
-        kernel,
+    lens = cache_len.astype(jnp.int32)
+    if dynamic_grid:
+        # live bound from the scalar lengths: one trace, any cache length
+        n_tiles = jnp.clip((jnp.max(lens) + seq_tile) // seq_tile,
+                           1, grid_tiles)
+    else:
+        n_tiles = grid_tiles
+
+    qp = pad_dim(pad_dim(q, 2, dp), 1, hp)                # [B, Hp, Dp]
+    nk_w = pad_dim(new_k, 2, dp).reshape(b, 1, wp)        # [B, 1, wp]
+    nv_w = pad_dim(new_v, 2, dp).reshape(b, 1, wp)
+
+    kernel = functools.partial(_kernel, seq_tile=seq_tile, hkv=hkv, g=g,
+                               dp=dp, scale=scale, length_mask=length_mask)
+    # block SHAPES come from the same geometry table the Mosaic lint test
+    # checks (decode_block_specs) — the lint cannot drift from the launch
+    blocks = {nm: blk
+              for nm, blk, _ in decode_block_specs(b, bound, h, hkv, d,
+                                                   seq_tile)}
+    per_b = lambda bb, t, L: (bb, 0, 0)       # noqa: E731 — batch-resident
+    per_tile = lambda bb, t, L: (bb, t, 0)    # noqa: E731 — cache traversal
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                            # lens -> SMEM
         grid=(b, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                 # len
-            pl.BlockSpec((1, hkv, g, d), lambda bb, t: (bb, 0, 0, 0)),   # q
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, hkv, d), lambda bb, t: (bb, 0, 0)),         # new_k
-            pl.BlockSpec((1, hkv, d), lambda bb, t: (bb, 0, 0)),         # new_v
+            pl.BlockSpec(blocks["q"], per_b),
+            pl.BlockSpec(blocks["cache_k"], per_tile),
+            pl.BlockSpec(blocks["cache_v"], per_tile),
+            pl.BlockSpec(blocks["new_k"], per_b),
+            pl.BlockSpec(blocks["new_v"], per_b),
         ],
         out_specs=[
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, hkv, g, d), lambda bb, t: (bb, 0, 0, 0)),   # out
-            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),    # serviced tiles
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(cache_k.shape, cache_k.dtype),
-            jax.ShapeDtypeStruct(cache_v.shape, cache_v.dtype),
-            jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            pl.BlockSpec(blocks["out_k"], per_tile),
+            pl.BlockSpec(blocks["out_v"], per_tile),
+            pl.BlockSpec(blocks["attn_out"], per_b),
+            # serviced-tile counts: [B, LANE] int32 so the accounting
+            # output is itself (8,128)-tileable (col 0 carries the count)
+            pl.BlockSpec(blocks["tiles"], lambda bb, t, L: (0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((hkv, g), jnp.float32),          # m
-            pltpu.VMEM((hkv, g), jnp.float32),          # l
-            pltpu.VMEM((hkv, g, d), jnp.float32),       # acc
+            pltpu.VMEM((h, 1), jnp.float32),            # m
+            pltpu.VMEM((h, 1), jnp.float32),            # l
+            pltpu.VMEM((h, dp), jnp.float32),           # acc
             pltpu.VMEM((1, 1), jnp.int32),              # serviced tiles
+        ],
+    )
+    out_k, out_v, out, tiles = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(ck_w.shape, ck_w.dtype),
+            jax.ShapeDtypeStruct(cv_w.shape, cv_w.dtype),
+            jax.ShapeDtypeStruct((b, hp, dp), q.dtype),
+            jax.ShapeDtypeStruct((b, LANE), jnp.int32),
         ],
         input_output_aliases={2: 0, 3: 1},              # caches in-place
         interpret=interpret,
-    )(lens, qg, cache_k, cache_v, new_k, new_v)
+    )(lens, qp, ck_w, cv_w, nk_w, nv_w)
     out_k, out_v = restore_live(full_k, full_v, out_k, out_v)
+    out_k = unpack_words(out_k, s, hkv, d)
+    out_v = unpack_words(out_v, s, hkv, d)
+    out = out[:, :h, :d]
     if return_tiles:
-        return out.reshape(b, h, d), out_k, out_v, tiles[:, 0]
-    return out.reshape(b, h, d), out_k, out_v
+        return out, out_k, out_v, tiles[:, 0]
+    return out, out_k, out_v
+
+
+def decode_block_specs(b: int, s: int, h: int, hkv: int, d: int,
+                       seq_tile: int) -> list[tuple[str, tuple, tuple]]:
+    """The decode kernel's block geometry as (name, block_shape, array_shape)
+    triples — the surface the Mosaic geometry-lint test checks across the
+    engine's bucket ladder (and the dynamic-grid full-capacity launch)."""
+    dp = word_pad(d)
+    hp = word_pad(h, SUBLANE)
+    wp = hkv * dp
+    sp = word_pad(s, seq_tile)
+    tile = max(1, min(seq_tile, sp))
+    return [
+        ("q", (1, hp, dp), (b, hp, dp)),
+        ("cache_k", (1, tile, wp), (b, sp, wp)),
+        ("cache_v", (1, tile, wp), (b, sp, wp)),
+        ("new_k", (1, 1, wp), (b, 1, wp)),
+        ("new_v", (1, 1, wp), (b, 1, wp)),
+        ("out_k", (1, tile, wp), (b, sp, wp)),
+        ("out_v", (1, tile, wp), (b, sp, wp)),
+        ("attn_out", (1, hp, dp), (b, hp, dp)),
+        ("tiles", (b, LANE), (b, LANE)),
+    ]

@@ -15,19 +15,27 @@ bounded traversal:
       attention — same-cycle W->R visibility, so queries see their own and
       earlier rows of the just-written chunk.
 
+Geometry is Mosaic-ready: the cache rides in WORD layout ``[B, Sp, hkv*Dp]``
+(tiles ``[seq_tile, word]``, minor dim lane-padded via ``word_pad``, per-head
+columns on lane boundaries), the q/out blocks are rank-4 ``[1, C, Hp, Dp]``
+(the old rank-5 ``[1, C, Hkv, G, D]`` blocks do not lower), and the
+per-sequence offset / chunk-length scalars ride in SMEM via scalar prefetch.
+
 Length bounding is the point: only tiles ``[0, ceil((offset+chunk_len) /
 seq_tile))`` are serviced — tiles wholly past a sequence's last query
 position skip the W/R service under ``pl.when`` and copy their cache block
-through unchanged (every output block is written on every grid step, so the
-kernel is safe under compiled Mosaic's output-revolving buffers, not just
-interpret-mode aliasing) — per-chunk read traffic scales with the LIVE
-sequence length, not the allocated ``S_max``. A sentinel ``offset = -1``
-marks a dead (padded) batch row: no tile is serviced for it at all.
-Callers additionally bound the outer grid by slicing the cache to a
-bucketed live prefix (see ``live_len``).
+through unchanged (every LAUNCHED output block is written on every grid
+step, so the kernel is safe under compiled Mosaic's output-revolving
+buffers) — per-chunk read traffic scales with the LIVE sequence length, not
+the allocated ``S_max``. A sentinel ``offset = -1`` marks a dead (padded)
+batch row: no tile is serviced for it at all. Callers additionally bound
+the outer grid either statically (``live_len`` prefix slicing — the
+bucketed fallback) or dynamically (``dynamic_grid=True``: the grid bound is
+the runtime live-tile count from the prefetched scalars, so one trace
+services every live length).
 
-Grid: (batch, seq_tiles); per-row accumulators in VMEM scratch persist
-across the inner (seq_tiles) dimension.
+Grid: (batch, live_tiles); per-row accumulators in VMEM scratch persist
+across the inner dimension.
 """
 from __future__ import annotations
 
@@ -38,13 +46,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import fit_seq_tile, iota, restore_live, slice_live
+from repro.kernels.tiling import (LANE, SUBLANE, iota, pack_words, pad_dim,
+                                  restore_live, slice_live, unpack_words,
+                                  word_pad)
 
 
 def _kernel(off_ref, clen_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
             out_k_ref, out_v_ref, o_ref, t_ref, m_scr, l_scr, acc_scr,
-            n_scr, *, seq_tile: int, n_tiles: int, chunk: int, scale: float):
+            n_scr, *, seq_tile: int, hkv: int, g: int, dp: int, chunk: int,
+            scale: float):
+    bb = pl.program_id(0)
     t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)          # static OR the dynamic live bound
+    h = hkv * g
 
     @pl.when(t == 0)
     def _init():
@@ -53,8 +67,8 @@ def _kernel(off_ref, clen_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
         n_scr[...] = jnp.zeros_like(n_scr)
 
-    off = off_ref[0, 0]
-    cl = clen_ref[0, 0]
+    off = off_ref[bb]                                     # SMEM scalars
+    cl = clen_ref[bb]
     tile_start = t * seq_tile
     # last position any query row attends to: padded rows (row >= chunk_len)
     # replicate position ``offset``, live rows reach offset + chunk_len - 1;
@@ -68,53 +82,73 @@ def _kernel(off_ref, clen_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
         f32 = jnp.float32
         pos = tile_start + iota(seq_tile)                 # global [T]
         rel = pos - off                                   # chunk row per slot
-        row = iota(chunk)
+        cp = new_k_ref.shape[1]                           # padded chunk rows
+        roww = iota(cp)
 
         # --- W port (priority A): land the chunk rows that map to this tile.
-        # One-hot routing matrix [T, C] -> the scatter is an MXU matmul.
+        # One-hot routing matrix [T, Cp] -> the whole-word scatter is one
+        # MXU matmul against the packed [Cp, word] chunk.
         w_hit = (rel >= 0) & (rel < cl)                   # [T]
-        route = ((rel[:, None] == row[None, :])
-                 & w_hit[:, None]).astype(f32)            # [T, C]
-        k_new = jnp.einsum("tc,chd->thd", route, new_k_ref[0].astype(f32))
-        v_new = jnp.einsum("tc,chd->thd", route, new_v_ref[0].astype(f32))
-        k_tile = jnp.where(w_hit[:, None, None],
-                           k_new.astype(k_ref.dtype), k_ref[0])
-        v_tile = jnp.where(w_hit[:, None, None],
-                           v_new.astype(v_ref.dtype), v_ref[0])
+        route = ((rel[:, None] == roww[None, :])
+                 & w_hit[:, None]).astype(f32)            # [T, Cp]
+        k_new = jax.lax.dot(route, new_k_ref[0].astype(f32),
+                            preferred_element_type=f32)   # [T, word]
+        v_new = jax.lax.dot(route, new_v_ref[0].astype(f32),
+                            preferred_element_type=f32)
+        k_tile = jnp.where(w_hit[:, None], k_new.astype(k_ref.dtype), k_ref[0])
+        v_tile = jnp.where(w_hit[:, None], v_new.astype(v_ref.dtype), v_ref[0])
         out_k_ref[0] = k_tile                             # aliased write-thru
         out_v_ref[0] = v_tile
 
         # --- R port (priority B): causal online-softmax over the live tile.
-        q = q_ref[0].astype(f32)                          # [C, Hkv, G, D]
-        s = jnp.einsum("chgd,thd->chgt", q, k_tile.astype(f32)) * scale
+        # per-kv-head scores on lane-aligned word columns (unrolled over the
+        # small static hkv)
+        q = q_ref[0].astype(f32)                          # [C, Hp, Dp]
+        s = jnp.concatenate(
+            [jax.lax.dot_general(
+                q[:, hk * g:(hk + 1) * g, :],
+                k_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                (((2,), (1,)), ((), ())), preferred_element_type=f32)
+             for hk in range(hkv)], axis=1) * scale       # [C, H, T]
+        row = iota(chunk)
         qpos = jnp.where(row < cl, off + row, off)        # [C]
         valid = pos[None, :] <= qpos[:, None]             # [C, T]
-        vmask = valid[:, None, None, :]
+        vmask = valid[:, None, :]
         s = jnp.where(vmask, s, -jnp.inf)
 
-        m_prev = m_scr[...]                               # [C, Hkv, G]
+        m_prev = m_scr[...]                               # [C, H]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
         pr = jnp.exp(s - m_new[..., None])
-        pr = jnp.where(vmask, pr, 0.0)
+        pr = jnp.where(vmask, pr, 0.0)                    # [C, H, T]
         l_scr[...] = l_scr[...] * alpha + pr.sum(axis=-1)
-        acc_scr[...] = (acc_scr[...] * alpha[..., None]
-                        + jnp.einsum("chgt,thd->chgd", pr, v_tile.astype(f32)))
+        pv = jnp.concatenate(
+            [jax.lax.dot_general(
+                pr[:, hk * g:(hk + 1) * g, :],
+                v_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                (((2,), (0,)), ((), ())), preferred_element_type=f32)
+             for hk in range(hkv)], axis=1)               # [C, H, Dp]
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
         m_scr[...] = m_new
 
     @pl.when(jnp.logical_not(touched))
     def _pass_through():
-        # every output block is written every grid step (compiled Mosaic
-        # recycles output VMEM buffers; an unwritten block would copy back
-        # stale data) — the skip saves the W/R service, not the copy
+        # every LAUNCHED output block is written every grid step (compiled
+        # Mosaic recycles output VMEM buffers; an unwritten block would copy
+        # back stale data) — the skip saves the W/R service, not the copy
         out_k_ref[0] = k_ref[0]
         out_v_ref[0] = v_ref[0]
 
     @pl.when(t == n_tiles - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
-        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
-        t_ref[0, 0] = n_scr[0, 0]
+        res = (acc_scr[...] / denom).astype(o_ref.dtype)  # [C, H, Dp]
+        hp = o_ref.shape[2]
+        if hp > h:                                        # head-pad rows
+            res = jnp.concatenate(
+                [res, jnp.zeros((chunk, hp - h, dp), o_ref.dtype)], axis=1)
+        o_ref[0] = res
+        t_ref[bb, 0] = n_scr[0, 0]
 
 
 def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
@@ -122,6 +156,7 @@ def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
                               new_v: jax.Array, offset: jax.Array,
                               chunk_len: jax.Array, *, seq_tile: int = 128,
                               live_len: int | None = None,
+                              dynamic_grid: bool = False,
                               return_tiles: bool = False,
                               interpret: bool = True
                               ) -> tuple[jax.Array, ...]:
@@ -131,17 +166,21 @@ def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
       q:         [B, C, H, D] chunk queries (H = Hkv * G); rows past
                  ``chunk_len`` are padding (their outputs are garbage-but-
                  finite, exactly like the jnp oracle).
-      cache_k/v: [B, S, Hkv, D] staging caches.
+      cache_k/v: [B, S, Hkv, D] staging caches. S is zero-padded up to a
+                 whole tile count before the traversal (and cropped after).
       new_k/v:   [B, C, Hkv, D] the chunk's K,V (rope already applied).
       offset:    [B] int32 — each sequence's cache write offset. A NEGATIVE
                  offset marks a dead (padded) batch row: nothing is written
                  or read for it and its attention output is zeros.
       chunk_len: [B] int32 — valid rows of each sequence's chunk.
-      seq_tile:  tile size; clamped to the largest divisor of the traversed
-                 length when it does not divide evenly.
+      seq_tile:  tile size (capacities that are not tile multiples are
+                 padded, keeping the tile aligned).
       live_len:  static bound on the live prefix ``max(offset + chunk_len)``
                  — only cache tiles below it are traversed; the suffix
-                 ``[live_len, S)`` is returned untouched.
+                 ``[live_len, S)`` is returned untouched. Ignored under
+                 ``dynamic_grid``.
+      dynamic_grid: bound the traversal grid with the RUNTIME live-tile
+                 count instead — one trace services every live length.
       return_tiles: also return the KERNEL-MEASURED count of serviced tiles
                  per sequence ([B] int32) — the ground truth the host-side
                  tile accounting is pinned against in tests.
@@ -155,53 +194,114 @@ def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
     assert h % hkv == 0, "GQA requires H % Hkv == 0"
     g = h // hkv
 
-    full_k, full_v = cache_k, cache_v
-    cache_k, cache_v, bound = slice_live(cache_k, cache_v, live_len)
-    seq_tile = fit_seq_tile(bound, seq_tile)
-    n_tiles = bound // seq_tile
+    dp = word_pad(d)
+    hp = word_pad(h, SUBLANE)
+    cp = word_pad(c, SUBLANE)
+    wp = hkv * dp
     scale = 1.0 / (d ** 0.5)
+    seq_tile = max(1, min(seq_tile, s))
 
-    qg = q.reshape(b, c, hkv, g, d)
-    offs = offset.reshape(b, 1).astype(jnp.int32)
-    clens = chunk_len.reshape(b, 1).astype(jnp.int32)
+    ck_w = pack_words(cache_k, seq_tile)                  # [B, Sp, wp]
+    cv_w = pack_words(cache_v, seq_tile)
+    full_k, full_v = ck_w, cv_w
+    if not dynamic_grid:
+        live = None if live_len is None else word_pad(live_len, seq_tile)
+        ck_w, cv_w, bound = slice_live(ck_w, cv_w, live)
+    else:
+        bound = ck_w.shape[1]
+    grid_tiles = bound // seq_tile
 
-    kernel = functools.partial(_kernel, seq_tile=seq_tile, n_tiles=n_tiles,
-                               chunk=c, scale=scale)
-    out_k, out_v, out, tiles = pl.pallas_call(
-        kernel,
+    offs = offset.astype(jnp.int32)
+    clens = chunk_len.astype(jnp.int32)
+    if dynamic_grid:
+        # live bound from the prefetched scalars: dead rows contribute 0
+        last = jnp.where(offs >= 0, offs + jnp.maximum(clens - 1, 0) + 1, 0)
+        n_tiles = jnp.clip((jnp.max(last) + seq_tile - 1) // seq_tile,
+                           1, grid_tiles)
+    else:
+        n_tiles = grid_tiles
+
+    qp = pad_dim(pad_dim(q, 3, dp), 2, hp)                # [B, C, Hp, Dp]
+    nk_w = pad_dim(pad_dim(new_k, 3, dp).reshape(b, c, wp), 1, cp)
+    nv_w = pad_dim(pad_dim(new_v, 3, dp).reshape(b, c, wp), 1, cp)
+
+    kernel = functools.partial(_kernel, seq_tile=seq_tile, hkv=hkv, g=g,
+                               dp=dp, chunk=c, scale=scale)
+    # block SHAPES come from the same geometry table the Mosaic lint test
+    # checks (chunk_block_specs) — the lint cannot drift from the launch
+    blocks = {nm: blk
+              for nm, blk, _ in chunk_block_specs(b, c, bound, h, hkv, d,
+                                                  seq_tile)}
+    per_b3 = lambda bb, t, O, C: (bb, 0, 0)       # noqa: E731
+    per_b4 = lambda bb, t, O, C: (bb, 0, 0, 0)    # noqa: E731
+    per_tile = lambda bb, t, O, C: (bb, t, 0)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                            # offs, clens -> SMEM
         grid=(b, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                # off
-            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),                # clen
-            pl.BlockSpec((1, c, hkv, g, d), lambda bb, t: (bb, 0, 0, 0, 0)),
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, c, hkv, d), lambda bb, t: (bb, 0, 0, 0)),  # newk
-            pl.BlockSpec((1, c, hkv, d), lambda bb, t: (bb, 0, 0, 0)),  # newv
+            pl.BlockSpec(blocks["q"], per_b4),
+            pl.BlockSpec(blocks["cache_k"], per_tile),
+            pl.BlockSpec(blocks["cache_v"], per_tile),
+            pl.BlockSpec(blocks["new_k"], per_b3),
+            pl.BlockSpec(blocks["new_v"], per_b3),
         ],
         out_specs=[
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, seq_tile, hkv, d), lambda bb, t: (bb, t, 0, 0)),
-            pl.BlockSpec((1, c, hkv, g, d), lambda bb, t: (bb, 0, 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda bb, t: (bb, 0)),    # serviced tiles
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(cache_k.shape, cache_k.dtype),
-            jax.ShapeDtypeStruct(cache_v.shape, cache_v.dtype),
-            jax.ShapeDtypeStruct((b, c, hkv, g, d), q.dtype),
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            pl.BlockSpec(blocks["out_k"], per_tile),
+            pl.BlockSpec(blocks["out_v"], per_tile),
+            pl.BlockSpec(blocks["attn_out"], per_b4),
+            # serviced-tile counts: [B, LANE] int32 so the accounting output
+            # is itself (8,128)-tileable (col 0 carries the count)
+            pl.BlockSpec(blocks["tiles"], lambda bb, t, O, C: (0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((c, hkv, g), jnp.float32),          # m
-            pltpu.VMEM((c, hkv, g), jnp.float32),          # l
-            pltpu.VMEM((c, hkv, g, d), jnp.float32),       # acc
-            pltpu.VMEM((1, 1), jnp.int32),                 # serviced tiles
+            pltpu.VMEM((c, h), jnp.float32),              # m
+            pltpu.VMEM((c, h), jnp.float32),              # l
+            pltpu.VMEM((c, h, dp), jnp.float32),          # acc
+            pltpu.VMEM((1, 1), jnp.int32),                # serviced tiles
         ],
-        input_output_aliases={3: 0, 4: 1},                 # caches in-place
+    )
+    out_k, out_v, out, tiles = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(ck_w.shape, ck_w.dtype),
+            jax.ShapeDtypeStruct(cv_w.shape, cv_w.dtype),
+            jax.ShapeDtypeStruct((b, c, hp, dp), q.dtype),
+            jax.ShapeDtypeStruct((b, LANE), jnp.int32),
+        ],
+        input_output_aliases={3: 0, 4: 1},                # caches in-place
         interpret=interpret,
-    )(offs, clens, qg, cache_k, cache_v, new_k, new_v)
+    )(offs, clens, qp, ck_w, cv_w, nk_w, nv_w)
 
     out_k, out_v = restore_live(full_k, full_v, out_k, out_v)
+    out_k = unpack_words(out_k, s, hkv, d)
+    out_v = unpack_words(out_v, s, hkv, d)
+    out = out[:, :, :h, :d]
     if return_tiles:
-        return out.reshape(b, c, h, d), out_k, out_v, tiles[:, 0]
-    return out.reshape(b, c, h, d), out_k, out_v
+        return out, out_k, out_v, tiles[:, 0]
+    return out, out_k, out_v
+
+
+def chunk_block_specs(b: int, c: int, s: int, h: int, hkv: int, d: int,
+                      seq_tile: int) -> list[tuple[str, tuple, tuple]]:
+    """The chunk kernel's block geometry as (name, block_shape, array_shape)
+    triples for the Mosaic geometry-lint test. Note every block is rank<=4:
+    the old rank-5 ``[1, C, Hkv, G, D]`` q/out blocks are flattened to
+    ``[1, C, Hp, Dp]``."""
+    dp = word_pad(d)
+    hp = word_pad(h, SUBLANE)
+    cp = word_pad(c, SUBLANE)
+    wp = hkv * dp
+    sp = word_pad(s, seq_tile)
+    tile = max(1, min(seq_tile, sp))
+    return [
+        ("q", (1, c, hp, dp), (b, c, hp, dp)),
+        ("cache_k", (1, tile, wp), (b, sp, wp)),
+        ("cache_v", (1, tile, wp), (b, sp, wp)),
+        ("new_k", (1, cp, wp), (b, cp, wp)),
+        ("new_v", (1, cp, wp), (b, cp, wp)),
+        ("out_k", (1, tile, wp), (b, sp, wp)),
+        ("out_v", (1, tile, wp), (b, sp, wp)),
+        ("attn_out", (1, c, hp, dp), (b, c, hp, dp)),
+        ("tiles", (b, LANE), (b, LANE)),
+    ]

@@ -70,36 +70,46 @@ def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
-                                             "length_mask", "interpret"))
+                                             "length_mask", "dynamic_grid",
+                                             "interpret"))
 def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            new_k: jax.Array, new_v: jax.Array,
                            cache_len: jax.Array, *, seq_tile: int = 128,
                            live_len: int | None = None,
                            length_mask: bool = True,
+                           dynamic_grid: bool = False,
                            interpret: bool = True):
-    """Fused 2-port (1W+1R) length-bounded decode step. See kv_multiport.py."""
+    """Fused 2-port (1W+1R) length-bounded decode step. See kv_multiport.py.
+
+    ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
+    count instead of the static ``live_len`` prefix — one trace serves every
+    cache length."""
     return kvmp.fused_append_attend(q, cache_k, cache_v, new_k, new_v,
                                     cache_len, seq_tile=seq_tile,
                                     live_len=live_len, length_mask=length_mask,
+                                    dynamic_grid=dynamic_grid,
                                     interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
-                                             "interpret"))
+                                             "dynamic_grid", "interpret"))
 def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
                                   cache_v: jax.Array, new_k: jax.Array,
                                   new_v: jax.Array, offset: jax.Array,
                                   chunk_len: jax.Array, *,
                                   seq_tile: int = 128,
                                   live_len: int | None = None,
+                                  dynamic_grid: bool = False,
                                   interpret: bool = True):
     """Fused 2-port (1W+1R) length-bounded chunked-prefill step.
 
     See kv_prefill_chunk.py; the jnp oracle is ref.prefill_chunk_attention_ref.
-    """
+    ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
+    count instead of the static ``live_len`` prefix."""
     return kvpc.fused_chunk_append_attend(q, cache_k, cache_v, new_k, new_v,
                                           offset, chunk_len,
                                           seq_tile=seq_tile, live_len=live_len,
+                                          dynamic_grid=dynamic_grid,
                                           interpret=interpret)
 
 

@@ -12,7 +12,6 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.launch.specs import seq_tile_buckets
 from repro.models import init_params
 from repro.serve.engine import MultiPortEngine
 
@@ -37,6 +36,11 @@ def main() -> None:
     ap.add_argument("--no-length-bound", action="store_true",
                     help="disable live-length bounding (stage full max_len "
                          "caches every step — the unbounded baseline)")
+    ap.add_argument("--no-dynamic-grid", action="store_true",
+                    help="fall back to the bucketed stage-length ladder "
+                         "(one jit retrace per power-of-two tile bucket) "
+                         "instead of the dynamic-grid kernels whose single "
+                         "trace serves every cache length")
     ap.add_argument("--single-port", action="store_true")
     ap.add_argument("--kernel-mode", default="pallas",
                     choices=["pallas", "reference"])
@@ -50,12 +54,22 @@ def main() -> None:
         raise SystemExit(f"{args.arch} has a stub frontend; serve a token arch")
     seq_tile = (min(64, args.max_len) if args.seq_tile is None
                 else args.seq_tile)
+    # validate against the engine's OWN ladder construction (clamp
+    # included) — the ladder it keeps through max_slots growth — not a
+    # hand-rolled snapshot that silently diverged from the engine's actual
+    # staging geometry (the old validation skipped the engine's
+    # seq_tile=min(seq_tile, max_len) clamp)
     try:
-        buckets = seq_tile_buckets(args.max_len, seq_tile)
+        buckets = MultiPortEngine.final_stage_ladder(args.max_len, seq_tile)
     except ValueError as e:
         raise SystemExit(f"--seq-tile: {e}")
+    if seq_tile > args.max_len:
+        print(f"--seq-tile {seq_tile} exceeds --max-len {args.max_len}; "
+              f"clamping to {args.max_len} (the engine's own clamp)")
+        seq_tile = args.max_len
+    grid = "bucketed" if args.no_dynamic_grid else "dynamic-grid"
     print(f"length-bounded staging buckets (seq_tile={seq_tile}, "
-          f"S_max={args.max_len}): {list(buckets)}")
+          f"S_max={args.max_len}, {grid}): {list(buckets)}")
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = MultiPortEngine(params, cfg, slots=args.slots,
                           max_slots=max(args.max_slots, args.slots),
@@ -65,6 +79,7 @@ def main() -> None:
                           single_port=args.single_port,
                           seq_tile=seq_tile,
                           length_bound=not args.no_length_bound,
+                          dynamic_grid=not args.no_dynamic_grid,
                           interpret=not args.no_interpret)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -82,6 +97,8 @@ def main() -> None:
           f"slots grown to {eng.n_slots}/{eng.max_slots}; prefill "
           f"{eng.prefill_traversals / max(eng.prefill_tokens, 1):.3f} "
           f"traversals/prompt-token over {eng.prefill_steps} chunk cycles")
+    print(f"jit traces: decode {eng.decode_traces}, prefill-chunk "
+          f"{eng.prefill_traces} (dynamic grid: {eng.dynamic_grid})")
     print(f"tile reads (seq_tile={eng.seq_tile}): decode "
           f"{eng.steady_decode_tile_reads} steady "
           f"(bound {eng.steady_decode_tile_bound}), prefill "

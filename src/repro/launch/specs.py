@@ -11,9 +11,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.distributed import sharding as shd
-# re-export: the launcher's --seq-tile startup validation is the SAME bucket
-# ladder the engine's length-bounded dispatch actually stages (single source
-# of truth in memory/paged_kv.py, next to the queue bucketing it mirrors)
+# re-export: the stage-length bucket ladder (single source of truth in
+# memory/paged_kv.py, next to the queue bucketing it mirrors). Since the
+# dynamic-grid kernels took the ladder out of the decode hot path, this is
+# a VALIDATION/FALLBACK surface only: launchers validate --seq-tile against
+# ``MultiPortEngine.final_stage_ladder`` (which applies the engine's clamp
+# and growth regeneration on top of these buckets), and the engine walks
+# the ladder only under ``dynamic_grid=False``.
 from repro.memory.paged_kv import seq_tile_buckets  # noqa: F401
 from repro.models import init_decode_state, init_params
 from repro.train.train_step import TrainConfig, init_train_state

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
                         empty_request, step, step_banked)
+from repro.kernels.tiling import word_pad
 
 # pool port indices
 APPEND, ATTN_READ, BULK_FILL, SCRUB = 0, 1, 2, 3
@@ -128,6 +129,8 @@ class PagedPool:
     seq_tile: int = 0                  # words per accounting tile
     tile_reads: int = 0                # distinct R-port tiles touched
     tile_writes: int = 0               # distinct W-port tiles touched
+    io_width: int = 0                  # caller-visible word width (the
+                                       # storage word is lane-padded past it)
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
@@ -137,14 +140,19 @@ class PagedPool:
         num_words = n_pages * page_tokens
         while num_words % num_banks:
             num_banks //= 2                       # geometry guard
+        # Mosaic lane alignment: the STORAGE word is padded to a whole lane
+        # count (word_pad) so the banked kernel's [wpb, W] tiles keep a
+        # 128-multiple minor dim at CI's small word widths too; callers keep
+        # reading/writing ``word_width``-wide vectors (the pad lanes are
+        # zero and cropped on the way out)
         spec = MemorySpec(num_words=num_words,
-                          word_width=word_width, dtype=dtype,
+                          word_width=word_pad(word_width), dtype=dtype,
                           num_banks=max(num_banks, 1))
         return cls(spec=spec, page_tokens=page_tokens,
                    storage=spec.init_storage(),
                    free_pages=list(range(n_pages)), tables={}, lengths={},
                    use_kernel=use_kernel, interpret=interpret,
-                   seq_tile=seq_tile or page_tokens)
+                   seq_tile=seq_tile or page_tokens, io_width=word_width)
 
     # ---- control plane ------------------------------------------------------
     def _ensure_capacity(self, seq: int, new_tokens: int) -> None:
@@ -252,7 +260,7 @@ class PagedPool:
             # stream) so stream->result pairing survives empty gathers
             if not reads:
                 return {"read": None}
-            empty = jnp.zeros((0, self.spec.word_width), self.spec.dtype)
+            empty = jnp.zeros((0, self.io_width), self.spec.dtype)
             return {"read": empty if read_was_dict
                     else [empty for _ in reads]}
         q = _bucket(max(lanes))
@@ -273,7 +281,7 @@ class PagedPool:
                 self._ensure_capacity(seq, t)
                 idx = np.arange(self.lengths[seq], self.lengths[seq] + t)
                 addr[at:at + t] = self._addr(seq, idx)
-                data[at:at + t] = vec
+                data[at:at + t, :vec.shape[1]] = vec    # pad lanes stay zero
                 mask[at:at + t] = True
                 self.lengths[seq] += t
                 at += t
@@ -327,7 +335,7 @@ class PagedPool:
         self.tile_reads += len(r_tiles)
         if not reads:
             return {"read": None}
-        got = [out[ATTN_READ][a:b] for a, b in slices]
+        got = [out[ATTN_READ][a:b, :self.io_width] for a, b in slices]
         return {"read": got[0] if read_was_dict else got}
 
     @staticmethod

@@ -133,6 +133,7 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
                             mrope_sections=(16, 24, 24),
                             kernel_mode: Literal["reference", "multiport"] = "reference",
                             seq_tile: int = 128,
+                            dynamic_grid: bool = False,
                             interpret: bool = True,
                             compute_dtype=None):
     """One fixed-size prompt chunk per sequence, mid-prefill.
@@ -169,7 +170,7 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
         from repro.kernels import ops
         out, cache_k, cache_v = ops.fused_prefill_chunk_attention(
             q, cache_k, cache_v, new_k, new_v, offset, chunk_len,
-            seq_tile=seq_tile, interpret=interpret)
+            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.prefill_chunk_attention_ref(
@@ -185,7 +186,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      mrope_sections=(16, 24, 24),
                      kernel_mode: Literal["reference", "multiport"] = "reference",
                      seq_tile: int = 128, length_mask: bool = True,
-                     interpret: bool = True,
+                     dynamic_grid: bool = False, interpret: bool = True,
                      compute_dtype=None):
     """One decode step. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, D];
     cache_len: [B] current lengths. Returns (out [B,1,d], k', v').
@@ -214,7 +215,8 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
         from repro.kernels import ops
         out, cache_k, cache_v = ops.fused_decode_attention(
             q1, cache_k, cache_v, new_k, new_v, cache_len,
-            seq_tile=seq_tile, length_mask=length_mask, interpret=interpret)
+            seq_tile=seq_tile, length_mask=length_mask,
+            dynamic_grid=dynamic_grid, interpret=interpret)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.decode_attention_ref(

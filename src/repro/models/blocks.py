@@ -78,6 +78,7 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
                                     cache_k, cache_v, cfg: ArchConfig,
                                     kernel_mode: str = "reference",
                                     seq_tile: int = 128,
+                                    dynamic_grid: bool = False,
                                     interpret: bool = True):
     h, ck, cv = A.attention_prefill_chunk(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), offset, chunk_len,
@@ -85,7 +86,8 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
         n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
-        seq_tile=seq_tile, interpret=interpret, compute_dtype=cfg.cdtype)
+        seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
+        compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:
@@ -98,6 +100,7 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
 def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
                              cfg: ArchConfig, kernel_mode: str = "reference",
                              seq_tile: int = 128, length_mask: bool = True,
+                             dynamic_grid: bool = False,
                              interpret: bool = True):
     h, ck, cv = A.attention_decode(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache_k, cache_v,
@@ -106,7 +109,8 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, length_mask=length_mask,
-        interpret=interpret, compute_dtype=cfg.cdtype)
+        dynamic_grid=dynamic_grid, interpret=interpret,
+        compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:

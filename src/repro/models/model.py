@@ -238,8 +238,8 @@ def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
 
 def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 *, kernel_mode: str = "reference", seq_tile: int = 128,
-                length_mask: bool = True, interpret: bool = True
-                ) -> tuple[PyTree, jax.Array]:
+                length_mask: bool = True, dynamic_grid: bool = False,
+                interpret: bool = True) -> tuple[PyTree, jax.Array]:
     """Returns (state', logits [B, V]).
 
     ``seq_tile``/``length_mask`` bound the multiport kernel's traversal to
@@ -255,7 +255,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                interpret=interpret)
+                dynamic_grid=dynamic_grid, interpret=interpret)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], state["cache_k"], state["cache_v"]))
@@ -279,7 +279,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                interpret=interpret)
+                dynamic_grid=dynamic_grid, interpret=interpret)
 
             def inner(hh, ys):
                 pl, cs, ss = ys
@@ -385,7 +385,8 @@ def prefill(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
 
 def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                   *, kernel_mode: str = "reference", seq_tile: int = 128,
-                  interpret: bool = True) -> tuple[PyTree, jax.Array]:
+                  dynamic_grid: bool = False, interpret: bool = True
+                  ) -> tuple[PyTree, jax.Array]:
     """Process ONE fixed-size prompt chunk for a batch of sequences.
 
     The continuous-batching prefill step: each sequence contributes its next
@@ -415,7 +416,7 @@ def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
         pl, ck, cv = xs
         h, ck, cv = B.transformer_block_prefill_chunk(
             pl, h, offset, chunk_len, ck, cv, cfg, kernel_mode=kernel_mode,
-            seq_tile=seq_tile, interpret=interpret)
+            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret)
         return h, (ck, cv)
     x, (ck, cv) = jax.lax.scan(
         body, x, (params["layers"], state["cache_k"], state["cache_v"]))

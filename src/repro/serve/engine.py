@@ -43,14 +43,21 @@ read-traversal) port transactions — the baseline the benchmark compares
 traversal counts against. ``single_port=True`` additionally services ONE
 engine port per macro-cycle (the paper's bare-macro comparison).
 
-Traversals are LENGTH-BOUNDED (``length_bound=True``, pallas mode): both
-the decode and chunked-prefill staging caches cover only the batch's live
-length rounded up to a power-of-two count of ``seq_tile`` tiles (retraces
-stay at tile-count buckets, mirroring the slot buckets), and the kernels
-skip tiles past each sequence's own live length under ``pl.when`` — so
-per-token read traffic scales with ``cache_len``, not the allocated
-``max_len``. ``decode_tile_reads`` / ``prefill_tile_reads`` count the tiles
-actually touched; ``steady_decode_tile_bound`` is the ideal
+Traversals are LENGTH-BOUNDED (``length_bound=True``, pallas mode) and,
+by default, RETRACE-FREE (``dynamic_grid=True``): the staging caches keep
+ONE shape — the padded full capacity — and the kernels bound their own
+tile grid with the runtime live-tile count read from the scalar-prefetched
+SMEM lengths, so a single decode trace (and a single chunk trace) serves
+every cache length while per-token read traffic still scales with
+``cache_len``, not the allocated ``max_len`` (``decode_traces`` /
+``prefill_traces`` count jit retraces). ``dynamic_grid=False`` falls back
+to the bucketed ladder: staging caches cover the batch's live length
+rounded up to a power-of-two count of ``seq_tile`` tiles (retraces at
+tile-count buckets, mirroring the slot buckets; the ladder launchers
+validate ``--seq-tile`` against via ``final_stage_ladder``). Either way
+the kernels skip tiles past each sequence's own live length under
+``pl.when``. ``decode_tile_reads`` / ``prefill_tile_reads`` count the
+tiles actually touched; ``steady_decode_tile_bound`` is the ideal
 ``ceil((cache_len+1)/seq_tile)`` budget the CI bench gate checks against.
 
 ``interpret=True`` (default) executes the Pallas kernels in Python — the
@@ -76,6 +83,15 @@ from repro.memory.paged_kv import PagedPool, _bucket, seq_tile_buckets
 from repro.models import decode_step, prefill_chunk
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
+
+
+def _jit_traces(fn) -> int:
+    """Compiled-trace count of a ``jax.jit`` callable (-1 when the running
+    jax version does not expose the cache probe)."""
+    try:
+        return fn._cache_size()
+    except AttributeError:
+        return -1
 
 
 @dataclasses.dataclass
@@ -105,7 +121,7 @@ class MultiPortEngine:
                  kernel_mode: str = "pallas", single_port: bool = False,
                  greedy: bool = True, page_tokens: int = 8,
                  seq_tile: int = 128, length_bound: bool = True,
-                 interpret: bool = True):
+                 dynamic_grid: bool = True, interpret: bool = True):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
@@ -132,7 +148,16 @@ class MultiPortEngine:
         # fit-down tile sizes.
         self.seq_tile = min(seq_tile, max_len)
         self.length_bound = length_bound
-        self._stage_buckets = seq_tile_buckets(max_len, self.seq_tile)
+        # dynamic-grid traversal (pallas + length_bound): the staging caches
+        # always cover the full padded capacity and the KERNEL bounds its own
+        # grid with the runtime live-tile count — ONE decode trace serves
+        # every cache length, deleting the stage-length ladder from the hot
+        # path. The ladder stays as the dynamic_grid=False (bucketed,
+        # retrace-per-bucket) fallback and the --seq-tile validation surface.
+        self.dynamic_grid = (dynamic_grid and kernel_mode == "pallas"
+                             and length_bound)
+        self._stage_buckets = self.final_stage_ladder(max_len, seq_tile)
+        self.stage_lens_seen: set = set()
         # padded batch rows carry the Pallas kernels' dead-row sentinel
         # (cache_len/offset -1: zero tiles serviced) so tile accounting
         # stays exact under padding; the jnp reference keeps 0 (its dense
@@ -177,17 +202,46 @@ class MultiPortEngine:
         self._sp_rotate = 0
 
         attn_mode = "multiport" if kernel_mode == "pallas" else "reference"
-        tile = self.seq_tile
+        tile, dyn = self.seq_tile, self.dynamic_grid
         self._decode = jax.jit(
             lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
                                         seq_tile=tile,
                                         length_mask=length_bound,
+                                        dynamic_grid=dyn,
                                         interpret=interpret))
         self._prefill_chunk = jax.jit(
             lambda p, s, b: prefill_chunk(p, cfg, s, b, kernel_mode=attn_mode,
-                                          seq_tile=tile, interpret=interpret))
+                                          seq_tile=tile, dynamic_grid=dyn,
+                                          interpret=interpret))
 
     # ---- client API --------------------------------------------------------
+    @classmethod
+    def final_stage_ladder(cls, max_len: int, seq_tile: int) -> tuple:
+        """The stage-length ladder the engine uses for its whole lifetime,
+        slot growth to ``max_slots`` included — the surface ``--seq-tile``
+        must be validated against. The ladder's geometry inputs (max_len,
+        CLAMPED seq_tile) are growth-invariant, so the final ladder is
+        computable up front; but a launcher that hand-rolls the startup
+        ladder instead of calling THIS silently diverges from the engine
+        the moment the clamp or bucketing changes (the validation bug this
+        replaces: raw ``seq_tile_buckets(max_len, seq_tile)`` skipped the
+        engine's ``seq_tile = min(seq_tile, max_len)`` clamp)."""
+        if seq_tile < 1:
+            raise ValueError(f"seq_tile must be >= 1, got {seq_tile}")
+        return seq_tile_buckets(max_len, min(seq_tile, max_len))
+
+    @property
+    def decode_traces(self) -> int:
+        """Times the jitted decode step has been (re)traced — 1 on the
+        dynamic-grid path regardless of cache length; O(log S_max/seq_tile)
+        ladder buckets on the bucketed fallback."""
+        return _jit_traces(self._decode)
+
+    @property
+    def prefill_traces(self) -> int:
+        """Times the jitted chunked-prefill step has been (re)traced."""
+        return _jit_traces(self._prefill_chunk)
+
     @property
     def n_slots(self) -> int:
         """Current slot-table size (grows on demand up to ``max_slots``)."""
@@ -258,12 +312,16 @@ class MultiPortEngine:
         stages the padded full capacity; the jnp reference stages max_len."""
         if self.kernel_mode != "pallas":
             return self.max_len
-        if not self.length_bound:
-            return self._stage_buckets[-1]
-        for b in self._stage_buckets:
-            if b >= need:
-                return b
-        return self._stage_buckets[-1]
+        if self.dynamic_grid or not self.length_bound:
+            # dynamic grid: ONE staged shape (the padded capacity) for every
+            # cycle — the kernel bounds its own grid from the SMEM lengths,
+            # so the ladder is out of the hot path entirely
+            got = self._stage_buckets[-1]
+        else:
+            got = next((b for b in self._stage_buckets if b >= need),
+                       self._stage_buckets[-1])
+        self.stage_lens_seen.add(got)
+        return got
 
     def _tiles_touched(self, needs: list, stage_s: int,
                        bounded: bool) -> tuple[int, int]:
@@ -272,6 +330,9 @@ class MultiPortEngine:
         staging cache. Unbounded traversals touch every grid tile."""
         tile = fit_seq_tile(stage_s, self.seq_tile)
         grid = stage_s // tile
+        if bounded and self.dynamic_grid and needs:
+            # the dynamic grid itself stops at the batch's live-tile count
+            grid = min(grid, max(1, max(-(-n // tile) for n in needs)))
         bound = sum(min(-(-n // tile), grid) for n in needs)
         touched = bound if bounded else grid * len(needs)
         return touched, bound

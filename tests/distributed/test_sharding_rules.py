@@ -87,3 +87,34 @@ def test_norm_scales_replicated():
         name = "/".join(str(getattr(k, "key", k)) for k in path)
         if name.endswith(("ln1/scale", "ln2/scale", "final_norm/scale")):
             assert all(a is None for a in tuple(spec)), (name, spec)
+
+def test_attention_tp_mesh_head_mismatch_raises():
+    """tp axis larger than (or not dividing) the attention head count used
+    to silently replicate EVERY q/k/v column — attention ran with no tensor
+    parallelism at all. It is now a hard error naming the mismatch; the
+    GQA-standard fallback (q shards, k/v replicate when tp > n_kv_heads but
+    tp | n_heads) stays."""
+    cfg = registry.get("tinyllama-1.1b", reduced=True)  # heads 8, kv 2
+    shapes = SP.params_shapes(cfg)
+
+    # tp=16 does not divide n_heads=8: hard error naming mesh and heads
+    mesh = FakeMesh({"data": 2, "model": 16})
+    with pytest.raises(ValueError, match=r"n_heads=8.*n_kv_heads=2"):
+        shd.param_pspecs(shapes, mesh, shd.Rules.for_mesh(mesh), cfg=cfg)
+
+    # tp=4 divides n_heads=8 but exceeds n_kv_heads=2: the documented GQA
+    # fallback — q columns shard, k/v columns replicate, no error
+    mesh = FakeMesh({"data": 2, "model": 4})
+    specs = shd.param_pspecs(shapes, mesh, shd.Rules.for_mesh(mesh), cfg=cfg)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    by_name = {"/".join(str(getattr(k, "key", k)) for k in path): spec
+               for path, spec in flat}
+    wq = next(v for k, v in by_name.items() if k.endswith("attn/wq/w"))
+    wk = next(v for k, v in by_name.items() if k.endswith("attn/wk/w"))
+    assert tuple(wq)[-1] == "model"            # q still tensor-parallel
+    assert tuple(wk)[-1] is None               # kv replicated (GQA fallback)
+
+    # without cfg the raw divisibility guards apply unchanged (no raise)
+    shd.param_pspecs(shapes, FakeMesh({"data": 2, "model": 16}),
+                     shd.Rules())

@@ -1,0 +1,151 @@
+"""Mosaic geometry lint + dynamic-grid equivalence for the fused KV kernels.
+
+Two contracts of the compiled (``interpret=False``) path that CPU CI can
+still enforce:
+
+* every block spec the kernels launch — across the engine's whole stage-
+  length bucket ladder AND the dynamic-grid full-capacity launch, at CI and
+  production word widths — satisfies the Mosaic (8, 128)/f32 tiling rules
+  (minor dim a 128-lane multiple via ``word_pad``, second-minor a sublane
+  multiple or the full array dim, rank <= 4 — the old rank-5
+  ``[1, C, Hkv, G, D]`` q/out blocks do not lower);
+* the dynamic-grid traversal (live bound read from the prefetched scalars
+  at run time — ONE trace for every cache length) is BIT-identical to the
+  static bucketed traversal it replaces, over random live lengths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kv_multiport import decode_block_specs, fused_append_attend
+from repro.kernels.kv_prefill_chunk import (chunk_block_specs,
+                                            fused_chunk_append_attend)
+from repro.kernels.tiling import LANE, SUBLANE, check_block
+from repro.memory.paged_kv import seq_tile_buckets
+
+# (name, b, chunk, h, hkv, d, s_max, seq_tile)
+GEOMETRIES = [
+    ("ci-reduced", 4, 16, 8, 2, 8, 128, 64),     # tinyllama-1.1b-reduced
+    ("bench", 8, 8, 8, 2, 8, 64, 8),             # engine_bench tile sweep
+    ("production", 8, 16, 32, 8, 128, 4096, 128),
+    ("awkward-capacity", 3, 8, 4, 1, 16, 100, 16),  # padded, not clamped
+]
+
+
+@pytest.mark.parametrize("name,b,c,h,hkv,d,s_max,tile", GEOMETRIES)
+def test_kernel_blocks_mosaic_aligned(name, b, c, h, hkv, d, s_max, tile):
+    """Every block spec of both kernels is (8,128)/f32-tileable at every
+    stage length the engine can launch: each bucket of the ladder (the
+    dynamic_grid=False fallback) and the padded full capacity (the
+    dynamic-grid path's single launch shape)."""
+    stages = set(seq_tile_buckets(s_max, min(tile, s_max))) | {s_max}
+    for stage in stages:
+        for nm, blk, arr in (decode_block_specs(b, stage, h, hkv, d, tile)
+                             + chunk_block_specs(b, c, stage, h, hkv, d,
+                                                 tile)):
+            errs = check_block(blk, arr)
+            assert not errs, (name, stage, nm, errs)
+            assert len(blk) <= 4, (name, stage, nm, blk)
+
+
+def test_lint_flags_bad_geometry():
+    """The lint has teeth: rank-5 blocks and unaligned minor dims fail."""
+    assert check_block((1, 4, 2, 2, 16), (2, 4, 2, 2, 16))   # rank 5
+    assert check_block((1, 8, 16), (2, 64, 16))              # minor !% 128
+    assert check_block((1, 4, LANE), (2, 64, LANE))          # sublane 4
+    assert not check_block((1, SUBLANE, LANE), (2, 64, LANE))
+
+
+def _decode_case(rng, b=3, s=128, hkv=2, g=2, d=16):
+    h = hkv * g
+    return (jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32))
+
+
+def _bucketed_live(lens, tile, s):
+    need = max(max(lens) + 1, 1)
+    live = tile
+    while live < need:
+        live *= 2
+    return min(live, s)
+
+
+def test_dynamic_grid_decode_bit_identical(rng):
+    """Dynamic-grid decode == bucketed decode, bit for bit, and one jitted
+    trace serves every cache length (the bucketed path retraces per
+    bucket)."""
+    s, tile = 128, 16
+    q, ck, cv, nk, nv = _decode_case(rng, s=s)
+    f = jax.jit(lambda lens: fused_append_attend(
+        q, ck, cv, nk, nv, lens, seq_tile=tile, dynamic_grid=True,
+        return_tiles=True))
+    for lens in ([0, 17, 100], [5, -1, 30], [-1, -1, -1], [127, 0, 64]):
+        la = jnp.asarray(lens, jnp.int32)
+        o_d, k_d, v_d, tiles = f(la)
+        o_s, k_s, v_s = fused_append_attend(
+            q, ck, cv, nk, nv, la, seq_tile=tile,
+            live_len=_bucketed_live(lens, tile, s))
+        np.testing.assert_array_equal(np.asarray(o_d), np.asarray(o_s))
+        np.testing.assert_array_equal(np.asarray(k_d), np.asarray(k_s))
+        np.testing.assert_array_equal(np.asarray(v_d), np.asarray(v_s))
+        # kernel-measured serviced tiles: exactly the live count per row
+        want = [-(-(p + 1) // tile) if p >= 0 else 0 for p in lens]
+        assert np.asarray(tiles).tolist() == want
+    assert f._cache_size() == 1, "dynamic grid must not retrace on length"
+
+
+def test_dynamic_grid_chunk_bit_identical(rng):
+    s, tile, c = 128, 16, 4
+    _, ck, cv, _, _ = _decode_case(rng, s=s)
+    h, hkv, d = 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(3, c, h, d)), jnp.float32)
+    nk = jnp.asarray(rng.normal(size=(3, c, hkv, d)), jnp.float32)
+    nv = jnp.asarray(rng.normal(size=(3, c, hkv, d)), jnp.float32)
+    f = jax.jit(lambda off, cl: fused_chunk_append_attend(
+        q, ck, cv, nk, nv, off, cl, seq_tile=tile, dynamic_grid=True))
+    for off, cl in (([0, 20, 100], [4, 3, 2]), ([-1, 5, -1], [0, 4, 0]),
+                    ([3, 60, 124], [4, 4, 4])):
+        offa = jnp.asarray(off, jnp.int32)
+        cla = jnp.asarray(cl, jnp.int32)
+        got = f(offa, cla)
+        want = fused_chunk_append_attend(q, ck, cv, nk, nv, offa, cla,
+                                         seq_tile=tile)
+        for gg, ww in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(gg), np.asarray(ww))
+    assert f._cache_size() == 1
+
+
+def test_dynamic_grid_decode_property(rng):
+    """Property (CI installs the ``dev`` extra; skips locally): dynamic-grid
+    == bucketed over random live lengths, dead rows included."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=20, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(b=st.integers(1, 4),
+               n_tiles=st.integers(1, 6),
+               tile=st.sampled_from([8, 16, 32]),
+               hkv=st.sampled_from([1, 2]),
+               g=st.sampled_from([1, 2]),
+               seed=st.integers(0, 2**31 - 1),
+               data=st.data())
+    def prop(b, n_tiles, tile, hkv, g, seed, data):
+        s = n_tiles * tile
+        r = np.random.default_rng(seed)
+        q, ck, cv, nk, nv = _decode_case(r, b=b, s=s, hkv=hkv, g=g, d=8)
+        lens = [data.draw(st.integers(-1, s - 1), label=f"len{i}")
+                for i in range(b)]
+        la = jnp.asarray(lens, jnp.int32)
+        dyn = fused_append_attend(q, ck, cv, nk, nv, la, seq_tile=tile,
+                                  dynamic_grid=True)
+        buck = fused_append_attend(q, ck, cv, nk, nv, la, seq_tile=tile,
+                                   live_len=_bucketed_live(lens, tile, s))
+        for gg, ww in zip(dyn, buck):
+            np.testing.assert_array_equal(np.asarray(gg), np.asarray(ww))
+
+    prop()

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.kv_prefill_chunk import fit_seq_tile
+from repro.kernels.tiling import fit_seq_tile
 
 
 def _case(rng, b, c, s, hkv, g, d, lo_off=0):

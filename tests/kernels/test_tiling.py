@@ -1,0 +1,61 @@
+"""Tiling helpers: aligned-divisor tile clamping (with its one-time warning)
+and the exact word-layout pad/crop round trip."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tiling
+from repro.kernels.tiling import (LANE, SUBLANE, fit_seq_tile, pack_words,
+                                  unpack_words, word_pad)
+
+
+def test_word_pad():
+    assert word_pad(1) == LANE
+    assert word_pad(LANE) == LANE
+    assert word_pad(LANE + 1) == 2 * LANE
+    assert word_pad(3, SUBLANE) == SUBLANE
+    assert word_pad(16, SUBLANE) == 16
+
+
+def test_fit_seq_tile_divisible_is_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert fit_seq_tile(64, 16) == 16
+        assert fit_seq_tile(64, 128) == 64     # clamp to s, still divides
+
+
+def test_fit_seq_tile_prefers_aligned_divisor():
+    # 88 = 8 * 11: the largest divisor <= 60 is 44, but it is not a sublane
+    # multiple — the aligned divisor 8 wins (Mosaic geometry beats raw size)
+    tiling._fit_warned.clear()
+    with pytest.warns(UserWarning, match="aligned divisor 8"):
+        assert fit_seq_tile(88, 60) == 8
+    # 63 has no aligned divisor at all: largest raw divisor, flagged as
+    # interpret-only geometry
+    with pytest.warns(UserWarning, match="interpret-only"):
+        assert fit_seq_tile(63, 32) == 21
+
+
+def test_fit_seq_tile_prime_capacity_warns_once():
+    """Regression: a prime capacity degrades the tile all the way to 1 —
+    loudly, once, instead of silently on every call."""
+    tiling._fit_warned.clear()
+    with pytest.warns(UserWarning, match="divisor 1"):
+        assert fit_seq_tile(97, 64) == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # second call must stay silent
+        assert fit_seq_tile(97, 64) == 1
+
+
+def test_pack_unpack_words_round_trip(rng):
+    b, s, hkv, d, tile = 2, 33, 2, 16, 8
+    cache = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    packed = pack_words(cache, tile)
+    sp = -(-s // tile) * tile
+    assert packed.shape == (b, sp, hkv * word_pad(d))
+    assert packed.shape[1] % tile == 0
+    assert packed.shape[2] % LANE == 0
+    back = unpack_words(packed, s, hkv, d)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(cache))

@@ -81,9 +81,11 @@ def test_prefill_chunk_specs_match_model_contract(setup):
 
 
 def test_seq_tile_buckets_validation():
-    """launch.specs.seq_tile_buckets is the --seq-tile startup validation:
-    the bucket ladder covers S_max in power-of-two tile counts and rejects
-    tiles that cannot tile the cache."""
+    """launch.specs.seq_tile_buckets is the raw bucket ladder: power-of-two
+    tile counts covering S_max, rejecting tiles that cannot tile the cache.
+    (--seq-tile validation itself goes through
+    ``MultiPortEngine.final_stage_ladder``, which layers the engine's
+    seq_tile clamp on top of these buckets — checked below.)"""
     from repro.launch.specs import seq_tile_buckets
     assert seq_tile_buckets(64, 8) == (8, 16, 32, 64)
     assert seq_tile_buckets(128, 128) == (128,)
@@ -94,21 +96,31 @@ def test_seq_tile_buckets_validation():
         seq_tile_buckets(64, 0)
     with pytest.raises(ValueError):
         seq_tile_buckets(64, 128)              # tile exceeds S_max
+    # the launcher's validation surface wraps these buckets with the
+    # engine's clamp: an oversized tile validates clamped, not rejected
+    assert MultiPortEngine.final_stage_ladder(64, 8) == seq_tile_buckets(64, 8)
+    assert MultiPortEngine.final_stage_ladder(64, 128) == (64,)
 
 
 def test_engine_stage_lengths_walk_the_bucket_ladder(setup):
-    """The engine's length-bounded dispatch stages exactly the ladder the
-    launcher validates --seq-tile against — including awkward capacities,
-    where the padded tail keeps every staged length a whole tile count."""
+    """The bucketed fallback (dynamic_grid=False) stages exactly the ladder
+    the launcher validates --seq-tile against — including awkward
+    capacities, where the padded tail keeps every staged length a whole
+    tile count. The dynamic-grid default stages only the padded capacity
+    (the ladder's last entry)."""
     cfg, params = setup
     from repro.launch.specs import seq_tile_buckets
-    eng = MultiPortEngine(params, cfg, slots=2, max_len=100, seq_tile=16)
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=100, seq_tile=16,
+                          dynamic_grid=False)
     ladder = seq_tile_buckets(100, 16)
     assert eng._stage_buckets == ladder == (16, 32, 64, 112)
     for need in range(1, 101):
         got = eng._stage_len(need)
         assert got in ladder and got >= need
         assert got % eng.seq_tile == 0
+    dyn = MultiPortEngine(params, cfg, slots=2, max_len=100, seq_tile=16)
+    assert all(dyn._stage_len(need) == ladder[-1]
+               for need in (1, 50, 100))
 
 
 def test_chunked_prefill_property(setup):

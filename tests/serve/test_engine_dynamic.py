@@ -1,0 +1,97 @@
+"""Dynamic-grid serving: one decode trace for every cache length, token-
+identical to the bucketed ladder fallback, and --seq-tile validation against
+the FINAL (post-growth) stage ladder."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run(cfg, params, prompts, max_new=4, **kw):
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64, **kw)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    done = eng.run(max_cycles=500)
+    return eng, {r.rid: tuple(r.generated) for r in done}
+
+
+def test_dynamic_grid_single_trace_token_identical(setup):
+    """Acceptance: across prompt lengths spanning several tile buckets the
+    dynamic-grid engine (the pallas default) keeps ONE decode trace and ONE
+    chunk trace, while staying token-identical to the bucketed fallback and
+    the jnp reference."""
+    cfg, params = setup
+    rng = np.random.default_rng(21)
+    # live lengths cross the 8/16/32-token buckets of the seq_tile=8 ladder
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (3, 9, 18, 30)]
+    ed, td = _run(cfg, params, prompts, seq_tile=8)
+    eb, tb = _run(cfg, params, prompts, seq_tile=8, dynamic_grid=False)
+    er, tr = _run(cfg, params, prompts, seq_tile=8,
+                  kernel_mode="reference")
+    assert td == tb == tr
+    assert ed.dynamic_grid and not eb.dynamic_grid
+    assert ed.decode_traces == 1
+    assert ed.prefill_traces == 1
+    # the bucketed fallback really does retrace per stage-length bucket
+    assert eb.decode_traces > 1
+    assert len(eb.stage_lens_seen) == eb.decode_traces
+    # dynamic grid stages ONE shape: the padded full capacity
+    assert ed.stage_lens_seen == {ed._stage_buckets[-1]}
+    # and stays inside the tile budget while doing so
+    assert ed.steady_decode_tile_reads <= ed.steady_decode_tile_bound
+    assert ed.steady_decode_tile_reads == eb.steady_decode_tile_reads
+
+
+def test_dynamic_grid_off_for_reference_mode(setup):
+    cfg, params = setup
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64,
+                          kernel_mode="reference")
+    assert not eng.dynamic_grid
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64,
+                          length_bound=False)
+    assert not eng.dynamic_grid
+
+
+def test_growth_past_bucket_edge_keeps_final_ladder(setup):
+    """Regression (--seq-tile validation): launchers must validate against
+    ``final_stage_ladder`` — the ladder the engine keeps through max_slots
+    growth — not a hand-rolled startup snapshot. Growing the slot table
+    past a batch-bucket edge must leave the engine's live ladder equal to
+    the validated final one, and every stage length it ever staged inside
+    it (if ladder construction ever becomes growth-dependent, this is the
+    test that forces the validation surface to follow)."""
+    cfg, params = setup
+    rng = np.random.default_rng(22)
+    eng = MultiPortEngine(params, cfg, slots=1, max_slots=8, max_len=100,
+                          seq_tile=16, chunk_tokens=8, dynamic_grid=False)
+    final = MultiPortEngine.final_stage_ladder(100, 16)
+    assert eng._stage_buckets == final == (16, 32, 64, 112)
+    for n in (3, 10, 20, 40, 3, 9):
+        eng.submit(list(rng.integers(0, cfg.vocab, n)), max_new=3)
+    done = eng.run(max_cycles=500)
+    assert len(done) == 6
+    assert eng.n_slots > 1                     # grew past the 1-slot start
+    assert eng._stage_buckets == final         # regeneration is ladder-stable
+    assert eng.stage_lens_seen <= set(final)   # staged only validated lengths
+
+
+def test_final_stage_ladder_mirrors_engine_clamp(setup):
+    """The validation surface applies the engine's own seq_tile clamp: a
+    --seq-tile larger than max_len validates (and runs) clamped instead of
+    diverging from what the engine actually does."""
+    cfg, params = setup
+    assert MultiPortEngine.final_stage_ladder(64, 128) == (64,)
+    eng = MultiPortEngine(params, cfg, slots=2, max_len=64, seq_tile=128)
+    assert eng._stage_buckets == (64,)
+    with pytest.raises(ValueError):
+        MultiPortEngine.final_stage_ladder(64, 0)
