@@ -23,20 +23,31 @@ at cache_len = S_max/8).
 A fourth section counts JIT TRACES across a cache-length sweep: the
 dynamic-grid kernels (live bound read from SMEM at run time) serve every
 cache length from ONE decode trace, where the bucketed fallback retraces
-once per power-of-two stage-length bucket — the retrace-free length
-bounding this schema revision exists to prove.
+once per power-of-two stage-length bucket.
+
+A fifth section (this schema revision) measures DATA-PARALLEL KV: the paged
+pool sharded page-aligned across a ``kv`` mesh (forced host devices on CPU
+CI), kernels shard_map'd by home device. It reports the per-device steady-
+decode tile-read balance (max device / per-device mean; 1.0 = ideal) and
+re-checks the headline gates UNDER SHARDING: fused-vs-reference traversal
+ratio, the tile budget, the bounded-vs-unbounded tile ratio, the
+single-trace property, and token identity against the unsharded engine.
+Needs > 1 visible device (``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` on CPU); with one device the section records itself as skipped
+and the sharded gates no-op.
 
 CI gate (see .github/workflows/ci.yml bench-smoke and benchmarks/README.md):
 
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/engine_bench.py --json BENCH_engine.json \
         --min-traversal-ratio 1.9 --enforce-tile-bound --min-tile-ratio 3.9 \
-        --enforce-single-trace
+        --enforce-single-trace --max-kv-balance 1.25
 
-writes the ``bench-engine/v3`` record and exits non-zero if the fused-vs-
+writes the ``bench-engine/v4`` record and exits non-zero if the fused-vs-
 reference steady-decode traversal ratio, the steady-decode tile budget
 (ceil((cache_len+1)/seq_tile) per step), the bounded-vs-unbounded tile
-ratio at cache_len = S_max/8, or the single-trace property of the
-dynamic-grid decode path regresses.
+ratio at cache_len = S_max/8, the single-trace property of the dynamic-grid
+decode path, or the sharded per-device tile-read balance regresses.
 """
 from __future__ import annotations
 
@@ -268,6 +279,78 @@ def run_tiles(max_new: int = 4, requests: int = 4) -> dict:
     return out
 
 
+def run_kv_balance(n_requests: int = 8, prompt_len: int = 5,
+                   max_new: int = 6) -> dict:
+    """Data-parallel KV: shard the pool (and the kernels) across the
+    largest power-of-two count of visible devices (<= 8) and measure the
+    per-device steady-decode tile-read balance plus the headline gates
+    UNDER SHARDING. Equal-length prompts and one request per slot make the
+    ideal balance 1.0 — the gate budget (1.25x) leaves room only for
+    admission-order skew, not systematic imbalance."""
+    avail = len(jax.devices())
+    shards = 1
+    while shards * 2 <= min(avail, 8):
+        shards *= 2
+    out = {"available_devices": avail, "kv_shards": shards,
+           "s_max": TILE_S_MAX, "seq_tile": TILE_SEQ,
+           "prompt_len": prompt_len, "requests": n_requests}
+    if shards == 1:
+        out.update({"skipped": True, "balance": 1.0})
+        return out
+
+    from repro.launch.mesh import make_kv_mesh
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(0, cfg.vocab, prompt_len))
+               for _ in range(n_requests)]
+    mesh = make_kv_mesh(shards)
+
+    def serve(kernel_mode, use_mesh, length_bound=True):
+        eng = MultiPortEngine(params, cfg, slots=n_requests,
+                              max_len=TILE_S_MAX, seq_tile=TILE_SEQ,
+                              chunk_tokens=8, kernel_mode=kernel_mode,
+                              length_bound=length_bound,
+                              mesh=mesh if use_mesh else None)
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        done = eng.run(max_cycles=2000)
+        # completion/identity failures are RECORDED, not raised: the JSON
+        # record and the gate diagnostics must materialize on regressions
+        # too (CI uploads the artifact precisely when a gate fails)
+        return eng, (len(done) == n_requests,
+                     {r.rid: tuple(r.generated) for r in done})
+
+    ep, (ok_p, tp) = serve("pallas", True)
+    er, (ok_r, tr) = serve("reference", True)
+    e1, (ok_1, t1) = serve("pallas", False)
+    eu, (ok_u, tu) = serve("pallas", True, length_bound=False)
+    steady = max(ep.steady_decode_steps, 1)
+    out.update({
+        "skipped": False,
+        "completed": ok_p and ok_r and ok_1 and ok_u,
+        "tokens_match_unsharded": tp == tr == t1 == tu
+        and ok_p and ok_r and ok_1 and ok_u,
+        "balance": ep.kv_tile_balance,
+        "tile_reads_by_dev": list(ep.steady_decode_tile_reads_by_dev),
+        "pool_tile_reads_by_shard": list(ep.pool.tile_reads_by_shard),
+        "pool_tile_writes_by_shard": list(ep.pool.tile_writes_by_shard),
+        "pages_per_shard": ep.pool.plan.pages_per_shard,
+        # max(..., 1e-9) denominators: a stalled sharded engine must surface
+        # as a failed gate with a written record, never a ZeroDivisionError
+        "traversal_ratio": (er.steady_decode_traversals
+                            / max(er.steady_decode_steps, 1)
+                            / max(ep.steady_decode_traversals / steady,
+                                  1e-9)),
+        "within_tile_bound": (ep.steady_decode_tile_reads
+                              <= ep.steady_decode_tile_bound),
+        "tile_ratio": (eu.steady_decode_tile_reads
+                       / max(eu.steady_decode_steps, 1)
+                       / max(ep.steady_decode_tile_reads / steady, 1e-9)),
+        "decode_traces": ep.decode_traces,
+    })
+    return out
+
+
 def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
                requests: int = 4) -> dict:
     """Retrace accounting across a cache-length sweep: the SAME engine
@@ -299,7 +382,7 @@ def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
             "dynamic": sweep(True), "bucketed": sweep(False)}
 
 
-def report(r: dict, pf: dict, tl: dict, tr: dict) -> None:
+def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict) -> None:
     print("# serving engine: fused multi-port vs reference vs single-port "
           "(claim C1)")
     print("mode,cycles,seconds,tokens,cycles/token,pool_traversals,"
@@ -352,6 +435,20 @@ def report(r: dict, pf: dict, tl: dict, tr: dict) -> None:
         x = tr[name]
         print(f"{name},{x['decode_traces']},{x['prefill_traces']},"
               f"{'/'.join(map(str, x['stage_lens']))}")
+    print()
+    print(f"# data-parallel KV: pool page-aligned over {kv['kv_shards']} "
+          f"device(s) of {kv['available_devices']} visible "
+          f"(S_max={kv['s_max']}, seq_tile={kv['seq_tile']})")
+    if kv.get("skipped"):
+        print("skipped: needs > 1 device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 before jax init)")
+    else:
+        print("tile_reads_by_dev,balance,traversal_ratio,tile_ratio,"
+              "within_tile_bound,decode_traces,tokens_match_unsharded")
+        print(f"{'/'.join(map(str, kv['tile_reads_by_dev']))},"
+              f"{kv['balance']:.2f},{kv['traversal_ratio']:.2f},"
+              f"{kv['tile_ratio']:.2f},{kv['within_tile_bound']},"
+              f"{kv['decode_traces']},{kv['tokens_match_unsharded']}")
 
 
 def main(argv=None) -> None:
@@ -359,7 +456,7 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the bench-engine/v2 record (BENCH_engine.json)")
+                    help="write the bench-engine/v4 record (BENCH_engine.json)")
     ap.add_argument("--min-traversal-ratio", type=float, default=None,
                     help="exit non-zero if fused-vs-reference steady-decode "
                          "traversal ratio drops below this gate")
@@ -373,13 +470,20 @@ def main(argv=None) -> None:
                     help="exit non-zero if the dynamic-grid decode path "
                          "needs more than ONE jit trace across the "
                          "cache-length sweep")
+    ap.add_argument("--max-kv-balance", type=float, default=None,
+                    help="exit non-zero if the sharded per-device steady-"
+                         "decode tile-read balance (max/mean) exceeds this, "
+                         "or any sharded headline gate (traversal/tile/"
+                         "trace/token identity) regresses; skipped with a "
+                         "warning when only one device is visible")
     args = ap.parse_args(argv)
 
     r = run(args.requests, args.max_new)
     pf = run_prefill()
     tl = run_tiles()
     tr = run_traces()
-    report(r, pf, tl, tr)
+    kv = run_kv_balance()
+    report(r, pf, tl, tr, kv)
 
     # the gate combines the engine's accounting invariant with the DIRECT
     # kernel-measured serviced-tile probe (the part that can actually catch
@@ -392,7 +496,7 @@ def main(argv=None) -> None:
         per_tok = [pf["per_batch"][str(n)]["traversals_per_token"]
                    for n in PREFILL_BATCHES]
         record = {
-            "schema": "bench-engine/v3",
+            "schema": "bench-engine/v4",
             "config": {"arch": "tinyllama-1.1b", "reduced": True,
                        "requests": args.requests, "max_new": args.max_new,
                        "seq_tile": TILE_SEQ, "s_max": TILE_S_MAX},
@@ -402,6 +506,7 @@ def main(argv=None) -> None:
             "prefill": pf,
             "tiles": tl,
             "traces": tr,
+            "kv": kv,
             "gate": {
                 "min_traversal_ratio": args.min_traversal_ratio,
                 "traversal_ratio": r["traversal_ratio"],
@@ -413,6 +518,9 @@ def main(argv=None) -> None:
                 "tile_ratio_at_s8": tl["tile_ratio_at_s8"],
                 "enforce_single_trace": args.enforce_single_trace,
                 "dynamic_decode_traces": tr["dynamic"]["decode_traces"],
+                "max_kv_balance": args.max_kv_balance,
+                "kv_balance": kv["balance"],
+                "kv_shards": kv["kv_shards"],
             },
         }
         with open(args.json, "w") as f:
@@ -462,6 +570,36 @@ def main(argv=None) -> None:
         else:
             print("GATE OK: 1 decode trace across the cache-length sweep "
                   f"(bucketed fallback: {tr['bucketed']['decode_traces']})")
+    if args.max_kv_balance is not None:
+        if kv.get("skipped"):
+            print("GATE SKIP: kv balance needs > 1 visible device (set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        else:
+            sharded_ok = (kv["tokens_match_unsharded"]
+                          and kv["within_tile_bound"]
+                          and (args.min_traversal_ratio is None
+                               or kv["traversal_ratio"]
+                               >= args.min_traversal_ratio)
+                          and (args.min_tile_ratio is None
+                               or kv["tile_ratio"] >= args.min_tile_ratio)
+                          and (not args.enforce_single_trace
+                               or kv["decode_traces"] in (-1, 1)))
+            if kv["balance"] > args.max_kv_balance or not sharded_ok:
+                print(f"GATE FAIL: data-parallel KV over {kv['kv_shards']} "
+                      f"devices — balance {kv['balance']:.2f} (max "
+                      f"{args.max_kv_balance}), traversal_ratio "
+                      f"{kv['traversal_ratio']:.2f}, tile_ratio "
+                      f"{kv['tile_ratio']:.2f}, within_tile_bound "
+                      f"{kv['within_tile_bound']}, decode_traces "
+                      f"{kv['decode_traces']}, tokens_match "
+                      f"{kv['tokens_match_unsharded']}", file=sys.stderr)
+                failed = True
+            else:
+                print(f"GATE OK: kv balance {kv['balance']:.2f} <= "
+                      f"{args.max_kv_balance} over {kv['kv_shards']} devices "
+                      f"(sharded traversal {kv['traversal_ratio']:.2f}x, "
+                      f"tile {kv['tile_ratio']:.2f}x, traces "
+                      f"{kv['decode_traces']})")
     if failed:
         sys.exit(1)
 

@@ -11,6 +11,16 @@ Batch specs are computed per shape cell (``batch_spec``): the largest subset
 of data axes whose product divides the global batch is used — long_500k with
 global_batch=1 therefore replicates batch and shards the KV-cache sequence
 dim instead (``kv_cache_spec``).
+
+Serving adds a third spec family: the paged KV POOL (``kv_pool_spec``) —
+the physical word-addressable pool that backs the multi-port serving
+engine. Its word axis IS the sequence/page axis (word ``w`` belongs to page
+``w // page_tokens``), and it shards across the ``kv`` mesh axis with
+PAGE-ALIGNED boundaries: every shard holds a whole number of pages, so a
+page never straddles devices and the page tables (host-side python ints)
+stay replicated control plane. ``kv_shard_plan`` is the validated geometry
+(shards, pages/words per shard) both the pool's device-aware allocator and
+the launchers consume.
 """
 from __future__ import annotations
 
@@ -25,6 +35,25 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 PyTree = Any
+
+
+def compat_shard_map(fn, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (moved out of ``jax.experimental``
+    in newer JAX). ``check_rep=False`` everywhere: the mapped bodies launch
+    Pallas calls / psums whose replication the checker cannot see through.
+    """
+    try:
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    except ImportError:
+        from jax import shard_map as _sm          # >= 0.7 stable API
+        try:
+            return _sm(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+        except TypeError:                         # kwarg renamed over time
+            return _sm(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +284,78 @@ def kv_cache_spec(cfg: ArchConfig, mesh: Mesh, rules: Rules, *,
     seq = tuple(seq_axes) if seq_axes else None
     lead = (None,) * n_stack
     return P(*lead, ba, seq, tp_on_heads, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVShardPlan:
+    """Validated page-aligned sharding geometry for the paged KV pool.
+
+    The pool's word axis is its sequence/page axis: word ``w`` belongs to
+    page ``w // page_tokens`` and shard ``w // words_per_shard``. The plan
+    guarantees every shard boundary is a page boundary, so a page (and
+    therefore every word of a token's KV) lives on exactly one device and
+    the host-side page tables stay replicated control plane.
+    """
+    n_shards: int
+    n_pages: int
+    page_tokens: int
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.n_pages % self.n_shards:
+            raise ValueError(
+                f"kv sharding is page-aligned: {self.n_pages} pages do not "
+                f"divide across {self.n_shards} shards — round the pool up "
+                f"to a whole number of pages per shard")
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.n_pages // self.n_shards
+
+    @property
+    def words_per_shard(self) -> int:
+        return self.pages_per_shard * self.page_tokens
+
+    @property
+    def num_words(self) -> int:
+        return self.n_pages * self.page_tokens
+
+    def shard_of_page(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    def shard_of_word(self, word: int) -> int:
+        return word // self.words_per_shard
+
+
+def kv_shard_plan(n_shards: int, *, n_pages: int,
+                  page_tokens: int) -> KVShardPlan:
+    """Page-aligned shard plan, rounding the pool UP to a whole number of
+    pages per shard (extra capacity is harmless; a straddling page is not)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    pages = -(-n_pages // n_shards) * n_shards
+    return KVShardPlan(n_shards=n_shards, n_pages=pages,
+                       page_tokens=page_tokens)
+
+
+def kv_pool_spec(mesh: Mesh, *, num_words: int, page_tokens: int,
+                 axis: str = "kv") -> P:
+    """Spec for the paged pool storage ``[num_words, word_width]``: the word
+    (= sequence/page) axis shards across ``axis`` with page-aligned
+    boundaries. Raises when a shard boundary would straddle a page."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    n = int(mesh.shape[axis])
+    if num_words % n:
+        raise ValueError(
+            f"pool of {num_words} words does not divide across the "
+            f"{n}-way {axis!r} axis")
+    if (num_words // n) % page_tokens:
+        raise ValueError(
+            f"shard boundary straddles a page: {num_words // n} words per "
+            f"shard is not a multiple of page_tokens={page_tokens}")
+    return P(axis, None)
 
 
 def decode_state_pspecs(cfg: ArchConfig, mesh: Mesh, rules: Optional[Rules],

@@ -69,30 +69,62 @@ def multiport_step(spec: MemorySpec, config: PortConfig, storage: jax.Array,
     return banked.reshape(spec.num_words, spec.word_width), reads
 
 
+def _kv_shard_wrap(kernel, mesh, mesh_axis: str, batch: int, n_in: int,
+                   n_out: int):
+    """Wrap a fused KV kernel launch in ``shard_map`` over the batch axis of
+    every operand: each device services ITS sequences with its own SMEM
+    scalar prefetch (the shard's cache_len/offset/chunk_len slice) and its
+    own dynamic live-tile bound — ``jnp.max`` over the shard-local lengths
+    inside the mapped body — so a device holding short sequences traverses
+    fewer tiles than one holding long sequences. Returns the kernel
+    unchanged when the mesh is absent or trivial."""
+    if mesh is None:
+        return kernel
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    n = int(mesh.shape[mesh_axis])
+    if n == 1:
+        return kernel
+    if batch % n:
+        raise ValueError(
+            f"kv-sharded kernel launch needs the batch ({batch}) to divide "
+            f"across the {n}-way {mesh_axis!r} axis — pad the staged batch "
+            f"to a whole number of rows per device")
+    return compat_shard_map(kernel, mesh,
+                            in_specs=(P(mesh_axis),) * n_in,
+                            out_specs=(P(mesh_axis),) * n_out)
+
+
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
                                              "length_mask", "dynamic_grid",
-                                             "interpret"))
+                                             "interpret", "mesh", "mesh_axis"))
 def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            new_k: jax.Array, new_v: jax.Array,
                            cache_len: jax.Array, *, seq_tile: int = 128,
                            live_len: int | None = None,
                            length_mask: bool = True,
                            dynamic_grid: bool = False,
-                           interpret: bool = True):
+                           interpret: bool = True,
+                           mesh=None, mesh_axis: str = "kv"):
     """Fused 2-port (1W+1R) length-bounded decode step. See kv_multiport.py.
 
     ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
     count instead of the static ``live_len`` prefix — one trace serves every
-    cache length."""
-    return kvmp.fused_append_attend(q, cache_k, cache_v, new_k, new_v,
-                                    cache_len, seq_tile=seq_tile,
-                                    live_len=live_len, length_mask=length_mask,
-                                    dynamic_grid=dynamic_grid,
-                                    interpret=interpret)
+    cache length. ``mesh`` (with a ``mesh_axis`` axis) runs the traversal
+    under ``shard_map`` over the batch axis: per-shard SMEM scalars,
+    per-shard live-tile bounds (see ``_kv_shard_wrap``)."""
+    kernel = functools.partial(kvmp.fused_append_attend, seq_tile=seq_tile,
+                               live_len=live_len, length_mask=length_mask,
+                               dynamic_grid=dynamic_grid, interpret=interpret)
+    kernel = _kv_shard_wrap(kernel, mesh, mesh_axis, q.shape[0],
+                            n_in=6, n_out=3)
+    return kernel(q, cache_k, cache_v, new_k, new_v, cache_len)
 
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
-                                             "dynamic_grid", "interpret"))
+                                             "dynamic_grid", "interpret",
+                                             "mesh", "mesh_axis"))
 def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
                                   cache_v: jax.Array, new_k: jax.Array,
                                   new_v: jax.Array, offset: jax.Array,
@@ -100,17 +132,20 @@ def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
                                   seq_tile: int = 128,
                                   live_len: int | None = None,
                                   dynamic_grid: bool = False,
-                                  interpret: bool = True):
+                                  interpret: bool = True,
+                                  mesh=None, mesh_axis: str = "kv"):
     """Fused 2-port (1W+1R) length-bounded chunked-prefill step.
 
     See kv_prefill_chunk.py; the jnp oracle is ref.prefill_chunk_attention_ref.
     ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
-    count instead of the static ``live_len`` prefix."""
-    return kvpc.fused_chunk_append_attend(q, cache_k, cache_v, new_k, new_v,
-                                          offset, chunk_len,
-                                          seq_tile=seq_tile, live_len=live_len,
-                                          dynamic_grid=dynamic_grid,
-                                          interpret=interpret)
+    count instead of the static ``live_len`` prefix. ``mesh`` shards the
+    traversal over the batch axis exactly like the decode wrapper."""
+    kernel = functools.partial(kvpc.fused_chunk_append_attend,
+                               seq_tile=seq_tile, live_len=live_len,
+                               dynamic_grid=dynamic_grid, interpret=interpret)
+    kernel = _kv_shard_wrap(kernel, mesh, mesh_axis, q.shape[0],
+                            n_in=7, n_out=3)
+    return kernel(q, cache_k, cache_v, new_k, new_v, offset, chunk_len)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_tile", "k_tile", "interpret"))

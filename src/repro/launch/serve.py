@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --requests 8 --max-new 8 [--single-port]
+
+Multi-device (data-parallel KV — the paged pool sharded page-aligned over a
+``kv`` mesh axis, kernels shard_map'd by home device):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --kv-shards 4
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.launch.mesh import make_kv_mesh
 from repro.models import init_params
 from repro.serve.engine import MultiPortEngine
 
@@ -41,6 +48,12 @@ def main() -> None:
                          "(one jit retrace per power-of-two tile bucket) "
                          "instead of the dynamic-grid kernels whose single "
                          "trace serves every cache length")
+    ap.add_argument("--kv-shards", type=int, default=1,
+                    help="shard the paged KV pool page-aligned across this "
+                         "many devices (data-parallel KV: device-aware page "
+                         "allocation + shard_map'd pool/kernels); on CPU, "
+                         "force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--single-port", action="store_true")
     ap.add_argument("--kernel-mode", default="pallas",
                     choices=["pallas", "reference"])
@@ -70,6 +83,14 @@ def main() -> None:
     grid = "bucketed" if args.no_dynamic_grid else "dynamic-grid"
     print(f"length-bounded staging buckets (seq_tile={seq_tile}, "
           f"S_max={args.max_len}, {grid}): {list(buckets)}")
+    mesh = None
+    if args.kv_shards > 1:
+        try:
+            mesh = make_kv_mesh(args.kv_shards)
+        except ValueError as e:
+            raise SystemExit(f"--kv-shards: {e}")
+        print(f"data-parallel KV: pool sharded page-aligned over "
+              f"{args.kv_shards} devices ({[str(d) for d in mesh.devices.flat]})")
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = MultiPortEngine(params, cfg, slots=args.slots,
                           max_slots=max(args.max_slots, args.slots),
@@ -80,7 +101,8 @@ def main() -> None:
                           seq_tile=seq_tile,
                           length_bound=not args.no_length_bound,
                           dynamic_grid=not args.no_dynamic_grid,
-                          interpret=not args.no_interpret)
+                          interpret=not args.no_interpret,
+                          mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(list(rng.integers(0, cfg.vocab, int(rng.integers(3, 10)))),
@@ -105,6 +127,13 @@ def main() -> None:
           f"{eng.prefill_tile_reads / max(eng.prefill_chunks, 1):.2f}/chunk "
           f"vs {-(-args.max_len // eng.seq_tile)} dense; pool "
           f"r/w {eng.pool.tile_reads}/{eng.pool.tile_writes}")
+    if eng.n_kv_shards > 1:
+        print(f"kv shards: {eng.n_kv_shards} "
+              f"(pages/shard {eng.pool.plan.pages_per_shard}); steady decode "
+              f"tile reads by device {eng.steady_decode_tile_reads_by_dev} "
+              f"(balance {eng.kv_tile_balance:.2f}x ideal); pool tiles r/w "
+              f"by shard {eng.pool.tile_reads_by_shard}/"
+              f"{eng.pool.tile_writes_by_shard}")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
 

@@ -57,6 +57,25 @@ def prefill_chunk_specs(cfg: ArchConfig, batch: int, chunk: int) -> dict:
             "chunk_len": sds((batch,), jnp.int32)}
 
 
+def kv_pool_specs(mesh: Mesh, *, n_pages: int, page_tokens: int,
+                  word_width: int, axis: str = "kv"
+                  ) -> tuple[jax.ShapeDtypeStruct, NamedSharding]:
+    """No-allocation stand-in for the serving engine's paged KV pool
+    storage: the ``[num_words, word_pad(word_width)]`` ShapeDtypeStruct plus
+    its page-aligned NamedSharding over the ``kv`` axis — the dry-run's way
+    to validate a deployment's pool geometry (page counts rounded to whole
+    pages per shard, no shard boundary inside a page) without touching
+    device memory. Mirrors ``PagedPool.create(mesh=...)``."""
+    from repro.kernels.tiling import word_pad
+
+    plan = shd.kv_shard_plan(int(mesh.shape[axis]), n_pages=n_pages,
+                             page_tokens=page_tokens)
+    pspec = shd.kv_pool_spec(mesh, num_words=plan.num_words,
+                             page_tokens=page_tokens, axis=axis)
+    return (sds((plan.num_words, word_pad(word_width)), jnp.float32),
+            NamedSharding(mesh, pspec))
+
+
 def params_shapes(cfg: ArchConfig) -> PyTree:
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     return jax.eval_shape(lambda k: init_params(k, cfg), key)

@@ -34,6 +34,31 @@ Pallas one-traversal kernel; ``interpret=`` executes it in Python on CPU
 CI), ``use_kernel=False`` keeps the jnp oracle ``core.step``. The page-table
 bookkeeping stays host-side (python ints — it is control plane, like the
 engine's scheduler).
+
+**Multi-device sharding** (``kv_shards`` > 1, optionally backed by a real
+``mesh`` with a ``kv`` axis): the pool's word axis — its sequence/page axis
+— shards across devices with PAGE-ALIGNED boundaries (the plan is validated
+by :func:`repro.distributed.sharding.kv_shard_plan`; a page never straddles
+two shards). Page allocation becomes device-aware: each sequence gets a HOME
+shard on admission (least-loaded by live-sequence count, then by free
+pages) and every one of its pages is carved from that shard's own free
+list, so a sequence's whole KV — and therefore every port transaction that
+touches it — stays device-local. A cycle whose page demand overflows a home
+shard raises :class:`PoolCapacityError` BEFORE any mutation, even when
+other shards still have free pages (cross-shard spill would break
+locality; the scheduler can evict or re-admit instead). Page tables stay
+replicated host-side control plane.
+
+With a real ``mesh``, the data plane runs under ``shard_map``: storage is
+laid out ``P("kv", None)`` (``kv_pool_spec``), each device services the
+request lanes whose global word addresses fall inside its shard (local
+re-addressing + mask), and read ports psum their lane results — exactly one
+shard owns each address, so the sum is the gather. One sharded cycle is
+still ONE traversal: all shards traverse concurrently, which is the paper's
+multi-port discipline extended across independent memory channels.
+``kv_shards`` without a mesh keeps the device-aware control plane (home
+shards, per-shard free lists, the capacity precheck) over unsharded
+storage — the cheap CI surface the allocation property tests run against.
 """
 from __future__ import annotations
 
@@ -47,6 +72,8 @@ import numpy as np
 
 from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
                         empty_request, step, step_banked)
+from repro.distributed.sharding import (KVShardPlan, compat_shard_map,
+                                        kv_pool_spec, kv_shard_plan)
 from repro.kernels.tiling import word_pad
 
 # pool port indices
@@ -59,11 +86,13 @@ Stream = Union[dict, Sequence[dict], None]
 
 
 class PoolCapacityError(MemoryError):
-    """An admission's page demand exceeds the pool's free page supply.
+    """An admission's page demand exceeds its home shard's free page supply.
 
     Raised BEFORE any page-table or length mutation: a failed transaction
     leaves the pool exactly as it was, so the scheduler can retry the
-    admission after evictions free pages."""
+    admission after evictions free pages. Under device-aware allocation the
+    error names the full home shard even when OTHER shards still hold free
+    pages — a sequence's pages never spill across shards."""
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -113,22 +142,63 @@ def _pool_step(spec, config, storage, requests, *, use_kernel: bool,
     return step(spec, config, storage, requests)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_pool_step(local_spec, config, mesh, kv_axis: str, wps: int,
+                       use_kernel: bool, interpret: bool):
+    """Jitted shard-mapped pool step: each shard services the request lanes
+    whose global addresses land in its ``wps``-word range (local
+    re-addressing; lanes owned by other shards are masked off — masked
+    read lanes return 0), then read ports psum lane results across the
+    ``kv`` axis. Exactly one shard owns each address, so the psum IS the
+    gather, and the write/scrub lanes commit on their owner only."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(storage, requests):
+        sid = jax.lax.axis_index(kv_axis)
+        lo = sid * wps
+        local = tuple(
+            PortRequest(addr=r.addr - lo, data=r.data,
+                        mask=r.mask & (r.addr >= lo) & (r.addr < lo + wps))
+            for r in requests)
+        if use_kernel:
+            st, outs = step_banked(local_spec, config, storage, local,
+                                   interpret=interpret)
+        else:
+            st, outs = step(local_spec, config, storage, local)
+        outs = [jax.lax.psum(o, kv_axis) if config.roles[p] == READ
+                else o for p, o in enumerate(outs)]
+        return st, outs
+
+    smapped = compat_shard_map(
+        body, mesh,
+        in_specs=(P(kv_axis, None), (P(),) * 4),
+        out_specs=(P(kv_axis, None), [P()] * 4))
+    return jax.jit(smapped)
+
+
 @dataclasses.dataclass
 class PagedPool:
-    """Physical pool + free list + per-sequence page tables."""
+    """Physical pool + per-shard free lists + per-sequence page tables."""
 
     spec: MemorySpec
     page_tokens: int
     storage: jax.Array
-    free_pages: list
+    free_by_shard: list                # shard -> free page ids (device-aware)
     tables: dict                       # seq_id -> list[page_id]
     lengths: dict                      # seq_id -> tokens stored
+    plan: KVShardPlan = None           # page-aligned shard geometry
+    home: dict = dataclasses.field(default_factory=dict)  # seq_id -> shard
+    mesh: Optional[object] = None      # jax Mesh with the kv axis (or None)
+    kv_axis: str = "kv"
+    spec_local: Optional[MemorySpec] = None   # per-shard geometry (mesh only)
     use_kernel: bool = False
     interpret: bool = True
     traversals: int = 0                # physical pool traversals serviced
     seq_tile: int = 0                  # words per accounting tile
     tile_reads: int = 0                # distinct R-port tiles touched
     tile_writes: int = 0               # distinct W-port tiles touched
+    tile_reads_by_shard: list = dataclasses.field(default_factory=list)
+    tile_writes_by_shard: list = dataclasses.field(default_factory=list)
     io_width: int = 0                  # caller-visible word width (the
                                        # storage word is lane-padded past it)
 
@@ -136,10 +206,25 @@ class PagedPool:
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
                dtype=jnp.float32, num_banks: int = 8,
                use_kernel: bool = False, interpret: bool = True,
-               seq_tile: int = 0) -> "PagedPool":
-        num_words = n_pages * page_tokens
+               seq_tile: int = 0, kv_shards: int = 1, mesh=None,
+               kv_axis: str = "kv") -> "PagedPool":
+        if mesh is not None:
+            if kv_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh {mesh.axis_names} has no {kv_axis!r} axis")
+            mesh_n = int(mesh.shape[kv_axis])
+            if kv_shards not in (1, mesh_n):
+                raise ValueError(
+                    f"kv_shards={kv_shards} disagrees with the mesh's "
+                    f"{mesh_n}-way {kv_axis!r} axis")
+            kv_shards = mesh_n
+        # page-aligned shard plan: rounds the pool UP to whole pages/shard
+        plan = kv_shard_plan(kv_shards, n_pages=n_pages,
+                             page_tokens=page_tokens)
+        num_words = plan.num_words
         while num_words % num_banks:
             num_banks //= 2                       # geometry guard
+        num_banks = max(num_banks, 1)
         # Mosaic lane alignment: the STORAGE word is padded to a whole lane
         # count (word_pad) so the banked kernel's [wpb, W] tiles keep a
         # 128-multiple minor dim at CI's small word widths too; callers keep
@@ -147,38 +232,133 @@ class PagedPool:
         # zero and cropped on the way out)
         spec = MemorySpec(num_words=num_words,
                           word_width=word_pad(word_width), dtype=dtype,
-                          num_banks=max(num_banks, 1))
-        return cls(spec=spec, page_tokens=page_tokens,
-                   storage=spec.init_storage(),
-                   free_pages=list(range(n_pages)), tables={}, lengths={},
+                          num_banks=num_banks)
+        storage = spec.init_storage()
+        spec_local = None
+        if mesh is not None and kv_shards > 1:
+            from jax.sharding import NamedSharding
+            pspec = kv_pool_spec(mesh, num_words=num_words,
+                                 page_tokens=page_tokens, axis=kv_axis)
+            storage = jax.device_put(storage, NamedSharding(mesh, pspec))
+            wps = plan.words_per_shard
+            nb_local = num_banks
+            while wps % nb_local:
+                nb_local //= 2
+            spec_local = MemorySpec(num_words=wps,
+                                    word_width=spec.word_width, dtype=dtype,
+                                    num_banks=max(nb_local, 1))
+        return cls(spec=spec, page_tokens=page_tokens, storage=storage,
+                   free_by_shard=[list(range(s * plan.pages_per_shard,
+                                             (s + 1) * plan.pages_per_shard))
+                                  for s in range(kv_shards)],
+                   tables={}, lengths={}, plan=plan, mesh=mesh,
+                   kv_axis=kv_axis, spec_local=spec_local,
                    use_kernel=use_kernel, interpret=interpret,
-                   seq_tile=seq_tile or page_tokens, io_width=word_width)
+                   seq_tile=seq_tile or page_tokens,
+                   tile_reads_by_shard=[0] * kv_shards,
+                   tile_writes_by_shard=[0] * kv_shards,
+                   io_width=word_width)
+
+    # ---- shard geometry ------------------------------------------------------
+    @property
+    def kv_shards(self) -> int:
+        return self.plan.n_shards
+
+    @property
+    def words_per_shard(self) -> int:
+        return self.plan.words_per_shard
+
+    @property
+    def free_pages(self) -> list:
+        """All free page ids (shard-major) — the legacy single-list view."""
+        return [p for fl in self.free_by_shard for p in fl]
+
+    @property
+    def free_page_count(self) -> int:
+        return sum(len(fl) for fl in self.free_by_shard)
+
+    def home_of(self, seq: int) -> Optional[int]:
+        """The shard a sequence's pages live on (None before admission)."""
+        return self.home.get(seq)
+
+    def _home_loads(self) -> list:
+        loads = [0] * self.kv_shards
+        for s in self.home.values():
+            loads[s] += 1
+        return loads
+
+    def _pick_home(self, loads: list, free_counts: list) -> int:
+        """THE home-selection policy — least live sequences, then most free
+        pages, then lowest shard id. The transactional precheck simulates
+        admissions through this same function, so the shard it validates is
+        always the shard the commit path assigns."""
+        return min(range(self.kv_shards),
+                   key=lambda s: (loads[s], -free_counts[s], s))
+
+    def assign_home(self, seq: int) -> int:
+        """Pick (or return) a sequence's home shard. Idempotent; callers may
+        pre-assign at admission so the engine can group compute by shard
+        before the first page is carved."""
+        got = self.home.get(seq)
+        if got is not None:
+            return got
+        shard = self._pick_home(self._home_loads(),
+                                [len(fl) for fl in self.free_by_shard])
+        self.home[seq] = shard
+        return shard
+
+    def _tile_shard(self, tile: int) -> int:
+        """Shard owning an accounting tile, attributed by its FIRST word.
+
+        Exact whenever ``seq_tile`` divides ``words_per_shard`` (true for
+        the power-of-two shard counts and tile sizes the launchers and CI
+        use); for geometries where a ``seq_tile``-word window can straddle
+        a boundary, the straddling tile counts toward the lower shard —
+        an observability approximation only, never a data-placement one
+        (pages, and therefore words, still never straddle)."""
+        if self.kv_shards == 1:
+            return 0
+        return min((tile * self.seq_tile) // self.words_per_shard,
+                   self.kv_shards - 1)
+
+    def _count_tiles(self, tiles: set, counters: list) -> int:
+        for t in tiles:
+            counters[self._tile_shard(int(t))] += 1
+        return len(tiles)
 
     # ---- control plane ------------------------------------------------------
     def _ensure_capacity(self, seq: int, new_tokens: int) -> None:
         table = self.tables.setdefault(seq, [])
         self.lengths.setdefault(seq, 0)
         need = -(-(self.lengths[seq] + new_tokens) // self.page_tokens)
+        shard = self.assign_home(seq)
+        free = self.free_by_shard[shard]
         while len(table) < need:
-            if not self.free_pages:
+            if not free:
                 raise PoolCapacityError(
                     f"seq {seq}: growing to {self.lengths[seq] + new_tokens} "
                     f"tokens needs {need} pages but only {len(table)} are "
-                    f"mapped and the free list is empty")
-            table.append(self.free_pages.pop())
+                    f"mapped and home shard {shard}'s free list is empty "
+                    f"({self.free_page_count} pages free pool-wide — pages "
+                    f"never straddle shards)")
+            table.append(free.pop())
 
     def _check_capacity(self, write_streams: Sequence[dict],
                         read_streams: Sequence[dict]) -> None:
         """Transactional admission check, run BEFORE any table mutation:
-        the cycle's total page demand must fit the free list, and every read
-        position must fall inside the words its sequence will have mapped
-        once this cycle's writes land (reads are serviced after writes, so
-        same-cycle append+read of a fresh page is legal)."""
+        each sequence's page demand must fit its HOME shard's free list
+        (simulated per shard, in stream order, so multi-sequence admissions
+        see the same home-assignment the commit path will make), and every
+        read position must fall inside the words its sequence will have
+        mapped once this cycle's writes land (reads are serviced after
+        writes, so same-cycle append+read of a fresh page is legal)."""
         demand: dict = {}
         for s in write_streams:
             seq = s["seq"]
             demand[seq] = demand.get(seq, 0) + int(s["vectors"].shape[0])
-        need = 0
+        sim_free = [len(fl) for fl in self.free_by_shard]
+        loads = self._home_loads()
+        staged_homes: dict = {}
         projected = {}
         for seq, new_tokens in demand.items():
             held = len(self.tables.get(seq, []))
@@ -186,13 +366,22 @@ class PagedPool:
                         -(-(self.lengths.get(seq, 0) + new_tokens)
                           // self.page_tokens))
             projected[seq] = pages
-            need += pages - held
-        if need > len(self.free_pages):
-            raise PoolCapacityError(
-                f"admission of {sum(demand.values())} tokens across "
-                f"{len(demand)} sequence(s) needs {need} new pages but only "
-                f"{len(self.free_pages)} of {self.spec.num_words // self.page_tokens} "
-                f"are free — evict sequences or raise the pool size")
+            need = pages - held
+            shard = self.home.get(seq)
+            if shard is None:
+                shard = self._pick_home(loads, sim_free)
+                staged_homes[seq] = shard
+                loads[shard] += 1
+            if need > sim_free[shard]:
+                elsewhere = sum(sim_free) - sim_free[shard]
+                raise PoolCapacityError(
+                    f"admission of {demand[seq]} tokens for seq {seq} needs "
+                    f"{need} new pages on home shard {shard} but only "
+                    f"{sim_free[shard]} of its {self.plan.pages_per_shard} "
+                    f"are free ({elsewhere} free pages on other shards are "
+                    f"unusable — pages never straddle shards; evict "
+                    f"sequences or raise the pool size)")
+            sim_free[shard] -= need
         for s in read_streams:
             seq = s["seq"]
             pages = projected.get(seq, len(self.tables.get(seq, [])))
@@ -205,6 +394,12 @@ class PagedPool:
                     f"seq {seq}: positions [{pos.min()}, {pos.max()}] outside "
                     f"the {pages * self.page_tokens} words its page table "
                     f"maps this cycle")
+        # the WHOLE cycle validated (capacity and reads): commit the staged
+        # home assignments (metadata only — the page mutations follow in
+        # _write_req via _ensure_capacity, which reuses exactly these homes).
+        # Committing last keeps the transactional contract: a refused cycle
+        # leaves the pool, home map included, exactly as it was.
+        self.home.update(staged_homes)
 
     def _addr(self, seq: int, token_idx: np.ndarray) -> np.ndarray:
         table = self.tables.get(seq)
@@ -222,11 +417,14 @@ class PagedPool:
                 + token_idx % self.page_tokens)
 
     def free(self, seq: int) -> list:
-        """Release a sequence's pages; returns the freed page ids (so the
-        caller can scrub them through port D in the same macro-cycle)."""
+        """Release a sequence's pages to their owning shards' free lists;
+        returns the freed page ids (so the caller can scrub them through
+        port D in the same macro-cycle)."""
         pages = self.tables.pop(seq, [])
-        self.free_pages.extend(pages)
+        for p in pages:
+            self.free_by_shard[self.plan.shard_of_page(p)].append(p)
         self.lengths.pop(seq, None)
+        self.home.pop(seq, None)
         return pages
 
     # ---- data plane: one macro-cycle -----------------------------------------
@@ -241,6 +439,10 @@ class PagedPool:
         scrub:   page ids to zero (port D — eviction)
         Returns {"read": [Q, W] | list thereof | None} mirroring the input
         shape of ``read``.
+
+        Sharded pools (a real mesh) run the traversal under ``shard_map``:
+        every shard concurrently services its own address range and read
+        lanes psum — still ONE traversal of (now distributed) storage.
         """
         read_was_dict = isinstance(read, dict)
         appends = self._as_streams(append)
@@ -326,13 +528,21 @@ class PagedPool:
         cfg = PortConfig(enabled=(bool(appends), bool(reads), bool(prefills),
                                   bool(scrub)),
                          roles=_ROLES, priority=_PRIORITY)
-        self.storage, out = _pool_step(self.spec, cfg, self.storage,
-                                       tuple(reqs),
-                                       use_kernel=self.use_kernel,
-                                       interpret=self.interpret)
+        if self.mesh is not None and self.kv_shards > 1:
+            fn = _sharded_pool_step(self.spec_local, cfg, self.mesh,
+                                    self.kv_axis, self.words_per_shard,
+                                    self.use_kernel, self.interpret)
+            self.storage, out = fn(self.storage, tuple(reqs))
+        else:
+            self.storage, out = _pool_step(self.spec, cfg, self.storage,
+                                           tuple(reqs),
+                                           use_kernel=self.use_kernel,
+                                           interpret=self.interpret)
         self.traversals += 1
-        self.tile_writes += len(w_tiles)
-        self.tile_reads += len(r_tiles)
+        self.tile_writes += self._count_tiles(w_tiles,
+                                              self.tile_writes_by_shard)
+        self.tile_reads += self._count_tiles(r_tiles,
+                                             self.tile_reads_by_shard)
         if not reads:
             return {"read": None}
         got = [out[ATTN_READ][a:b, :self.io_width] for a, b in slices]
@@ -349,4 +559,4 @@ class PagedPool:
     @property
     def utilization(self) -> float:
         total = self.spec.num_words // self.page_tokens
-        return 1.0 - len(self.free_pages) / total
+        return 1.0 - self.free_page_count / total

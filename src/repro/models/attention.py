@@ -135,6 +135,7 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
                             seq_tile: int = 128,
                             dynamic_grid: bool = False,
                             interpret: bool = True,
+                            mesh=None, mesh_axis: str = "kv",
                             compute_dtype=None):
     """One fixed-size prompt chunk per sequence, mid-prefill.
 
@@ -170,7 +171,8 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
         from repro.kernels import ops
         out, cache_k, cache_v = ops.fused_prefill_chunk_attention(
             q, cache_k, cache_v, new_k, new_v, offset, chunk_len,
-            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret)
+            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
+            mesh=mesh, mesh_axis=mesh_axis)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.prefill_chunk_attention_ref(
@@ -187,6 +189,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      kernel_mode: Literal["reference", "multiport"] = "reference",
                      seq_tile: int = 128, length_mask: bool = True,
                      dynamic_grid: bool = False, interpret: bool = True,
+                     mesh=None, mesh_axis: str = "kv",
                      compute_dtype=None):
     """One decode step. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, D];
     cache_len: [B] current lengths. Returns (out [B,1,d], k', v').
@@ -194,6 +197,9 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
     The multiport path traverses ``seq_tile``-sized cache tiles and, under
     ``length_mask``, skips tiles past each sequence's live length — callers
     additionally bound S_max itself by staging a bucketed live prefix.
+    ``mesh`` runs the fused traversal under ``shard_map`` over the batch
+    axis (data-parallel KV: each device's kernel sees only its own
+    sequences' SMEM scalars and live-tile bound).
     """
     b = x.shape[0]
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, compute_dtype)
@@ -216,7 +222,8 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
         out, cache_k, cache_v = ops.fused_decode_attention(
             q1, cache_k, cache_v, new_k, new_v, cache_len,
             seq_tile=seq_tile, length_mask=length_mask,
-            dynamic_grid=dynamic_grid, interpret=interpret)
+            dynamic_grid=dynamic_grid, interpret=interpret,
+            mesh=mesh, mesh_axis=mesh_axis)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.decode_attention_ref(

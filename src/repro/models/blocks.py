@@ -79,7 +79,8 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
                                     kernel_mode: str = "reference",
                                     seq_tile: int = 128,
                                     dynamic_grid: bool = False,
-                                    interpret: bool = True):
+                                    interpret: bool = True,
+                                    mesh=None, mesh_axis: str = "kv"):
     h, ck, cv = A.attention_prefill_chunk(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), offset, chunk_len,
         cache_k, cache_v,
@@ -87,6 +88,7 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
+        mesh=mesh, mesh_axis=mesh_axis,
         compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -101,7 +103,8 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
                              cfg: ArchConfig, kernel_mode: str = "reference",
                              seq_tile: int = 128, length_mask: bool = True,
                              dynamic_grid: bool = False,
-                             interpret: bool = True):
+                             interpret: bool = True,
+                             mesh=None, mesh_axis: str = "kv"):
     h, ck, cv = A.attention_decode(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache_k, cache_v,
         cache_len,
@@ -110,6 +113,7 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, length_mask=length_mask,
         dynamic_grid=dynamic_grid, interpret=interpret,
+        mesh=mesh, mesh_axis=mesh_axis,
         compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)

@@ -239,12 +239,15 @@ def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
 def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 *, kernel_mode: str = "reference", seq_tile: int = 128,
                 length_mask: bool = True, dynamic_grid: bool = False,
-                interpret: bool = True) -> tuple[PyTree, jax.Array]:
+                interpret: bool = True, mesh=None,
+                mesh_axis: str = "kv") -> tuple[PyTree, jax.Array]:
     """Returns (state', logits [B, V]).
 
     ``seq_tile``/``length_mask`` bound the multiport kernel's traversal to
     live cache tiles; callers bound the allocated length itself by passing a
     state whose caches hold a bucketed live prefix (the engine does both).
+    ``mesh`` (data-parallel KV) runs the fused traversal under ``shard_map``
+    over the batch axis — per-device SMEM scalars and live-tile bounds.
     """
     inputs = batch["inputs"]
     x = _stem(params, cfg, inputs, offset=state["len"])
@@ -255,7 +258,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                dynamic_grid=dynamic_grid, interpret=interpret)
+                dynamic_grid=dynamic_grid, interpret=interpret,
+                mesh=mesh, mesh_axis=mesh_axis)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], state["cache_k"], state["cache_v"]))
@@ -279,7 +283,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                dynamic_grid=dynamic_grid, interpret=interpret)
+                dynamic_grid=dynamic_grid, interpret=interpret,
+                mesh=mesh, mesh_axis=mesh_axis)
 
             def inner(hh, ys):
                 pl, cs, ss = ys
@@ -385,7 +390,8 @@ def prefill(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
 
 def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                   *, kernel_mode: str = "reference", seq_tile: int = 128,
-                  dynamic_grid: bool = False, interpret: bool = True
+                  dynamic_grid: bool = False, interpret: bool = True,
+                  mesh=None, mesh_axis: str = "kv"
                   ) -> tuple[PyTree, jax.Array]:
     """Process ONE fixed-size prompt chunk for a batch of sequences.
 
@@ -416,7 +422,8 @@ def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
         pl, ck, cv = xs
         h, ck, cv = B.transformer_block_prefill_chunk(
             pl, h, offset, chunk_len, ck, cv, cfg, kernel_mode=kernel_mode,
-            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret)
+            seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
+            mesh=mesh, mesh_axis=mesh_axis)
         return h, (ck, cv)
     x, (ck, cv) = jax.lax.scan(
         body, x, (params["layers"], state["cache_k"], state["cache_v"]))

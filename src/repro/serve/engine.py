@@ -63,6 +63,25 @@ tiles actually touched; ``steady_decode_tile_bound`` is the ideal
 ``interpret=True`` (default) executes the Pallas kernels in Python — the
 CPU-CI escape hatch; pass ``False`` on TPU deployments to lower through
 Mosaic.
+
+**Data-parallel KV** (``mesh`` with a ``kv`` axis): the pool's word axis —
+its sequence/page axis — shards across devices with page-aligned
+boundaries (``distributed.sharding.kv_shard_plan``; a page never straddles
+two devices) and page allocation turns device-aware: every request gets a
+HOME shard at admission and all its pages are carved from that shard, so
+its pool traffic and its kernel compute stay device-local. The engine
+stages decode and prefill-chunk batches in contiguous PER-DEVICE row
+blocks (each padded to a power-of-two rows-per-device, so the batch always
+divides across the mesh) and both fused kernels launch under ``shard_map``:
+each device's kernel prefetches only its own sequences' SMEM scalars and
+bounds its own dynamic tile grid with ITS max live length — a device
+serving short sequences traverses fewer tiles than one serving long
+sequences, which ``decode_tile_reads_by_dev`` (and the bench's v4
+per-device balance column) makes visible. ``PagedPool.cycle`` runs the
+pool traversal under ``shard_map`` too (per-shard address windows, psum'd
+read lanes). Greedy decode stays token-identical to the single-device
+path at every device count, in both kernel modes — ``kernel_mode=
+"reference"`` is the sharded oracle.
 """
 from __future__ import annotations
 
@@ -121,7 +140,8 @@ class MultiPortEngine:
                  kernel_mode: str = "pallas", single_port: bool = False,
                  greedy: bool = True, page_tokens: int = 8,
                  seq_tile: int = 128, length_bound: bool = True,
-                 dynamic_grid: bool = True, interpret: bool = True):
+                 dynamic_grid: bool = True, interpret: bool = True,
+                 mesh=None, kv_axis: str = "kv"):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
@@ -164,15 +184,27 @@ class MultiPortEngine:
         # read needs finite positions)
         self._dead_row = -1 if kernel_mode == "pallas" else 0
 
+        # data-parallel KV: shard the pool page-aligned across the mesh's
+        # kv axis and group staged batches by home device (see module doc)
+        self.mesh = mesh
+        self.kv_axis = kv_axis
+        if mesh is not None and kv_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh {mesh.axis_names} has no {kv_axis!r} axis — build it "
+                f"with launch.mesh.make_kv_mesh")
+        self.n_kv_shards = int(mesh.shape[kv_axis]) if mesh is not None else 1
+
         # physical pool: word = one token's (K, V) across all layers, sized
-        # for the FULL grown slot table
+        # for the FULL grown slot table (the pool rounds up to a whole
+        # number of pages per shard — page-aligned shard boundaries)
         self._kv_dims = (cfg.n_layers, 2, cfg.n_kv_heads, cfg.head_dim_)
         word_width = int(np.prod(self._kv_dims))
         n_pages = self.max_slots * (-(-max_len // page_tokens))
         self.pool = PagedPool.create(
             n_pages=n_pages, page_tokens=page_tokens, word_width=word_width,
             dtype=jnp.float32, use_kernel=(kernel_mode == "pallas"),
-            interpret=interpret, seq_tile=self.seq_tile)
+            interpret=interpret, seq_tile=self.seq_tile,
+            mesh=mesh, kv_axis=kv_axis)
 
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_len: list[int] = [0] * slots      # tokens committed to pool
@@ -197,22 +229,33 @@ class MultiPortEngine:
         self.steady_decode_tile_reads = 0
         self.steady_decode_tile_bound = 0   # sum of ceil((len+1)/seq_tile)
         self.prefill_tile_reads = 0
+        # per-device attribution of the same R-port tiles (device = the
+        # sequence's home shard == its kernel shard): the balance surface
+        # the bench's v4 per-device column reads
+        self.decode_tile_reads_by_dev = [0] * self.n_kv_shards
+        self.steady_decode_tile_reads_by_dev = [0] * self.n_kv_shards
+        self.prefill_tile_reads_by_dev = [0] * self.n_kv_shards
         self.port_log: list[tuple[int, ...]] = []
         self._next_rid = 0
         self._sp_rotate = 0
 
         attn_mode = "multiport" if kernel_mode == "pallas" else "reference"
         tile, dyn = self.seq_tile, self.dynamic_grid
+        # the fused kernels only shard when the mesh is non-trivial; the jnp
+        # reference ignores the mesh (it is the sharded-pool oracle)
+        kmesh = mesh if self.n_kv_shards > 1 else None
         self._decode = jax.jit(
             lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
                                         seq_tile=tile,
                                         length_mask=length_bound,
                                         dynamic_grid=dyn,
-                                        interpret=interpret))
+                                        interpret=interpret,
+                                        mesh=kmesh, mesh_axis=kv_axis))
         self._prefill_chunk = jax.jit(
             lambda p, s, b: prefill_chunk(p, cfg, s, b, kernel_mode=attn_mode,
                                           seq_tile=tile, dynamic_grid=dyn,
-                                          interpret=interpret))
+                                          interpret=interpret,
+                                          mesh=kmesh, mesh_axis=kv_axis))
 
     # ---- client API --------------------------------------------------------
     @classmethod
@@ -265,6 +308,18 @@ class MultiPortEngine:
     @property
     def pool_traversals(self) -> int:
         return self.pool.traversals
+
+    @property
+    def kv_tile_balance(self) -> float:
+        """Per-device steady-decode tile-read balance: max over devices
+        divided by the per-device mean (1.0 = perfectly balanced traffic;
+        the bench's v4 gate asserts this stays within 1.25x of ideal).
+        Trivially 1.0 unsharded or before any steady decode."""
+        per = self.steady_decode_tile_reads_by_dev
+        total = sum(per)
+        if self.n_kv_shards == 1 or not total:
+            return 1.0
+        return max(per) / (total / self.n_kv_shards)
 
     # ---- port collection routines -------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -323,19 +378,45 @@ class MultiPortEngine:
         self.stage_lens_seen.add(got)
         return got
 
-    def _tiles_touched(self, needs: list, stage_s: int,
-                       bounded: bool) -> tuple[int, int]:
-        """(tiles the kernel's R port touches, ideal ceil-bound) summed over
-        the traversals of ``needs`` live-lengths against a ``stage_s``-long
-        staging cache. Unbounded traversals touch every grid tile."""
+    def _group_rows(self, slots: list, *, base: int
+                    ) -> tuple[int, dict, list]:
+        """Per-HOME-DEVICE contiguous row blocks for a staged batch: device
+        ``d``'s sequences occupy rows ``[d*rpd, d*rpd + len(group_d))`` with
+        ``rpd`` a power of two >= the largest group (>= ``base // n`` for
+        jit shape stability), so ``nb = rpd * n_kv_shards`` always divides
+        across the mesh and each shard_map shard sees exactly its own
+        sequences. Returns (nb, slot->row, per-device slot groups)."""
+        n = self.n_kv_shards
+        groups: list[list] = [[] for _ in range(n)]
+        for i in slots:
+            groups[self.pool.assign_home(self.slot_req[i].rid)].append(i)
+        rpd = _bucket(max([len(g) for g in groups] + [1]),
+                      lo=max(1, base // n))
+        row_of = {i: d * rpd + j
+                  for d, g in enumerate(groups) for j, i in enumerate(g)}
+        return rpd * n, row_of, groups
+
+    def _tiles_touched(self, needs_by_dev: list, stage_s: int,
+                       bounded: bool) -> tuple[int, int, list]:
+        """(tiles the kernel's R port touches, ideal ceil-bound, per-device
+        tile reads) summed over the traversals of the per-device
+        live-length groups against a ``stage_s``-long staging cache. The
+        dynamic grid is bounded PER DEVICE — each shard's traversal stops
+        at ITS OWN live-tile count. Unbounded traversals touch every grid
+        tile."""
         tile = fit_seq_tile(stage_s, self.seq_tile)
-        grid = stage_s // tile
-        if bounded and self.dynamic_grid and needs:
-            # the dynamic grid itself stops at the batch's live-tile count
-            grid = min(grid, max(1, max(-(-n // tile) for n in needs)))
-        bound = sum(min(-(-n // tile), grid) for n in needs)
-        touched = bound if bounded else grid * len(needs)
-        return touched, bound
+        grid_full = stage_s // tile
+        per_dev, bound_total = [], 0
+        for needs in needs_by_dev:
+            grid = grid_full
+            if bounded and self.dynamic_grid and needs:
+                # each shard's dynamic grid stops at its live-tile count
+                grid = min(grid, max(1, max(-(-n // tile) for n in needs)))
+            bound = sum(min(-(-n // tile), grid) for n in needs)
+            touched = bound if bounded else grid * len(needs)
+            per_dev.append(touched)
+            bound_total += bound
+        return sum(per_dev), bound_total, per_dev
 
     def _kv_words(self, cache_k, cache_v, slot: int, t0: int, t1: int
                   ) -> np.ndarray:
@@ -362,6 +443,10 @@ class MultiPortEngine:
             if self.cfg.input_mode == "embeddings":
                 raise NotImplementedError("engine demo serves token models")
             self.slot_req[slot] = req
+            # device-aware placement: the home shard is fixed at admission
+            # (least-loaded), BEFORE the first page is carved, so the first
+            # chunk's compute can already be grouped onto its device
+            self.pool.assign_home(req.rid)
             self._prefilling[slot] = _PrefillState(
                 consumed=0,
                 stage_k=np.zeros((nl, self.max_len, hkv, hd), np.float32),
@@ -375,18 +460,24 @@ class MultiPortEngine:
         # the chunk kernel's tile grid is bounded by the longest live prefix
         order = sorted(self._prefilling)
         c = self.chunk_tokens
-        nb = _bucket(len(order), lo=1)
-        needs = [self._prefilling[s].consumed
-                 + min(c, len(self.slot_req[s].prompt)
-                       - self._prefilling[s].consumed) for s in order]
-        stage_s = self._stage_len(max(needs))
+        if self.n_kv_shards == 1:
+            nb = _bucket(len(order), lo=1)
+            row_of = {s: j for j, s in enumerate(order)}
+            groups = [list(order)]
+        else:
+            nb, row_of, groups = self._group_rows(order, base=1)
+        need_of = {s: self._prefilling[s].consumed
+                   + min(c, len(self.slot_req[s].prompt)
+                         - self._prefilling[s].consumed) for s in order}
+        stage_s = self._stage_len(max(need_of.values()))
         live = min(stage_s, self.max_len)   # last bucket may pad past max_len
         toks = np.zeros((nb, c), np.int32)
         clen = np.zeros((nb,), np.int32)
         offs = np.full((nb,), self._dead_row, np.int32)
         stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
         stage_v = np.zeros_like(stage_k)
-        for j, slot in enumerate(order):
+        for slot in order:
+            j = row_of[slot]
             ps = self._prefilling[slot]
             req = self.slot_req[slot]
             t0 = ps.consumed
@@ -407,13 +498,17 @@ class MultiPortEngine:
         lg = np.asarray(logits)
         # the chunk kernel masks dead tiles per sequence; the jnp reference
         # reads the whole staged cache densely per chunk
-        touched, _ = self._tiles_touched(needs, stage_s,
-                                         bounded=self.kernel_mode == "pallas")
+        touched, _, per_dev = self._tiles_touched(
+            [[need_of[s] for s in g] for g in groups], stage_s,
+            bounded=self.kernel_mode == "pallas")
         self.prefill_tile_reads += touched
+        for d, t in enumerate(per_dev):
+            self.prefill_tile_reads_by_dev[d] += t
         self.prefill_chunks += len(order)
 
         streams = []
-        for j, slot in enumerate(order):
+        for slot in order:
+            j = row_of[slot]
             ps = self._prefilling[slot]
             req = self.slot_req[slot]
             t0, n = int(offs[j]), int(clen[j])
@@ -451,32 +546,46 @@ class MultiPortEngine:
         """Tokens the slot will hold once this cycle's append commits."""
         return self.slot_len[slot] + (1 if slot in self._pending else 0)
 
-    def _compute_decode(self, active: list, gathered: list) -> tuple[int, int]:
+    def _compute_decode(self, active: list, gathered: list
+                        ) -> tuple[int, int, list]:
         """Run one fused decode step for all active slots over staging caches
         assembled from the pool gather; stash each slot's new KV word as the
         next cycle's append. The staging batch is padded to a power-of-two
         bucket so slot-pool growth retraces the jit only at bucket edges, and
         the staging LENGTH covers a bucketed count of live seq_tile tiles so
-        the decode kernel's grid scales with cache_len, not max_len.
+        the decode kernel's grid scales with cache_len, not max_len. Under
+        data-parallel KV the batch rows are grouped into contiguous
+        per-home-device blocks so the shard_map'd kernel's shards line up
+        with the pool's page placement.
 
-        Returns (R-port tiles touched, ideal per-slot ceil tile bound)."""
+        Returns (R-port tiles touched, ideal per-slot ceil tile bound,
+        per-device tile reads)."""
         nl, _, hkv, hd = self._kv_dims
-        nb = _bucket(len(self.slot_req), lo=self._init_slots)
-        needs = [rows.shape[0] + 1 for rows in gathered]  # post-append lens
-        stage_s = self._stage_len(max(needs, default=1))
+        if self.n_kv_shards == 1:
+            nb = _bucket(len(self.slot_req), lo=self._init_slots)
+            row_of = {i: i for i in active}
+            groups = [list(active)]
+        else:
+            nb, row_of, groups = self._group_rows(
+                active, base=_bucket(len(self.slot_req),
+                                     lo=self._init_slots))
+        need_of = {i: rows.shape[0] + 1                 # post-append lens
+                   for i, rows in zip(active, gathered)}
+        stage_s = self._stage_len(max(need_of.values(), default=1))
         stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
         stage_v = np.zeros_like(stage_k)
         lens = np.full((nb,), self._dead_row, np.int32)
         last_tokens = np.zeros((nb, 1), np.int32)
         for i, rows in zip(active, gathered):
+            j = row_of[i]
             t = rows.shape[0]
             w = np.asarray(rows, np.float32).reshape(t, nl, 2, hkv, hd)
-            stage_k[:, i, :t] = np.moveaxis(w[:, :, 0], 0, 1)
-            stage_v[:, i, :t] = np.moveaxis(w[:, :, 1], 0, 1)
-            lens[i] = t
+            stage_k[:, j, :t] = np.moveaxis(w[:, :, 0], 0, 1)
+            stage_v[:, j, :t] = np.moveaxis(w[:, :, 1], 0, 1)
+            lens[j] = t
             r = self.slot_req[i]
             seqs = r.generated or r.prompt
-            last_tokens[i, 0] = seqs[-1]
+            last_tokens[j, 0] = seqs[-1]
 
         state = {"len": jnp.asarray(lens),
                  "cache_k": jnp.asarray(stage_k),
@@ -486,14 +595,16 @@ class MultiPortEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         ck, cv = st["cache_k"], st["cache_v"]
         for i in active:
-            self._pending[i] = self._kv_words(ck, cv, i, int(lens[i]),
-                                              int(lens[i]) + 1)[0]
+            j = row_of[i]
+            self._pending[i] = self._kv_words(ck, cv, j, int(lens[j]),
+                                              int(lens[j]) + 1)[0]
             r = self.slot_req[i]
-            r.generated.append(int(nxt[i]))
+            r.generated.append(int(nxt[j]))
             if len(r.generated) >= r.max_new:
                 r.done = True
         bounded = self.kernel_mode == "pallas" and self.length_bound
-        return self._tiles_touched(needs, stage_s, bounded=bounded)
+        return self._tiles_touched([[need_of[i] for i in g] for g in groups],
+                                   stage_s, bounded=bounded)
 
     def _service_status(self) -> dict:
         return {"cycle": self.cycles,
@@ -505,7 +616,8 @@ class MultiPortEngine:
                 "lens": [self._total_len(i) if self.slot_req[i] is not None
                          else 0 for i in range(len(self.slot_req))],
                 "pool_utilization": self.pool.utilization,
-                "pool_traversals": self.pool.traversals}
+                "pool_traversals": self.pool.traversals,
+                "kv_shards": self.n_kv_shards}
 
     # ---- the macro-cycle -----------------------------------------------------
     def step(self) -> dict:
@@ -573,13 +685,17 @@ class MultiPortEngine:
         if active:
             self.decode_steps += 1
             self.decode_traversals += dt
-            tiles, bound = self._compute_decode(active, gathered)
+            tiles, bound, per_dev = self._compute_decode(active, gathered)
             self.decode_tile_reads += tiles
+            for d, t in enumerate(per_dev):
+                self.decode_tile_reads_by_dev[d] += t
             if appends:
                 self.steady_decode_steps += 1
                 self.steady_decode_traversals += dt
                 self.steady_decode_tile_reads += tiles
                 self.steady_decode_tile_bound += bound
+                for d, t in enumerate(per_dev):
+                    self.steady_decode_tile_reads_by_dev[d] += t
 
         self.cycles += 1
         self.port_log.append(slots)

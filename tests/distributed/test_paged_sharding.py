@@ -1,0 +1,287 @@
+"""Multi-device paged pool: page-aligned KV sharding.
+
+Three layers of coverage:
+
+* a DEVICE-COUNT-PARAMETRIZED token-identity suite (subprocesses with 8
+  forced host devices, meshes of 1/2/4/8): sharded pallas == sharded
+  reference == the unsharded single-device oracle, through mid-stream
+  admissions and slot-pool growth;
+* in-process allocation tests against the pool's device-aware CONTROL
+  plane (``kv_shards`` without a mesh — the same free lists / home map /
+  precheck the sharded data plane runs over): the ``PoolCapacityError``
+  full-home-shard regression and, when ``hypothesis`` is installed (CI's
+  ``dev`` extra), a property suite over random alloc/append/scrub/free
+  traffic — no page ever straddles a shard boundary, no page is ever
+  double-assigned, free-list accounting matches capacity;
+* shard-plan validation (page-aligned rounding, straddle rejection).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import kv_shard_plan
+from repro.memory.paged_kv import PagedPool, PoolCapacityError
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def run_py(body: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4, 8])
+def test_sharded_engine_token_identical(n_dev):
+    """Greedy decode is token-identical across device counts and kernel
+    modes — sharded pallas vs sharded reference vs the unsharded oracle —
+    with requests admitted mid-stream and the slot pool growing past its
+    initial size along the way."""
+    out = run_py(f"""
+        import jax, numpy as np
+        from repro.configs import registry
+        from repro.launch.mesh import make_kv_mesh
+        from repro.models import init_params
+        from repro.serve.engine import MultiPortEngine
+
+        cfg = registry.get("tinyllama-1.1b", reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(17)
+        prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(3, 9))))
+                   for _ in range(5)]
+
+        def serve(kernel_mode, mesh):
+            eng = MultiPortEngine(params, cfg, slots=2, max_slots=8,
+                                  max_len=64, chunk_tokens=8, seq_tile=8,
+                                  kernel_mode=kernel_mode, mesh=mesh)
+            for p in prompts[:3]:
+                eng.submit(p, max_new=3)
+            for _ in range(3):            # first admissions reach decode
+                if eng.pending_work():
+                    eng.step()
+            for p in prompts[3:]:         # mid-stream admissions
+                eng.submit(p, max_new=3)
+            done = eng.run(max_cycles=1000)
+            assert len(done) == len(prompts)
+            return eng, {{r.rid: tuple(r.generated) for r in done}}
+
+        oracle_eng, oracle = serve("pallas", None)
+        mesh = make_kv_mesh({n_dev})
+        ep, tp = serve("pallas", mesh)
+        er, tr = serve("reference", mesh)
+        assert tp == oracle, ("pallas", tp, oracle)
+        assert tr == oracle, ("reference", tr, oracle)
+        assert ep.n_slots > 2, "slot pool must have grown"
+        assert ep.n_kv_shards == {n_dev}
+        # the pool really sharded: every sequence's pages stayed on one shard
+        # during the run (freed on completion), and accounting adds up
+        assert sum(ep.steady_decode_tile_reads_by_dev) == \\
+            ep.steady_decode_tile_reads
+        assert ep.kv_tile_balance >= 1.0
+        print("TOKENS-OK", {n_dev})
+    """)
+    assert f"TOKENS-OK {n_dev}" in out
+
+
+def test_kv_shard_plan_page_aligned():
+    """The shard plan never lets a page straddle a boundary: pools round UP
+    to whole pages per shard, and a hand-built misaligned plan is
+    rejected."""
+    plan = kv_shard_plan(4, n_pages=10, page_tokens=8)
+    assert plan.n_pages == 12 and plan.pages_per_shard == 3
+    assert plan.words_per_shard == 24
+    assert plan.words_per_shard % plan.page_tokens == 0
+    assert [plan.shard_of_page(p) for p in range(12)] == \
+        [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]
+    with pytest.raises(ValueError, match="page-aligned"):
+        from repro.distributed.sharding import KVShardPlan
+        KVShardPlan(n_shards=4, n_pages=10, page_tokens=8)
+    # a pool created with kv_shards rounds itself up the same way
+    pool = PagedPool.create(n_pages=10, page_tokens=8, word_width=8,
+                            num_banks=4, kv_shards=4)
+    assert pool.plan.n_pages == 12
+    assert len(pool.free_pages) == 12
+
+
+def test_kv_pool_spec_validation():
+    """kv_pool_spec rejects straddling geometry and missing axes even on a
+    single-device mesh (the divisibility rules are mesh-size-independent),
+    and the dry-run stand-in ``launch.specs.kv_pool_specs`` mirrors the
+    geometry ``PagedPool.create`` actually allocates."""
+    from repro.distributed.sharding import kv_pool_spec
+    from repro.launch.mesh import make_kv_mesh
+    from repro.launch.specs import kv_pool_specs
+    mesh = make_kv_mesh(1)
+    assert tuple(kv_pool_spec(mesh, num_words=96, page_tokens=8)) == \
+        ("kv", None)
+    with pytest.raises(ValueError, match="straddles a page"):
+        kv_pool_spec(mesh, num_words=96, page_tokens=5)
+    with pytest.raises(ValueError, match="no 'model' axis"):
+        kv_pool_spec(mesh, num_words=96, page_tokens=8, axis="model")
+    # the no-allocation stand-in and the real pool agree on the rounded
+    # page count, the lane-padded word width, and the storage sharding spec
+    # (10 pages stay 10 on one shard; a 4-shard plan rounds them up to 12)
+    sds, ns = kv_pool_specs(mesh, n_pages=10, page_tokens=8, word_width=24)
+    pool = PagedPool.create(n_pages=10, page_tokens=8, word_width=24,
+                            num_banks=4, kv_shards=1)
+    assert sds.shape == pool.storage.shape == (80, 128)
+    assert tuple(ns.spec) == ("kv", None)
+    pool4 = PagedPool.create(n_pages=10, page_tokens=8, word_width=24,
+                             num_banks=4, kv_shards=4)
+    from repro.distributed.sharding import kv_shard_plan
+    assert pool4.storage.shape[0] == \
+        kv_shard_plan(4, n_pages=10, page_tokens=8).num_words == 96
+
+
+def test_capacity_error_full_home_shard_before_mutation():
+    """Regression pin for PoolCapacityError under device-aware allocation:
+    when a sequence's HOME shard is full, the cycle raises the named error
+    BEFORE any mutation even though other shards still hold free pages —
+    pages never spill across shards (the transactional precheck from PR 2,
+    now per shard)."""
+    # 2 shards x 4 pages x 4 tokens
+    pool = PagedPool.create(n_pages=8, page_tokens=4, word_width=8,
+                            num_banks=4, kv_shards=2)
+    # seq 1 fills shard 0 completely (16 tokens = 4 pages)
+    pool.cycle(prefill={"seq": 1, "vectors": np.ones((16, 8), np.float32)})
+    assert pool.home_of(1) == 0
+    assert len(pool.free_by_shard[0]) == 0
+    assert len(pool.free_by_shard[1]) == 4
+    # seq 1 wants one more page: home shard 0 is full, shard 1's free pages
+    # must NOT be used — named error, nothing mutated
+    free_before = [list(f) for f in pool.free_by_shard]
+    tables_before = {k: list(v) for k, v in pool.tables.items()}
+    with pytest.raises(PoolCapacityError, match="home shard 0"):
+        pool.cycle(append={"seq": 1, "vectors": np.ones((1, 8), np.float32)})
+    assert [list(f) for f in pool.free_by_shard] == free_before
+    assert {k: list(v) for k, v in pool.tables.items()} == tables_before
+    assert pool.lengths == {1: 16}
+    # a NEW sequence is homed on shard 1 (least loaded with free pages)
+    # and still admits fine — the pool as a whole is not wedged
+    pool.cycle(prefill={"seq": 2, "vectors": np.ones((8, 8), np.float32)})
+    assert pool.home_of(2) == 1
+    assert pool.lengths[2] == 8
+    # evicting seq 1 returns all four pages to shard 0's free list and the
+    # refused grow now succeeds for a fresh sequence homed there
+    pool.free(1)
+    assert len(pool.free_by_shard[0]) == 4
+    pool.cycle(prefill={"seq": 3, "vectors": np.ones((4, 8), np.float32)})
+    assert pool.home_of(3) == 0
+
+
+def test_refused_read_does_not_leak_home_assignment():
+    """A cycle refused for an out-of-range READ must not commit the write
+    streams' staged home assignments either — a never-admitted sequence
+    leaving a phantom entry in the home map would skew every future
+    least-loaded placement."""
+    pool = PagedPool.create(n_pages=8, page_tokens=4, word_width=8,
+                            num_banks=4, kv_shards=2)
+    with pytest.raises(IndexError):
+        pool.cycle(prefill={"seq": 9, "vectors": np.ones((4, 8), np.float32)},
+                   read={"seq": 9, "positions": np.arange(99)})
+    assert pool.home_of(9) is None
+    assert not pool.home and not pool.tables and not pool.lengths
+    assert len(pool.free_pages) == 8
+
+
+def test_multi_admission_precheck_is_per_shard():
+    """A multi-sequence admission whose TOTAL demand fits the pool but
+    overflows one home shard is refused up front, atomically."""
+    pool = PagedPool.create(n_pages=8, page_tokens=4, word_width=8,
+                            num_banks=4, kv_shards=2)
+    # both 3-page prompts would be homed round-robin: shard 0 gets seq 5,
+    # shard 1 gets seq 6 — fits. A third 3-page prompt in the SAME cycle
+    # must overflow someone's 4-page shard while 2 pages sit free overall.
+    with pytest.raises(PoolCapacityError, match="never straddle"):
+        pool.cycle(prefill=[
+            {"seq": 5, "vectors": np.ones((12, 8), np.float32)},
+            {"seq": 6, "vectors": np.ones((12, 8), np.float32)},
+            {"seq": 7, "vectors": np.ones((12, 8), np.float32)}])
+    assert not pool.tables and not pool.lengths and not pool.home
+    assert len(pool.free_pages) == 8
+    # the two-sequence version commits cleanly on separate shards
+    pool.cycle(prefill=[
+        {"seq": 5, "vectors": np.ones((12, 8), np.float32)},
+        {"seq": 6, "vectors": np.ones((12, 8), np.float32)}])
+    assert {pool.home_of(5), pool.home_of(6)} == {0, 1}
+
+
+def test_allocation_invariants_property():
+    """Property (CI installs the ``dev`` extra; skips locally): random
+    alloc/append/scrub/free traffic against a sharded pool never produces a
+    page outside its owner's home shard (no straddling, by page-aligned
+    construction AND by allocation), never double-assigns a page, and the
+    free lists always partition exactly the pages no sequence owns."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    N_PAGES, PAGE_TOKENS, WORD = 16, 4, 8
+
+    def check_invariants(pool):
+        plan = pool.plan
+        owned = [p for t in pool.tables.values() for p in t]
+        free = pool.free_pages
+        # no double assignment, across tables and free lists
+        assert len(owned) == len(set(owned))
+        assert len(free) == len(set(free))
+        assert not (set(owned) & set(free))
+        # accounting matches capacity exactly
+        assert sorted(owned + free) == list(range(plan.n_pages))
+        # per-shard free lists hold only their own shard's pages
+        for s, fl in enumerate(pool.free_by_shard):
+            assert all(plan.shard_of_page(p) == s for p in fl)
+        for seq, table in pool.tables.items():
+            home = pool.home_of(seq)
+            # every page of a sequence lives wholly on its home shard:
+            # first and last word of each page map to the same shard
+            for p in table:
+                assert plan.shard_of_page(p) == home
+                w0, w1 = p * PAGE_TOKENS, (p + 1) * PAGE_TOKENS - 1
+                assert plan.shard_of_word(w0) == plan.shard_of_word(w1) \
+                    == home
+            # length fits the mapped pages
+            assert pool.lengths[seq] <= len(table) * PAGE_TOKENS
+
+    @hyp.settings(max_examples=30, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(kv_shards=st.sampled_from([1, 2, 4]),
+               ops=st.lists(
+                   st.tuples(st.sampled_from(["grow", "free"]),
+                             st.integers(0, 5),       # seq id
+                             st.integers(1, 9)),      # token count
+                   min_size=1, max_size=24))
+    def prop(kv_shards, ops):
+        pool = PagedPool.create(n_pages=N_PAGES, page_tokens=PAGE_TOKENS,
+                                word_width=WORD, num_banks=4,
+                                kv_shards=kv_shards)
+        for kind, seq, toks in ops:
+            if kind == "grow":
+                vec = np.full((toks, WORD), float(seq + 1), np.float32)
+                # alternate the two write ports (append vs bulk prefill)
+                port = "append" if (seq + toks) % 2 else "prefill"
+                try:
+                    pool.cycle(**{port: {"seq": seq, "vectors": vec}})
+                except PoolCapacityError:
+                    pass                       # refusal must be transactional
+            else:
+                freed = pool.free(seq)
+                if freed:                      # scrub through port D
+                    pool.cycle(scrub=freed)
+            check_invariants(pool)
+        # drain: free everything, all pages return, accounting exact
+        for seq in list(pool.tables):
+            pool.free(seq)
+        check_invariants(pool)
+        assert len(pool.free_pages) == pool.plan.n_pages
+        assert not pool.home
+
+    prop()

@@ -22,7 +22,7 @@ from repro.kernels.kv_multiport import decode_block_specs, fused_append_attend
 from repro.kernels.kv_prefill_chunk import (chunk_block_specs,
                                             fused_chunk_append_attend)
 from repro.kernels.tiling import LANE, SUBLANE, check_block
-from repro.memory.paged_kv import seq_tile_buckets
+from repro.memory.paged_kv import _bucket, seq_tile_buckets
 
 # (name, b, chunk, h, hkv, d, s_max, seq_tile)
 GEOMETRIES = [
@@ -47,6 +47,39 @@ def test_kernel_blocks_mosaic_aligned(name, b, c, h, hkv, d, s_max, tile):
             errs = check_block(blk, arr)
             assert not errs, (name, stage, nm, errs)
             assert len(blk) <= 4, (name, stage, nm, blk)
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4, 8])
+@pytest.mark.parametrize("name,b,c,h,hkv,d,s_max,tile", GEOMETRIES)
+def test_kernel_blocks_shard_local(name, b, c, h, hkv, d, s_max, tile,
+                                   n_dev):
+    """Per-shard block specs under data-parallel KV, at every device count
+    in the CI matrix: each shard_map shard launches the kernels over its
+    OWN batch block (the engine pads rows-per-device to a power of two, so
+    the local batch is ``bucket(ceil(b / n_dev))``) against the full staged
+    cache — the sequence axis is NOT sharded (a sequence lives wholly on
+    its home device), so shard-local Sp equals the staged Sp and must stay
+    a whole tile count, and every (8,128) rule must hold on the shard-local
+    shapes exactly as on the global ones."""
+    local_b = _bucket(-(-b // n_dev), lo=1)
+    assert local_b * n_dev >= b            # the padded batch covers everyone
+    stages = set(seq_tile_buckets(s_max, min(tile, s_max))) | {s_max}
+    for stage in stages:
+        for nm, blk, arr in (decode_block_specs(local_b, stage, h, hkv, d,
+                                                tile)
+                             + chunk_block_specs(local_b, c, stage, h, hkv,
+                                                 d, tile)):
+            errs = check_block(blk, arr)
+            assert not errs, (name, n_dev, stage, nm, errs)
+            assert len(blk) <= 4, (name, n_dev, stage, nm, blk)
+            if nm in ("cache_k", "cache_v", "out_k", "out_v"):
+                # shard-local Sp (= the staged Sp: the sequence axis is not
+                # sharded) stays a whole count of the EFFECTIVE tile the
+                # spec table picked, so per-shard traversals never need a
+                # degenerate partial tile at any device count
+                sp, eff_tile = arr[1], blk[1]
+                assert sp % eff_tile == 0, (name, n_dev, stage, nm)
+                assert sp >= stage, (name, n_dev, stage, nm)
 
 
 def test_lint_flags_bad_geometry():
