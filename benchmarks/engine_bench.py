@@ -25,7 +25,7 @@ dynamic-grid kernels (live bound read from SMEM at run time) serve every
 cache length from ONE decode trace, where the bucketed fallback retraces
 once per power-of-two stage-length bucket.
 
-A fifth section (this schema revision) measures DATA-PARALLEL KV: the paged
+A fifth section measures DATA-PARALLEL KV: the paged
 pool sharded page-aligned across a ``kv`` mesh (forced host devices on CPU
 CI), kernels shard_map'd by home device. It reports the per-device steady-
 decode tile-read balance (max device / per-device mean; 1.0 = ideal) and
@@ -36,18 +36,31 @@ Needs > 1 visible device (``XLA_FLAGS=--xla_force_host_platform_device_
 count=8`` on CPU); with one device the section records itself as skipped
 and the sharded gates no-op.
 
+A sixth section (this schema revision) measures the CONFIGURABLE PORT MIX:
+a mixed prefill+decode workload with STAGGERED prompt lengths keeps some
+slots mid-prefill while others decode, and the dependency-tracked macro-
+cycle scheduler (``schedule_mode='ooo'``) merges hazard-free phases —
+eviction frees, bulk-fill prefill writes, decode append/read of disjoint
+pages — into shared pool traversals with arbitrary 1-4-port mixes. It
+reports pool traversals per macro-cycle and per token, the co-scheduled
+fraction of multi-phase cycles, and the per-mix traversal histogram
+(e.g. ``3-port[2W+1R|...]``) against the rigid one-traversal-per-phase
+``'static'`` walk and against reduced port budgets (``max_ports`` = 2, 1).
+
 CI gate (see .github/workflows/ci.yml bench-smoke and benchmarks/README.md):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/engine_bench.py --json BENCH_engine.json \
         --min-traversal-ratio 1.9 --enforce-tile-bound --min-tile-ratio 3.9 \
-        --enforce-single-trace --max-kv-balance 1.25
+        --enforce-single-trace --max-kv-balance 1.25 \
+        --min-coschedule-frac 0.75
 
-writes the ``bench-engine/v4`` record and exits non-zero if the fused-vs-
+writes the ``bench-engine/v5`` record and exits non-zero if the fused-vs-
 reference steady-decode traversal ratio, the steady-decode tile budget
 (ceil((cache_len+1)/seq_tile) per step), the bounded-vs-unbounded tile
 ratio at cache_len = S_max/8, the single-trace property of the dynamic-grid
-decode path, or the sharded per-device tile-read balance regresses.
+decode path, the sharded per-device tile-read balance, or the scheduler's
+co-scheduled-cycle fraction / traversals-per-cycle advantage regresses.
 """
 from __future__ import annotations
 
@@ -351,6 +364,77 @@ def run_kv_balance(n_requests: int = 8, prompt_len: int = 5,
     return out
 
 
+SCHEDULE_PROMPT_LENS = (6, 14, 22, 30)
+
+
+def run_schedule(prompt_lens=SCHEDULE_PROMPT_LENS, max_new: int = 10,
+                 chunk_tokens: int = 8) -> dict:
+    """Configurable per-cycle port mix: the dependency-tracked macro-cycle
+    scheduler (``schedule_mode='ooo'``) against the rigid one-traversal-per-
+    phase walk (``'static'``). STAGGERED prompt lengths with a small prefill
+    chunk keep some slots mid-prefill while others decode, so macro-cycles
+    carry evict + bulk-fill + decode phases together; the scheduler merges
+    the hazard-free ones (disjoint page footprints) into shared pool
+    traversals with up-to-4-port mixes (e.g. ``2W+1R``). Reported per
+    config: pool traversals, traversals per macro-cycle and per token, the
+    fraction of multi-phase cycles that actually co-scheduled, and the
+    per-mix traversal histogram. Greedy decode must stay token-identical
+    across every schedule mode, kernel mode, and port budget."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, plen)) for plen in prompt_lens]
+    configs = (
+        # (name, kernel_mode, schedule_mode, max_ports)
+        ("pallas_ooo", "pallas", "ooo", 4),
+        ("pallas_static", "pallas", "static", 4),
+        ("reference_ooo", "reference", "ooo", 4),
+        ("reference_static", "reference", "static", 4),
+        ("pallas_ooo_2port", "pallas", "ooo", 2),
+        ("pallas_ooo_1port", "pallas", "ooo", 1),
+    )
+    out = {"prompt_lens": list(prompt_lens), "max_new": max_new,
+           "chunk_tokens": chunk_tokens, "s_max": TILE_S_MAX,
+           "seq_tile": TILE_SEQ, "per_config": {}}
+    tokens_by_config = {}
+    for name, kernel_mode, schedule_mode, max_ports in configs:
+        eng = MultiPortEngine(params, cfg, slots=len(prompts),
+                              max_len=TILE_S_MAX, seq_tile=TILE_SEQ,
+                              chunk_tokens=chunk_tokens,
+                              kernel_mode=kernel_mode,
+                              schedule_mode=schedule_mode,
+                              max_ports=max_ports)
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        t0 = time.perf_counter()
+        done = eng.run(max_cycles=2000)
+        dt = time.perf_counter() - t0
+        assert len(done) == len(prompts)
+        toks = sum(len(r.generated) for r in done)
+        tokens_by_config[name] = {r.rid: tuple(r.generated) for r in done}
+        out["per_config"][name] = {
+            "kernel_mode": kernel_mode, "schedule_mode": schedule_mode,
+            "max_ports": max_ports, "seconds": dt, "tokens": toks,
+            "cycles": eng.cycles,
+            "pool_traversals": eng.pool_traversals,
+            "traversals_per_cycle": eng.pool_traversals / max(eng.cycles, 1),
+            "traversals_per_token": eng.pool_traversals / max(toks, 1),
+            "multi_phase_cycles": eng.multi_phase_cycles,
+            "coscheduled_cycles": eng.coscheduled_cycles,
+            "coschedule_frac": eng.coschedule_frac,
+            "mix_counts": dict(sorted(eng.pool.mix_counts.items())),
+        }
+    first = next(iter(tokens_by_config.values()))
+    out["tokens_match"] = all(t == first for t in tokens_by_config.values())
+    pc = out["per_config"]
+    # headline: OOO pool traversals per macro-cycle vs the static oracle,
+    # same kernel mode (pallas fused path)
+    out["traversals_per_cycle_ooo"] = pc["pallas_ooo"]["traversals_per_cycle"]
+    out["traversals_per_cycle_static"] = (
+        pc["pallas_static"]["traversals_per_cycle"])
+    out["coschedule_frac"] = pc["pallas_ooo"]["coschedule_frac"]
+    return out
+
+
 def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
                requests: int = 4) -> dict:
     """Retrace accounting across a cache-length sweep: the SAME engine
@@ -382,7 +466,8 @@ def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
             "dynamic": sweep(True), "bucketed": sweep(False)}
 
 
-def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict) -> None:
+def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict,
+           sc: dict) -> None:
     print("# serving engine: fused multi-port vs reference vs single-port "
           "(claim C1)")
     print("mode,cycles,seconds,tokens,cycles/token,pool_traversals,"
@@ -436,6 +521,20 @@ def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict) -> None:
         print(f"{name},{x['decode_traces']},{x['prefill_traces']},"
               f"{'/'.join(map(str, x['stage_lens']))}")
     print()
+    print("# configurable port mix: dependency-tracked scheduler (ooo) vs "
+          f"rigid walk (static); staggered prompts {sc['prompt_lens']}, "
+          f"chunk={sc['chunk_tokens']}, max_new={sc['max_new']}")
+    print("config,cycles,pool_traversals,traversals/cycle,traversals/token,"
+          "coscheduled/multi_phase,coschedule_frac,mixes")
+    for name, x in sc["per_config"].items():
+        mixes = " ".join(f"{k}:{v}" for k, v in x["mix_counts"].items())
+        print(f"{name},{x['cycles']},{x['pool_traversals']},"
+              f"{x['traversals_per_cycle']:.3f},"
+              f"{x['traversals_per_token']:.3f},"
+              f"{x['coscheduled_cycles']}/{x['multi_phase_cycles']},"
+              f"{x['coschedule_frac']:.2f},{mixes}")
+    print(f"tokens_match,{sc['tokens_match']}")
+    print()
     print(f"# data-parallel KV: pool page-aligned over {kv['kv_shards']} "
           f"device(s) of {kv['available_devices']} visible "
           f"(S_max={kv['s_max']}, seq_tile={kv['seq_tile']})")
@@ -456,7 +555,7 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the bench-engine/v4 record (BENCH_engine.json)")
+                    help="write the bench-engine/v5 record (BENCH_engine.json)")
     ap.add_argument("--min-traversal-ratio", type=float, default=None,
                     help="exit non-zero if fused-vs-reference steady-decode "
                          "traversal ratio drops below this gate")
@@ -470,6 +569,13 @@ def main(argv=None) -> None:
                     help="exit non-zero if the dynamic-grid decode path "
                          "needs more than ONE jit trace across the "
                          "cache-length sweep")
+    ap.add_argument("--min-coschedule-frac", type=float, default=None,
+                    help="exit non-zero if the ooo scheduler co-schedules "
+                         "fewer than this fraction of multi-phase macro-"
+                         "cycles on the mixed prefill+decode workload, if "
+                         "ooo fails to commit strictly fewer pool "
+                         "traversals per macro-cycle than the static walk, "
+                         "or if any schedule config disagrees on tokens")
     ap.add_argument("--max-kv-balance", type=float, default=None,
                     help="exit non-zero if the sharded per-device steady-"
                          "decode tile-read balance (max/mean) exceeds this, "
@@ -483,7 +589,8 @@ def main(argv=None) -> None:
     tl = run_tiles()
     tr = run_traces()
     kv = run_kv_balance()
-    report(r, pf, tl, tr, kv)
+    sc = run_schedule()
+    report(r, pf, tl, tr, kv, sc)
 
     # the gate combines the engine's accounting invariant with the DIRECT
     # kernel-measured serviced-tile probe (the part that can actually catch
@@ -496,7 +603,7 @@ def main(argv=None) -> None:
         per_tok = [pf["per_batch"][str(n)]["traversals_per_token"]
                    for n in PREFILL_BATCHES]
         record = {
-            "schema": "bench-engine/v4",
+            "schema": "bench-engine/v5",
             "config": {"arch": "tinyllama-1.1b", "reduced": True,
                        "requests": args.requests, "max_new": args.max_new,
                        "seq_tile": TILE_SEQ, "s_max": TILE_S_MAX},
@@ -507,6 +614,7 @@ def main(argv=None) -> None:
             "tiles": tl,
             "traces": tr,
             "kv": kv,
+            "schedule": sc,
             "gate": {
                 "min_traversal_ratio": args.min_traversal_ratio,
                 "traversal_ratio": r["traversal_ratio"],
@@ -521,6 +629,12 @@ def main(argv=None) -> None:
                 "max_kv_balance": args.max_kv_balance,
                 "kv_balance": kv["balance"],
                 "kv_shards": kv["kv_shards"],
+                "min_coschedule_frac": args.min_coschedule_frac,
+                "coschedule_frac": sc["coschedule_frac"],
+                "traversals_per_cycle_ooo": sc["traversals_per_cycle_ooo"],
+                "traversals_per_cycle_static":
+                    sc["traversals_per_cycle_static"],
+                "schedule_tokens_match": sc["tokens_match"],
             },
         }
         with open(args.json, "w") as f:
@@ -600,6 +714,23 @@ def main(argv=None) -> None:
                       f"(sharded traversal {kv['traversal_ratio']:.2f}x, "
                       f"tile {kv['tile_ratio']:.2f}x, traces "
                       f"{kv['decode_traces']})")
+    if args.min_coschedule_frac is not None:
+        frac = sc["coschedule_frac"]
+        ooo_tc = sc["traversals_per_cycle_ooo"]
+        static_tc = sc["traversals_per_cycle_static"]
+        if (frac < args.min_coschedule_frac or ooo_tc >= static_tc
+                or not sc["tokens_match"]):
+            print(f"GATE FAIL: schedule — coschedule_frac {frac:.2f} (min "
+                  f"{args.min_coschedule_frac}), traversals/cycle ooo "
+                  f"{ooo_tc:.3f} vs static {static_tc:.3f} (want strictly "
+                  f"fewer), tokens_match {sc['tokens_match']}",
+                  file=sys.stderr)
+            failed = True
+        else:
+            print(f"GATE OK: ooo co-scheduled {frac:.2f} of multi-phase "
+                  f"cycles (min {args.min_coschedule_frac}) and committed "
+                  f"{ooo_tc:.3f} traversals/cycle vs static {static_tc:.3f}, "
+                  f"tokens identical across schedule configs")
     if failed:
         sys.exit(1)
 

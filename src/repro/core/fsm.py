@@ -15,7 +15,7 @@ Two realizations:
 """
 from __future__ import annotations
 
-from typing import Callable, TypeVar
+from typing import Callable, Sequence, TypeVar
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,16 @@ from repro.core import priority as prio
 from repro.core.ports import MAX_PORTS, PortConfig
 
 S = TypeVar("S")
+P = TypeVar("P")
+
+
+class PhaseError(ValueError):
+    """Raised when a phase counter is driven outside its legal domain.
+
+    The external phase counter counts CLK posedges since the engine started,
+    so it is monotonically non-negative; a negative value indicates the
+    caller's cycle accounting went backwards, which Python's modulo would
+    silently mask (``-1 % 4 == 3``)."""
 
 
 def walk_static(config: PortConfig, state: S,
@@ -47,11 +57,32 @@ def rotate_single_port(schedule: tuple[int, ...], phase: int
     baseline — the FSM never advances past its reset state within a cycle).
 
     ``schedule`` is a :func:`~repro.core.clockgen.build_schedule` slot tuple;
-    ``phase`` counts external cycles since the engine started.
+    ``phase`` counts external cycles since the engine started. Phases beyond
+    ``len(schedule)`` wrap (round-robin); negative phases raise
+    :class:`PhaseError` rather than leaning on Python's modulo semantics.
     """
     if not schedule:
         raise ValueError("cannot rotate an empty schedule")
+    if phase < 0:
+        raise PhaseError(f"phase counter must be non-negative, got {phase}")
     return (schedule[phase % len(schedule)],)
+
+
+def walk_schedule(schedule: Sequence[tuple[PortConfig, P]], state: S,
+                  service: Callable[[S, P, PortConfig], S]) -> S:
+    """Drive a macro-cycle from a *schedule* instead of one fixed config.
+
+    Generalization of :func:`walk_static`: a schedule is an ordered sequence
+    of pool traversals, each carrying its own :class:`PortConfig` (the
+    per-cycle enabled-port set, R/W roles and priority chosen by the
+    dependency scheduler) plus an opaque payload (the transactions to issue
+    on those ports). ``service(state, payload, config)`` is called once per
+    traversal, in schedule order — program order between hazarding
+    traversals is therefore preserved by construction.
+    """
+    for config, payload in schedule:
+        state = service(state, payload, config)
+    return state
 
 
 def walk_dynamic(enabled_mask: jax.Array, priority_perm: jax.Array, state: S,

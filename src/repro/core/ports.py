@@ -80,13 +80,64 @@ class PortConfig:
     def write_ports(self) -> tuple[int, ...]:
         return tuple(p for p in range(MAX_PORTS) if self.enabled[p] and self.roles[p] == WRITE)
 
+    def mix(self) -> str:
+        """The R/W mix of the enabled ports, e.g. ``"2W+1R"`` for a 3-port
+        asymmetric configuration (``"2W"`` / ``"1R"`` when one role is
+        absent). This is the label the pool's per-mix traversal histogram
+        keys on."""
+        n_w = len(self.write_ports())
+        n_r = len(self.read_ports())
+        parts = ([f"{n_w}W"] if n_w else []) + ([f"{n_r}R"] if n_r else [])
+        return "+".join(parts)
+
     def describe(self) -> str:
+        """Unambiguous rendering: port count, R/W mix, and the per-port
+        roles in service order — ``"3-port[2W+1R|A:W > B:W > C:R]"``.
+        :meth:`parse` round-trips this back to a canonical PortConfig."""
         names = "ABCD"
         parts = []
         for p in self.priority:
             if self.enabled[p]:
                 parts.append(f"{names[p]}:{'W' if self.roles[p] == WRITE else 'R'}")
-        return f"{self.enabled_count}-port[{' > '.join(parts)}]"
+        return f"{self.enabled_count}-port[{self.mix()}|{' > '.join(parts)}]"
+
+    @classmethod
+    def parse(cls, text: str) -> "PortConfig":
+        """Reconstruct a canonical PortConfig from :meth:`describe` output.
+
+        Canonical means: disabled ports get the READ role, and the priority
+        permutation is the listed service order followed by the remaining
+        port ids in ascending order — enabled set, enabled roles and
+        ``service_order()`` all round-trip exactly.
+        """
+        import re
+        names = "ABCD"
+        m = re.fullmatch(r"(\d+)-port\[([^|\]]+)\|([^\]]+)\]", text)
+        if not m:
+            raise ValueError(f"unparseable port description: {text!r}")
+        count, mix, order_txt = int(m.group(1)), m.group(2), m.group(3)
+        enabled = [False] * MAX_PORTS
+        roles = [READ] * MAX_PORTS
+        order = []
+        for part in order_txt.split(" > "):
+            pm = re.fullmatch(r"([ABCD]):([RW])", part.strip())
+            if not pm:
+                raise ValueError(f"unparseable port entry {part!r} in {text!r}")
+            p = names.index(pm.group(1))
+            if enabled[p]:
+                raise ValueError(f"port {pm.group(1)} listed twice in {text!r}")
+            enabled[p] = True
+            roles[p] = WRITE if pm.group(2) == "W" else READ
+            order.append(p)
+        priority = tuple(order) + tuple(p for p in range(MAX_PORTS)
+                                        if p not in order)
+        cfg = cls(enabled=tuple(enabled), roles=tuple(roles),
+                  priority=priority)
+        if cfg.enabled_count != count or cfg.mix() != mix:
+            raise ValueError(
+                f"inconsistent description {text!r}: lists "
+                f"{cfg.enabled_count} port(s) with mix {cfg.mix()}")
+        return cfg
 
 
 def quad_port(roles: Sequence[int] = (WRITE, WRITE, READ, READ)) -> PortConfig:

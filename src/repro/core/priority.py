@@ -26,6 +26,18 @@ def order_static(enabled: Sequence[bool], priority: Sequence[int]) -> tuple[int,
     return tuple(p for p in priority if enabled[p])
 
 
+def complete_priority(order: Sequence[int], n: int = MAX_PORTS) -> tuple[int, ...]:
+    """Extend a service order over a subset of ports to a full priority
+    permutation of ``range(n)``: the listed ports keep their relative order
+    (highest priority first) and the remaining ids follow in ascending order.
+    This is how the scheduler turns a traversal's program-order port list
+    into a :class:`~repro.core.ports.PortConfig` priority field."""
+    order = tuple(order)
+    if len(set(order)) != len(order) or any(p < 0 or p >= n for p in order):
+        raise ValueError(f"order must be distinct port ids in 0..{n-1}: {order}")
+    return order + tuple(p for p in range(n) if p not in order)
+
+
 def encode_dynamic(enabled_mask: jnp.ndarray, priority: jnp.ndarray) -> jnp.ndarray:
     """In-graph priority encoder.
 

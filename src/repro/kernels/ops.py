@@ -98,7 +98,8 @@ def _kv_shard_wrap(kernel, mesh, mesh_axis: str, batch: int, n_in: int,
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
                                              "length_mask", "dynamic_grid",
-                                             "interpret", "mesh", "mesh_axis"))
+                                             "interpret", "mesh", "mesh_axis",
+                                             "port_mix"))
 def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            new_k: jax.Array, new_v: jax.Array,
                            cache_len: jax.Array, *, seq_tile: int = 128,
@@ -106,14 +107,29 @@ def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            length_mask: bool = True,
                            dynamic_grid: bool = False,
                            interpret: bool = True,
-                           mesh=None, mesh_axis: str = "kv"):
-    """Fused 2-port (1W+1R) length-bounded decode step. See kv_multiport.py.
+                           mesh=None, mesh_axis: str = "kv",
+                           port_mix: str = "wr"):
+    """Scheduled-port-mix decode step. See kv_multiport.py.
+
+    ``port_mix`` is the compute-side port-mix decision made by the engine's
+    macro-cycle scheduler: ``"wr"`` (a 1W+1R traversal is schedulable) runs
+    the fused append+attend kernel — ONE length-bounded VMEM traversal
+    services both ports with same-cycle W->R visibility; ``"w+r"`` (port
+    budget of 1: the W and R ports cannot share a traversal) degrades to
+    the two-pass oracle — append traversal then dense attend traversal
+    (``mesh``/masking flags are fused-path concerns and are ignored there).
 
     ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
     count instead of the static ``live_len`` prefix — one trace serves every
     cache length. ``mesh`` (with a ``mesh_axis`` axis) runs the traversal
     under ``shard_map`` over the batch axis: per-shard SMEM scalars,
     per-shard live-tile bounds (see ``_kv_shard_wrap``)."""
+    if port_mix == "w+r":
+        from repro.kernels import ref
+        return ref.decode_attention_ref(q, cache_k, cache_v, new_k, new_v,
+                                        cache_len)
+    if port_mix != "wr":
+        raise ValueError(f"unknown port_mix: {port_mix!r}")
     kernel = functools.partial(kvmp.fused_append_attend, seq_tile=seq_tile,
                                live_len=live_len, length_mask=length_mask,
                                dynamic_grid=dynamic_grid, interpret=interpret)
@@ -124,7 +140,7 @@ def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
                                              "dynamic_grid", "interpret",
-                                             "mesh", "mesh_axis"))
+                                             "mesh", "mesh_axis", "port_mix"))
 def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
                                   cache_v: jax.Array, new_k: jax.Array,
                                   new_v: jax.Array, offset: jax.Array,
@@ -133,13 +149,24 @@ def fused_prefill_chunk_attention(q: jax.Array, cache_k: jax.Array,
                                   live_len: int | None = None,
                                   dynamic_grid: bool = False,
                                   interpret: bool = True,
-                                  mesh=None, mesh_axis: str = "kv"):
-    """Fused 2-port (1W+1R) length-bounded chunked-prefill step.
+                                  mesh=None, mesh_axis: str = "kv",
+                                  port_mix: str = "wr"):
+    """Scheduled-port-mix chunked-prefill step.
 
-    See kv_prefill_chunk.py; the jnp oracle is ref.prefill_chunk_attention_ref.
+    See kv_prefill_chunk.py; like the decode wrapper, ``port_mix="wr"``
+    runs the fused 1W+1R length-bounded traversal and ``"w+r"`` (1-port
+    budget) degrades to the two-pass oracle
+    ``ref.prefill_chunk_attention_ref`` — scatter traversal then dense
+    attend traversal.
     ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
     count instead of the static ``live_len`` prefix. ``mesh`` shards the
     traversal over the batch axis exactly like the decode wrapper."""
+    if port_mix == "w+r":
+        from repro.kernels import ref
+        return ref.prefill_chunk_attention_ref(q, cache_k, cache_v, new_k,
+                                               new_v, offset, chunk_len)
+    if port_mix != "wr":
+        raise ValueError(f"unknown port_mix: {port_mix!r}")
     kernel = functools.partial(kvpc.fused_chunk_append_attend,
                                seq_tile=seq_tile, live_len=live_len,
                                dynamic_grid=dynamic_grid, interpret=interpret)

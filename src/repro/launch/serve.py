@@ -57,6 +57,16 @@ def main() -> None:
     ap.add_argument("--single-port", action="store_true")
     ap.add_argument("--kernel-mode", default="pallas",
                     choices=["pallas", "reference"])
+    ap.add_argument("--schedule-mode", default="ooo",
+                    choices=["static", "ooo"],
+                    help="macro-cycle port scheduler: 'ooo' co-schedules "
+                         "non-hazarding phases (disjoint pages) into shared "
+                         "pool traversals; 'static' keeps the rigid "
+                         "one-traversal-per-phase walk (the oracle)")
+    ap.add_argument("--max-ports", type=int, default=4,
+                    help="per-traversal port budget (1-4, the paper's B1B0 "
+                         "knob); 1 degrades the attention compute to the "
+                         "two-pass W-then-R oracle")
     ap.add_argument("--no-interpret", action="store_true",
                     help="lower Pallas kernels through Mosaic (TPU)")
     ap.add_argument("--seed", type=int, default=0)
@@ -102,7 +112,9 @@ def main() -> None:
                           length_bound=not args.no_length_bound,
                           dynamic_grid=not args.no_dynamic_grid,
                           interpret=not args.no_interpret,
-                          mesh=mesh)
+                          mesh=mesh,
+                          schedule_mode=args.schedule_mode,
+                          max_ports=args.max_ports)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(list(rng.integers(0, cfg.vocab, int(rng.integers(3, 10)))),
@@ -121,6 +133,12 @@ def main() -> None:
           f"traversals/prompt-token over {eng.prefill_steps} chunk cycles")
     print(f"jit traces: decode {eng.decode_traces}, prefill-chunk "
           f"{eng.prefill_traces} (dynamic grid: {eng.dynamic_grid})")
+    mixes = ", ".join(f"{k}: {v}" for k, v in
+                      sorted(eng.pool.mix_counts.items()))
+    print(f"schedule [{eng.schedule_mode}, max_ports={eng.max_ports}]: "
+          f"{eng.coscheduled_cycles}/{eng.multi_phase_cycles} multi-phase "
+          f"cycles co-scheduled (frac {eng.coschedule_frac:.2f}); "
+          f"traversal mixes {{{mixes}}}")
     print(f"tile reads (seq_tile={eng.seq_tile}): decode "
           f"{eng.steady_decode_tile_reads} steady "
           f"(bound {eng.steady_decode_tile_bound}), prefill "

@@ -201,6 +201,9 @@ class PagedPool:
     tile_writes_by_shard: list = dataclasses.field(default_factory=list)
     io_width: int = 0                  # caller-visible word width (the
                                        # storage word is lane-padded past it)
+    mix_counts: dict = dataclasses.field(default_factory=dict)
+                                       # PortConfig.describe() -> traversals
+                                       # serviced with that port mix
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
@@ -427,16 +430,63 @@ class PagedPool:
         self.home.pop(seq, None)
         return pages
 
+    # ---- footprint projection (scheduler support) ----------------------------
+    def mapped_pages(self, seq: int) -> tuple:
+        """The pages a sequence currently owns (empty before admission)."""
+        return tuple(self.tables.get(seq, ()))
+
+    def project_write_pages(self, demands: Sequence[tuple]) -> list:
+        """Non-mutating page-footprint projection for ordered write demands.
+
+        ``demands`` is ``[(seq, n_tokens), ...]`` in the order the commit
+        path will service them (prefills before appends, stream order within
+        each — the same order :meth:`cycle` grows tables in). Returns one
+        ``frozenset`` of touched page ids per demand: the partially-filled
+        tail page plus any pages the demand would pop from the sequence's
+        home-shard free list (simulated against a copy, so table, length and
+        free-list state are untouched). Exact because eviction's
+        :meth:`free` has already run by the time the scheduler projects —
+        the free lists the simulation copies are the ones the commit pops
+        from. A demand that would exhaust its simulated free list stops
+        popping (the real commit's capacity precheck raises first, before
+        any traversal issues)."""
+        sim_free = [list(fl) for fl in self.free_by_shard]
+        sim_table: dict = {}
+        sim_len: dict = {}
+        out = []
+        for seq, t in demands:
+            table = sim_table.setdefault(seq, list(self.tables.get(seq, ())))
+            length = sim_len.setdefault(seq, self.lengths.get(seq, 0))
+            # idempotent: the engine pre-assigns homes at admission, so this
+            # only reads (and matches the shard the commit path will pop)
+            shard = self.assign_home(seq)
+            need = -(-(length + t) // self.page_tokens)
+            pages = set()
+            while len(table) < need and sim_free[shard]:
+                p = sim_free[shard].pop()
+                table.append(p)
+                pages.add(p)
+            lo = length // self.page_tokens
+            hi = min(need, len(table))
+            pages.update(table[lo:hi])
+            sim_len[seq] = length + t
+            out.append(frozenset(pages))
+        return out
+
     # ---- data plane: one macro-cycle -----------------------------------------
     def cycle(self, *, append: Stream = None, read: Stream = None,
               prefill: Stream = None,
-              scrub: Optional[Sequence[int]] = None) -> dict:
+              scrub: Optional[Sequence[int]] = None,
+              priority: Optional[Sequence[int]] = None) -> dict:
         """Service up to four logical streams in ONE pool traversal.
 
         append:  {"seq": int, "vectors": [T, W]} or list — decode appends
         read:    {"seq": int, "positions": int array} or list — attn gathers
         prefill: {"seq": int, "vectors": [T, W]} or list — bulk prompt fills
         scrub:   page ids to zero (port D — eviction)
+        priority: full port-priority permutation for THIS traversal (the
+                  schedule's per-cycle decision); defaults to the legacy
+                  fixed service order ``_PRIORITY``.
         Returns {"read": [Q, W] | list thereof | None} mirroring the input
         shape of ``read``.
 
@@ -449,8 +499,11 @@ class PagedPool:
         reads = self._as_streams(read)
         prefills = self._as_streams(prefill)
         scrub = list(scrub) if scrub else []
+        priority = _PRIORITY if priority is None else tuple(priority)
 
-        self._check_capacity(appends + prefills, reads)
+        # program order: bulk prefills grow tables before decode appends,
+        # matching the scheduler's footprint projection
+        self._check_capacity(prefills + appends, reads)
 
         lanes = [0, 0, 0, 0]
         lanes[APPEND] = sum(s["vectors"].shape[0] for s in appends)
@@ -492,10 +545,10 @@ class PagedPool:
                                data=jnp.asarray(data, self.spec.dtype),
                                mask=jnp.asarray(mask))
 
-        if appends:
-            reqs[APPEND] = _write_req(appends)
         if prefills:
             reqs[BULK_FILL] = _write_req(prefills)
+        if appends:
+            reqs[APPEND] = _write_req(appends)
         if scrub:
             addr = np.zeros(q, np.int32)
             mask = np.zeros(q, bool)
@@ -527,7 +580,9 @@ class PagedPool:
 
         cfg = PortConfig(enabled=(bool(appends), bool(reads), bool(prefills),
                                   bool(scrub)),
-                         roles=_ROLES, priority=_PRIORITY)
+                         roles=_ROLES, priority=priority)
+        self.mix_counts[cfg.describe()] = self.mix_counts.get(
+            cfg.describe(), 0) + 1
         if self.mesh is not None and self.kv_shards > 1:
             fn = _sharded_pool_step(self.spec_local, cfg, self.mesh,
                                     self.kv_axis, self.words_per_shard,
@@ -547,6 +602,52 @@ class PagedPool:
             return {"read": None}
         got = [out[ATTN_READ][a:b, :self.io_width] for a, b in slices]
         return {"read": got[0] if read_was_dict else got}
+
+    def cycle_batch(self, groups: Sequence[tuple]) -> list:
+        """Issue one macro-cycle's SCHEDULE of traversals: ``groups`` is an
+        ordered sequence of ``(streams, priority)`` pairs — each ``streams``
+        a dict of :meth:`cycle` keyword streams, each ``priority`` that
+        traversal's full port permutation (or None for the legacy order).
+
+        The capacity/read precheck is TRANSACTIONAL ACROSS THE WHOLE BATCH:
+        every co-scheduled write (prefills then appends, group order) and
+        every read is validated against simulated free lists BEFORE the
+        first traversal commits, so a refused macro-cycle leaves the pool
+        untouched even when the failing demand sits in a later traversal.
+        The traversals then issue through :func:`repro.core.fsm.walk_schedule`
+        — the schedule-driven generalization of the old fixed walk — each
+        with its own :class:`~repro.core.PortConfig`. Returns one
+        :meth:`cycle` result dict per group, in order."""
+        from repro.core import fsm
+
+        groups = [(dict(streams), None if prio is None else tuple(prio))
+                  for streams, prio in groups]
+        writes: list = []
+        reads: list = []
+        for streams, _ in groups:
+            writes += self._as_streams(streams.get("prefill"))
+            writes += self._as_streams(streams.get("append"))
+            reads += self._as_streams(streams.get("read"))
+        if not groups:
+            return []
+        self._check_capacity(writes, reads)
+
+        schedule = []
+        for streams, prio in groups:
+            cfg = PortConfig(
+                enabled=(bool(streams.get("append")),
+                         bool(streams.get("read")),
+                         bool(streams.get("prefill")),
+                         bool(streams.get("scrub"))),
+                roles=_ROLES,
+                priority=_PRIORITY if prio is None else prio)
+            schedule.append((cfg, streams))
+
+        def service(outs, streams, cfg):
+            outs.append(self.cycle(priority=cfg.priority, **streams))
+            return outs
+
+        return fsm.walk_schedule(schedule, [], service)
 
     @staticmethod
     def _as_streams(stream: Stream) -> list:

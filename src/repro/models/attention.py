@@ -136,6 +136,7 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
                             dynamic_grid: bool = False,
                             interpret: bool = True,
                             mesh=None, mesh_axis: str = "kv",
+                            port_mix: str = "wr",
                             compute_dtype=None):
     """One fixed-size prompt chunk per sequence, mid-prefill.
 
@@ -172,7 +173,7 @@ def attention_prefill_chunk(p: dict, x: jax.Array, offset: jax.Array,
         out, cache_k, cache_v = ops.fused_prefill_chunk_attention(
             q, cache_k, cache_v, new_k, new_v, offset, chunk_len,
             seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
-            mesh=mesh, mesh_axis=mesh_axis)
+            mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.prefill_chunk_attention_ref(
@@ -190,6 +191,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      seq_tile: int = 128, length_mask: bool = True,
                      dynamic_grid: bool = False, interpret: bool = True,
                      mesh=None, mesh_axis: str = "kv",
+                     port_mix: str = "wr",
                      compute_dtype=None):
     """One decode step. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, D];
     cache_len: [B] current lengths. Returns (out [B,1,d], k', v').
@@ -223,7 +225,7 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
             q1, cache_k, cache_v, new_k, new_v, cache_len,
             seq_tile=seq_tile, length_mask=length_mask,
             dynamic_grid=dynamic_grid, interpret=interpret,
-            mesh=mesh, mesh_axis=mesh_axis)
+            mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
     else:
         from repro.kernels import ref
         out, cache_k, cache_v = ref.decode_attention_ref(

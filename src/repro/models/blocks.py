@@ -80,7 +80,8 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
                                     seq_tile: int = 128,
                                     dynamic_grid: bool = False,
                                     interpret: bool = True,
-                                    mesh=None, mesh_axis: str = "kv"):
+                                    mesh=None, mesh_axis: str = "kv",
+                                    port_mix: str = "wr"):
     h, ck, cv = A.attention_prefill_chunk(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), offset, chunk_len,
         cache_k, cache_v,
@@ -88,7 +89,7 @@ def transformer_block_prefill_chunk(p: dict, x, offset, chunk_len,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
-        mesh=mesh, mesh_axis=mesh_axis,
+        mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix,
         compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -104,7 +105,8 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
                              seq_tile: int = 128, length_mask: bool = True,
                              dynamic_grid: bool = False,
                              interpret: bool = True,
-                             mesh=None, mesh_axis: str = "kv"):
+                             mesh=None, mesh_axis: str = "kv",
+                             port_mix: str = "wr"):
     h, ck, cv = A.attention_decode(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache_k, cache_v,
         cache_len,
@@ -113,7 +115,7 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, length_mask=length_mask,
         dynamic_grid=dynamic_grid, interpret=interpret,
-        mesh=mesh, mesh_axis=mesh_axis,
+        mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix,
         compute_dtype=cfg.cdtype)
     x = x + h
     y = L.rmsnorm(p["ln2"], x, cfg.norm_eps)

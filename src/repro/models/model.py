@@ -240,7 +240,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 *, kernel_mode: str = "reference", seq_tile: int = 128,
                 length_mask: bool = True, dynamic_grid: bool = False,
                 interpret: bool = True, mesh=None,
-                mesh_axis: str = "kv") -> tuple[PyTree, jax.Array]:
+                mesh_axis: str = "kv",
+                port_mix: str = "wr") -> tuple[PyTree, jax.Array]:
     """Returns (state', logits [B, V]).
 
     ``seq_tile``/``length_mask`` bound the multiport kernel's traversal to
@@ -259,7 +260,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
                 dynamic_grid=dynamic_grid, interpret=interpret,
-                mesh=mesh, mesh_axis=mesh_axis)
+                mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], state["cache_k"], state["cache_v"]))
@@ -284,7 +285,7 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
                 dynamic_grid=dynamic_grid, interpret=interpret,
-                mesh=mesh, mesh_axis=mesh_axis)
+                mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
 
             def inner(hh, ys):
                 pl, cs, ss = ys
@@ -391,7 +392,7 @@ def prefill(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict
 def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                   *, kernel_mode: str = "reference", seq_tile: int = 128,
                   dynamic_grid: bool = False, interpret: bool = True,
-                  mesh=None, mesh_axis: str = "kv"
+                  mesh=None, mesh_axis: str = "kv", port_mix: str = "wr"
                   ) -> tuple[PyTree, jax.Array]:
     """Process ONE fixed-size prompt chunk for a batch of sequences.
 
@@ -423,7 +424,7 @@ def prefill_chunk(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
         h, ck, cv = B.transformer_block_prefill_chunk(
             pl, h, offset, chunk_len, ck, cv, cfg, kernel_mode=kernel_mode,
             seq_tile=seq_tile, dynamic_grid=dynamic_grid, interpret=interpret,
-            mesh=mesh, mesh_axis=mesh_axis)
+            mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
         return h, (ck, cv)
     x, (ck, cv) = jax.lax.scan(
         body, x, (params["layers"], state["cache_k"], state["cache_v"]))

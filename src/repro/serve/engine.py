@@ -32,16 +32,33 @@ request. A request's FIRST generated token comes from its prefill logits
 (the last valid position of its final chunk) — decode never re-feeds
 ``prompt[-1]``, so each KV word lands in the pool exactly once.
 
-In the default ``kernel_mode="pallas"`` every macro-cycle's traffic is ONE
-physical pool traversal (``PagedPool.cycle`` services append + scrub + bulk
-+ read ports in priority order with same-cycle W->R visibility), and the
-decode compute services all active slots through the fused append+attend
-Pallas kernel (``kernels/kv_multiport``) — one VMEM traversal for the W and
-R ports, claim C1 end-to-end. ``kernel_mode="reference"`` keeps the jnp
-oracle ``core.step`` under the pool and two-pass (append-traversal then
-read-traversal) port transactions — the baseline the benchmark compares
-traversal counts against. ``single_port=True`` additionally services ONE
-engine port per macro-cycle (the paper's bare-macro comparison).
+The phase walk above COLLECTS traffic; how it commits is a per-cycle
+PORT-MIX DECISION made by the dependency scheduler (``serve/scheduler.py``).
+Each phase's page-granular footprint is projected against the post-eviction
+free lists, and under the default ``schedule_mode="ooo"`` phases touching
+DISJOINT pages co-schedule into the SAME pool traversal (e.g. prefill W
+ports alongside decode W+R ports — any validated 1-4 port mix), while
+RAW/WAR overlaps split conservatively and WAW overlaps share a traversal
+under program-order priority (eviction's scrub serviced before a write
+reusing the freed page). ``schedule_mode="static"`` keeps the rigid walk as
+the oracle: one traversal per phase, never co-scheduled. ``max_ports``
+(1-4, the paper's B1B0 knob) caps a traversal's port count; a 1-port
+budget also degrades the COMPUTE to the two-pass oracle
+(``compute_port_mix="w+r"``) since the fused kernels' 1W+1R contract is no
+longer schedulable. ``coschedule_frac`` / ``schedule_log`` expose the
+decisions; ``PagedPool.mix_counts`` histograms the traversal mixes served.
+
+In the default ``kernel_mode="pallas"`` a decode macro-cycle's traffic is
+ONE physical pool traversal (``PagedPool.cycle`` services the scheduled
+ports in the schedule's priority order with same-cycle W->R visibility),
+and the decode compute services all active slots through the fused
+append+attend Pallas kernel (``kernels/kv_multiport``) — one VMEM
+traversal for the W and R ports, claim C1 end-to-end.
+``kernel_mode="reference"`` keeps the jnp oracle ``core.step`` under the
+pool and two-pass (append-traversal then read-traversal) port
+transactions — the baseline the benchmark compares traversal counts
+against. ``single_port=True`` additionally services ONE engine port per
+macro-cycle (the paper's bare-macro comparison).
 
 Traversals are LENGTH-BOUNDED (``length_bound=True``, pallas mode) and,
 by default, RETRACE-FREE (``dynamic_grid=True``): the staging caches keep
@@ -96,12 +113,20 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import fsm
 from repro.core.clockgen import build_schedule
-from repro.core.ports import READ, WRITE, PortConfig
+from repro.core.ports import MAX_PORTS, READ, WRITE, PortConfig
 from repro.kernels.tiling import fit_seq_tile
-from repro.memory.paged_kv import PagedPool, _bucket, seq_tile_buckets
+from repro.memory.paged_kv import (APPEND, ATTN_READ, BULK_FILL, SCRUB,
+                                   PagedPool, _bucket, seq_tile_buckets)
 from repro.models import decode_step, prefill_chunk
+from repro.serve import scheduler as sched_mod
+from repro.serve.scheduler import PhaseTxn, PortTxn
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
+
+# pool-port stream keyword for each physical port a scheduled transaction
+# can issue on (the engine's phase -> pool-port wiring)
+_STREAM_KEY = {SCRUB: "scrub", BULK_FILL: "prefill",
+               APPEND: "append", ATTN_READ: "read"}
 
 
 def _jit_traces(fn) -> int:
@@ -141,14 +166,34 @@ class MultiPortEngine:
                  greedy: bool = True, page_tokens: int = 8,
                  seq_tile: int = 128, length_bound: bool = True,
                  dynamic_grid: bool = True, interpret: bool = True,
-                 mesh=None, kv_axis: str = "kv"):
+                 mesh=None, kv_axis: str = "kv",
+                 schedule_mode: str = "ooo", max_ports: int = MAX_PORTS):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
             raise ValueError(f"unknown kernel_mode: {kernel_mode!r}")
+        if schedule_mode not in ("static", "ooo"):
+            raise ValueError(f"unknown schedule_mode: {schedule_mode!r}")
+        if not 1 <= max_ports <= MAX_PORTS:
+            raise ValueError(
+                f"max_ports must be in 1..{MAX_PORTS}, got {max_ports}")
         if seq_tile < 1:
             raise ValueError(f"seq_tile must be >= 1, got {seq_tile}")
         self.params, self.cfg = params, cfg
+        # per-cycle port-mix scheduling (see serve/scheduler.py): "ooo"
+        # packs non-hazarding phases into shared pool traversals; "static"
+        # keeps the rigid one-traversal-per-phase walk as the oracle
+        self.schedule_mode = schedule_mode
+        self.max_ports = max_ports
+        # compute-side port-mix decision: a 1-port budget cannot schedule
+        # the fused kernels' 1W+1R traversal, so the attention compute
+        # degrades to the two-pass (W traversal, then R traversal) oracle
+        self.compute_port_mix = "wr" if max_ports >= 2 else "w+r"
+        self._fused_compute = (kernel_mode == "pallas"
+                               and self.compute_port_mix == "wr")
+        # pool-side two-pass discipline: the reference engine and the bare
+        # macro split every traversal into writes-then-reads
+        self._split_roles = (kernel_mode != "pallas") or single_port
         self.max_slots = slots if max_slots is None else max_slots
         if self.max_slots < slots:
             raise ValueError(f"max_slots ({self.max_slots}) < slots ({slots})")
@@ -174,15 +219,16 @@ class MultiPortEngine:
         # every cache length, deleting the stage-length ladder from the hot
         # path. The ladder stays as the dynamic_grid=False (bucketed,
         # retrace-per-bucket) fallback and the --seq-tile validation surface.
-        self.dynamic_grid = (dynamic_grid and kernel_mode == "pallas"
+        self.dynamic_grid = (dynamic_grid and self._fused_compute
                              and length_bound)
         self._stage_buckets = self.final_stage_ladder(max_len, seq_tile)
         self.stage_lens_seen: set = set()
         # padded batch rows carry the Pallas kernels' dead-row sentinel
         # (cache_len/offset -1: zero tiles serviced) so tile accounting
-        # stays exact under padding; the jnp reference keeps 0 (its dense
-        # read needs finite positions)
-        self._dead_row = -1 if kernel_mode == "pallas" else 0
+        # stays exact under padding; the two-pass compute (jnp reference,
+        # or a pallas engine degraded to a 1-port compute budget) keeps 0
+        # — its dense read needs finite positions
+        self._dead_row = -1 if self._fused_compute else 0
 
         # data-parallel KV: shard the pool page-aligned across the mesh's
         # kv axis and group staged batches by home device (see module doc)
@@ -236,10 +282,18 @@ class MultiPortEngine:
         self.steady_decode_tile_reads_by_dev = [0] * self.n_kv_shards
         self.prefill_tile_reads_by_dev = [0] * self.n_kv_shards
         self.port_log: list[tuple[int, ...]] = []
+        # per-cycle schedule observability: which phases shared which pool
+        # traversal (one tuple of phase-id tuples per cycle), how many
+        # cycles carried >1 pool phase, and how many of those the scheduler
+        # packed into a shared traversal
+        self.schedule_log: list[tuple] = []
+        self.multi_phase_cycles = 0
+        self.coscheduled_cycles = 0
         self._next_rid = 0
         self._sp_rotate = 0
 
         attn_mode = "multiport" if kernel_mode == "pallas" else "reference"
+        pmix = self.compute_port_mix
         tile, dyn = self.seq_tile, self.dynamic_grid
         # the fused kernels only shard when the mesh is non-trivial; the jnp
         # reference ignores the mesh (it is the sharded-pool oracle)
@@ -250,12 +304,14 @@ class MultiPortEngine:
                                         length_mask=length_bound,
                                         dynamic_grid=dyn,
                                         interpret=interpret,
-                                        mesh=kmesh, mesh_axis=kv_axis))
+                                        mesh=kmesh, mesh_axis=kv_axis,
+                                        port_mix=pmix))
         self._prefill_chunk = jax.jit(
             lambda p, s, b: prefill_chunk(p, cfg, s, b, kernel_mode=attn_mode,
                                           seq_tile=tile, dynamic_grid=dyn,
                                           interpret=interpret,
-                                          mesh=kmesh, mesh_axis=kv_axis))
+                                          mesh=kmesh, mesh_axis=kv_axis,
+                                          port_mix=pmix))
 
     # ---- client API --------------------------------------------------------
     @classmethod
@@ -321,6 +377,16 @@ class MultiPortEngine:
             return 1.0
         return max(per) / (total / self.n_kv_shards)
 
+    @property
+    def coschedule_frac(self) -> float:
+        """Fraction of multi-phase macro-cycles (cycles whose pool traffic
+        spans >1 engine phase) the scheduler packed into a shared traversal
+        — 0.0 before any multi-phase cycle ran, and always 0.0 under
+        ``schedule_mode="static"``."""
+        if not self.multi_phase_cycles:
+            return 0.0
+        return self.coscheduled_cycles / self.multi_phase_cycles
+
     # ---- port collection routines -------------------------------------------
     def _free_slot(self) -> Optional[int]:
         """Lowest free slot index; grows the slot table (bounded by
@@ -364,8 +430,9 @@ class MultiPortEngine:
         ladder bucket (power-of-two counts of seq_tile tiles — see
         ``seq_tile_buckets``) covering ``need`` live tokens, so jit retraces
         stay at tile-count buckets like the slot buckets. Unbounded pallas
-        stages the padded full capacity; the jnp reference stages max_len."""
-        if self.kernel_mode != "pallas":
+        stages the padded full capacity; the two-pass compute (jnp
+        reference, or a 1-port compute budget) stages max_len densely."""
+        if not self._fused_compute:
             return self.max_len
         if self.dynamic_grid or not self.length_bound:
             # dynamic grid: ONE staged shape (the padded capacity) for every
@@ -500,7 +567,7 @@ class MultiPortEngine:
         # reads the whole staged cache densely per chunk
         touched, _, per_dev = self._tiles_touched(
             [[need_of[s] for s in g] for g in groups], stage_s,
-            bounded=self.kernel_mode == "pallas")
+            bounded=self._fused_compute)
         self.prefill_tile_reads += touched
         for d, t in enumerate(per_dev):
             self.prefill_tile_reads_by_dev[d] += t
@@ -602,7 +669,7 @@ class MultiPortEngine:
             r.generated.append(int(nxt[j]))
             if len(r.generated) >= r.max_new:
                 r.done = True
-        bounded = self.kernel_mode == "pallas" and self.length_bound
+        bounded = self._fused_compute and self.length_bound
         return self._tiles_touched([[need_of[i] for i in g] for g in groups],
                                    stage_s, bounded=bounded)
 
@@ -618,6 +685,65 @@ class MultiPortEngine:
                 "pool_utilization": self.pool.utilization,
                 "pool_traversals": self.pool.traversals,
                 "kv_shards": self.n_kv_shards}
+
+    # ---- dependency scheduling ----------------------------------------------
+    def _build_phases(self, scrub: list, admits: list, appends: list,
+                      reads: list) -> list:
+        """Turn the cycle's collected traffic into program-ordered
+        :class:`PhaseTxn` bundles with page-granular footprints — the
+        scheduler's hazard-analysis input.
+
+        Write footprints are PROJECTED against the post-eviction free lists
+        in commit order (prefills then appends — the same order
+        ``PagedPool.cycle`` grows tables), so a footprint includes the tail
+        page a demand fills and any free page it will pop; the decode read's
+        footprint is every active sequence's mapped pages plus the pages its
+        own append lands on (the intra-phase append+read pair stays ONE
+        phase — the exempt same-cycle W->R contract)."""
+        demands = ([(s["seq"], int(s["vectors"].shape[0])) for s in admits]
+                   + [(s["seq"], int(s["vectors"].shape[0]))
+                      for s in appends])
+        footprints = self.pool.project_write_pages(demands)
+        prefill_pages = frozenset().union(*footprints[:len(admits)]) \
+            if admits else frozenset()
+        append_pages = frozenset().union(*footprints[len(admits):]) \
+            if appends else frozenset()
+
+        phases = []
+        if scrub:
+            phases.append(PhaseTxn(EVICT, "evict", (
+                PortTxn(SCRUB, WRITE, frozenset(scrub), scrub),)))
+        if admits:
+            phases.append(PhaseTxn(PREFILL, "prefill", (
+                PortTxn(BULK_FILL, WRITE, prefill_pages, admits),)))
+        if appends or reads:
+            txns = []
+            if appends:
+                txns.append(PortTxn(APPEND, WRITE, append_pages, appends))
+            if reads:
+                read_pages = append_pages.union(
+                    *[self.pool.mapped_pages(s["seq"]) for s in reads])
+                txns.append(PortTxn(ATTN_READ, READ, read_pages, reads))
+            phases.append(PhaseTxn(DECODE, "decode", tuple(txns)))
+        return phases
+
+    def _commit(self, schedule) -> list:
+        """Issue a :class:`~repro.serve.scheduler.PortSchedule` against the
+        pool — one :meth:`PagedPool.cycle` per traversal, each under ITS
+        port config's priority, with the capacity precheck spanning every
+        co-scheduled write — and return the decode gathers (empty when the
+        cycle carried no reads)."""
+        groups = []
+        read_gi = None
+        for trav in schedule.traversals:
+            streams = {_STREAM_KEY[t.port]: t.payload for t in trav.txns()}
+            if "read" in streams:
+                read_gi = len(groups)
+            groups.append((streams, trav.priority()))
+        outs = self.pool.cycle_batch(groups)
+        if read_gi is None:
+            return []
+        return outs[read_gi]["read"] or []
 
     # ---- the macro-cycle -----------------------------------------------------
     def step(self) -> dict:
@@ -655,22 +781,21 @@ class MultiPortEngine:
         appends, active, reads = (collected["appends"], collected["active"],
                                   collected["reads"])
 
-        # commit the cycle's traffic to the physical pool
+        # schedule the cycle's traffic: hazard analysis over page
+        # footprints picks the per-traversal port mix, then the plan
+        # commits against the physical pool in program order
         t0 = self.pool.traversals
-        if self.kernel_mode == "pallas" and not self.single_port:
-            # one traversal: append > scrub > bulk > read port slots
-            out = self.pool.cycle(append=appends or None, read=reads or None,
-                                  prefill=admits or None, scrub=scrub or None)
-            gathered = out["read"] or []
-        else:
-            # reference / bare macro: writes and reads are separate
-            # traversals (the two-pass baseline the benchmark measures)
-            if appends or admits or scrub:
-                self.pool.cycle(append=appends or None,
-                                prefill=admits or None, scrub=scrub or None)
-            gathered = []
-            if reads:
-                gathered = self.pool.cycle(read=reads)["read"]
+        phases = self._build_phases(scrub, admits, appends, reads)
+        plan = sched_mod.plan(phases, mode=self.schedule_mode,
+                              max_ports=self.max_ports,
+                              split_roles=self._split_roles)
+        gathered = self._commit(plan)
+        self.schedule_log.append(
+            tuple(t.phase_ids() for t in plan.traversals))
+        if len({ph.phase for ph in phases}) > 1:
+            self.multi_phase_cycles += 1
+            if plan.co_scheduled:
+                self.coscheduled_cycles += 1
         for s in appends:                          # appends are now committed
             slot = next(i for i in range(len(self.slot_req))
                         if self.slot_req[i] is not None

@@ -1,0 +1,45 @@
+"""FSM walk sequencers: the single-port rotation's phase-domain contract
+and the schedule-driven walk that generalizes the rigid per-config walk."""
+import pytest
+
+from repro.core.fsm import PhaseError, rotate_single_port, walk_schedule
+from repro.core.ports import READ, WRITE, PortConfig
+
+
+def test_rotate_negative_phase_raises_named_error():
+    with pytest.raises(PhaseError, match="non-negative, got -1"):
+        rotate_single_port((0, 1, 2), -1)
+    with pytest.raises(PhaseError, match="-7"):
+        rotate_single_port((0, 1, 2), -7)
+    # PhaseError is a ValueError subclass — existing except-ValueError
+    # callers keep working
+    assert issubclass(PhaseError, ValueError)
+
+
+def test_rotate_large_phase_wraps():
+    schedule = (3, 1, 0, 2)
+    for phase in (0, 1, 4, 5, 4 * 10**6 + 2, 10**12 + 3):
+        assert rotate_single_port(schedule, phase) == \
+            (schedule[phase % len(schedule)],)
+
+
+def test_rotate_empty_schedule_rejected():
+    with pytest.raises(ValueError, match="empty schedule"):
+        rotate_single_port((), 0)
+
+
+def test_walk_schedule_order_and_payloads():
+    """walk_schedule services each (config, payload) pair once, in schedule
+    order, handing the service body the traversal's own PortConfig."""
+    c1 = PortConfig(enabled=(True, False, False, True),
+                    roles=(WRITE, READ, READ, WRITE), priority=(3, 0, 1, 2))
+    c2 = PortConfig(enabled=(False, True, False, False),
+                    roles=(READ,) * 4)
+    seen = walk_schedule(
+        [(c1, "evict+decode"), (c2, "status")], [],
+        lambda state, payload, cfg: state + [(payload, cfg.service_order())])
+    assert seen == [("evict+decode", (3, 0)), ("status", (1,))]
+
+
+def test_walk_schedule_empty_is_noop():
+    assert walk_schedule([], "state", lambda s, p, c: s + "x") == "state"

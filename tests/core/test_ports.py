@@ -3,8 +3,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import READ, PortConfig, quad_port
-from repro.core.priority import (encode_dynamic, encode_static,
-                                 next_port_dynamic, order_static)
+from repro.core.ports import WRITE
+from repro.core.priority import (complete_priority, encode_dynamic,
+                                 encode_static, next_port_dynamic,
+                                 order_static)
 
 
 def test_port_count_encoding():
@@ -69,3 +71,78 @@ def test_dynamic_fsm_walk_matches_static_order():
         # one more transition wraps to the start (Fig. 2 reset arc)
         cur = next_port_dynamic(cur, jnp.array(enabled), jnp.array(priority))
         assert int(cur) == order[0]
+
+
+# --------------------------------------------------------------------------
+# describe() / parse(): the per-mix histogram key must be unambiguous
+# --------------------------------------------------------------------------
+
+def test_describe_three_port_asymmetric_mix_unambiguous():
+    """A 3-port 2W+1R configuration renders count, mix AND per-port roles
+    in service order — two different 2W+1R wirings must not collide."""
+    cfg = PortConfig(enabled=(True, True, True, False),
+                     roles=(WRITE, READ, WRITE, READ))
+    assert cfg.mix() == "2W+1R"
+    assert cfg.describe() == "3-port[2W+1R|A:W > B:R > C:W]"
+    other = PortConfig(enabled=(True, True, True, False),
+                       roles=(WRITE, WRITE, READ, READ))
+    assert other.mix() == "2W+1R"
+    assert other.describe() == "3-port[2W+1R|A:W > B:W > C:R]"
+    assert cfg.describe() != other.describe()
+    # priority permutation shows through too
+    swapped = PortConfig(enabled=(True, True, True, False),
+                         roles=(WRITE, READ, WRITE, READ),
+                         priority=(2, 1, 0, 3))
+    assert swapped.describe() == "3-port[2W+1R|C:W > B:R > A:W]"
+
+
+def test_describe_pure_mixes_omit_absent_role():
+    assert quad_port(roles=(WRITE,) * 4).mix() == "4W"
+    assert PortConfig(enabled=(False, False, True, False),
+                      roles=(READ,) * 4).describe() == "1-port[1R|C:R]"
+
+
+def test_describe_parse_round_trip_all_mixes():
+    """Every 1-4-port enable set x R/W role assignment (80 combinations)
+    round-trips describe() -> parse() -> describe() exactly, preserving the
+    enabled set, the enabled ports' roles and the service order."""
+    count = 0
+    for mask in range(1, 16):
+        enabled = tuple(bool(mask >> i & 1) for i in range(4))
+        on = [i for i in range(4) if enabled[i]]
+        for bits in range(1 << len(on)):
+            roles = [READ] * 4
+            for k, p in enumerate(on):
+                roles[p] = WRITE if bits >> k & 1 else READ
+            cfg = PortConfig(enabled=enabled, roles=tuple(roles))
+            back = PortConfig.parse(cfg.describe())
+            assert back.enabled == cfg.enabled
+            assert back.service_order() == cfg.service_order()
+            for p in on:
+                assert back.roles[p] == cfg.roles[p]
+            assert back.describe() == cfg.describe()
+            count += 1
+    assert count == 80  # sum over masks of 2^popcount
+
+
+def test_parse_rejects_malformed_and_inconsistent():
+    with pytest.raises(ValueError, match="unparseable"):
+        PortConfig.parse("not a port description")
+    with pytest.raises(ValueError, match="unparseable port entry"):
+        PortConfig.parse("1-port[1W|E:W]")
+    with pytest.raises(ValueError, match="listed twice"):
+        PortConfig.parse("2-port[2W|A:W > A:W]")
+    with pytest.raises(ValueError, match="inconsistent"):
+        PortConfig.parse("3-port[2W+1R|A:W > B:R]")     # count mismatch
+    with pytest.raises(ValueError, match="inconsistent"):
+        PortConfig.parse("2-port[2W|A:W > B:R]")        # mix mismatch
+
+
+def test_complete_priority():
+    assert complete_priority(()) == (0, 1, 2, 3)
+    assert complete_priority((2,)) == (2, 0, 1, 3)
+    assert complete_priority((3, 0, 1)) == (3, 0, 1, 2)
+    with pytest.raises(ValueError, match="distinct"):
+        complete_priority((1, 1))
+    with pytest.raises(ValueError, match="distinct"):
+        complete_priority((4,))

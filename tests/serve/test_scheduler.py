@@ -1,0 +1,371 @@
+"""Dependency-tracked macro-cycle scheduler: hazard rules at page
+granularity, the static-walk oracle, and the engine integration — on a
+mixed prefill+decode workload the ooo scheduler merges hazard-free phases
+into shared multi-port traversals while staying token-identical to the
+rigid walk across schedule modes, kernel modes and port budgets.
+
+This module also runs in the CI ``tier1-multidevice`` job (see
+.github/workflows/ci.yml); the sharded test spawns its own forced-8-device
+subprocess like tests/distributed does."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.ports import READ, WRITE
+from repro.memory.paged_kv import APPEND, ATTN_READ, BULK_FILL, SCRUB
+from repro.serve.scheduler import PhaseTxn, PortTxn, conflicts, plan
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+# the engine's program-order phase ids (engine.EVICT/PREFILL/DECODE)
+EVICT, PREFILL, DECODE = 0, 1, 2
+
+
+def _evict(pages):
+    return PhaseTxn(EVICT, "evict",
+                    (PortTxn(SCRUB, WRITE, frozenset(pages)),))
+
+
+def _prefill(pages):
+    return PhaseTxn(PREFILL, "prefill",
+                    (PortTxn(BULK_FILL, WRITE, frozenset(pages)),))
+
+
+def _decode(append_pages, read_pages):
+    txns = []
+    if append_pages is not None:
+        txns.append(PortTxn(APPEND, WRITE, frozenset(append_pages)))
+    if read_pages is not None:
+        txns.append(PortTxn(ATTN_READ, READ, frozenset(read_pages)))
+    return PhaseTxn(DECODE, "decode", tuple(txns))
+
+
+# --------------------------------------------------------------------------
+# hazard rules
+# --------------------------------------------------------------------------
+
+def test_raw_same_page_prefill_then_decode_never_coschedules():
+    """Same-page prefill write then decode read is a RAW hazard: two
+    traversals, even though in-traversal service order would happen to
+    read-after-write correctly — the conservative split is the contract."""
+    phases = [_prefill({3}), _decode({5}, {3, 5})]
+    assert conflicts(phases[0], phases[1]) == "raw"
+    sched = plan(phases, mode="ooo")
+    assert len(sched.traversals) == 2
+    assert not sched.co_scheduled
+    assert [t.phase_ids() for t in sched.traversals] == [(PREFILL,), (DECODE,)]
+
+
+def test_disjoint_pages_coschedule_into_one_multiport_traversal():
+    """Prefill writes and decode append/read of DISJOINT pages share ONE
+    pool traversal with a 3-port 2W+1R mix, priority = program order."""
+    phases = [_prefill({3}), _decode({5}, {5, 6})]
+    assert conflicts(phases[0], phases[1]) is None
+    sched = plan(phases, mode="ooo")
+    assert len(sched.traversals) == 1
+    assert sched.co_scheduled
+    trav = sched.traversals[0]
+    assert trav.ports() == (BULK_FILL, APPEND, ATTN_READ)
+    assert trav.priority() == (BULK_FILL, APPEND, ATTN_READ, SCRUB)
+    cfg = trav.port_config()
+    assert cfg.mix() == "2W+1R"
+    assert cfg.service_order() == (BULK_FILL, APPEND, ATTN_READ)
+    assert cfg.describe() == "3-port[2W+1R|C:W > A:W > B:R]"
+
+
+def test_waw_coschedules_with_program_order_priority():
+    """Evict's scrub and a decode append hitting the same (reused) page are
+    WAW — co-schedulable because the traversal services program order:
+    scrub first, append's words land last (the fix over the old fixed pool
+    priority that serviced APPEND before SCRUB)."""
+    phases = [_evict({2}), _decode({2}, None)]
+    assert conflicts(phases[0], phases[1]) is None     # WAW, not a hazard
+    sched = plan(phases, mode="ooo")
+    assert len(sched.traversals) == 1 and sched.co_scheduled
+    assert sched.traversals[0].port_config().service_order() == \
+        (SCRUB, APPEND)
+
+
+def test_war_never_coschedules():
+    a = PhaseTxn(0, "reader", (PortTxn(ATTN_READ, READ, frozenset({4})),))
+    b = PhaseTxn(1, "writer", (PortTxn(SCRUB, WRITE, frozenset({4})),))
+    assert conflicts(a, b) == "war"
+    assert len(plan([a, b], mode="ooo").traversals) == 2
+
+
+def test_port_collision_splits_even_disjoint_pages():
+    a = PhaseTxn(0, "w1", (PortTxn(BULK_FILL, WRITE, frozenset({1})),))
+    b = PhaseTxn(1, "w2", (PortTxn(BULK_FILL, WRITE, frozenset({9})),))
+    assert conflicts(a, b) == "port"
+    assert len(plan([a, b], mode="ooo").traversals) == 2
+
+
+def test_intra_phase_append_read_pair_is_exempt():
+    """A decode phase's own append+read of the same page stays ONE
+    traversal: the in-traversal W-before-R service order IS the fused
+    kernel's same-cycle contract; hazard rules apply between phases."""
+    sched = plan([_decode({7}, {7})], mode="ooo")
+    assert len(sched.traversals) == 1
+    assert sched.traversals[0].ports() == (APPEND, ATTN_READ)
+    assert not sched.co_scheduled      # one phase, nothing merged
+
+
+# --------------------------------------------------------------------------
+# modes, port budget, role splitting
+# --------------------------------------------------------------------------
+
+def test_static_mode_is_the_rigid_walk_oracle():
+    phases = [_evict({0}), _prefill({3}), _decode({5}, {5, 6})]
+    sched = plan(phases, mode="static")
+    assert [t.phase_ids() for t in sched.traversals] == \
+        [(EVICT,), (PREFILL,), (DECODE,)]
+    assert not sched.co_scheduled
+
+
+def test_max_ports_one_presplits_to_single_txn_traversals():
+    sched = plan([_decode({5}, {5, 6})], mode="ooo", max_ports=1)
+    assert len(sched.traversals) == 2
+    assert [t.ports() for t in sched.traversals] == \
+        [(APPEND,), (ATTN_READ,)]
+    assert [ph.label for t in sched.traversals for ph in t.phases] == \
+        ["decode[0]", "decode[1]"]
+
+
+def test_max_ports_bounds_the_merge():
+    phases = [_evict({0}), _prefill({3}), _decode({5}, {5, 6})]
+    full = plan(phases, mode="ooo", max_ports=4)
+    assert len(full.traversals) == 1                   # 4-port 3W+1R
+    assert full.traversals[0].port_config().mix() == "3W+1R"
+    two = plan(phases, mode="ooo", max_ports=2)
+    assert all(len(t.ports()) <= 2 for t in two.traversals)
+    # evict+prefill merge into one 2W traversal; decode keeps its own pair
+    assert [t.phase_ids() for t in two.traversals] == \
+        [(EVICT, PREFILL), (DECODE,)]
+
+
+def test_split_roles_emits_writes_then_reads():
+    sched = plan([_prefill({3}), _decode({5}, {5, 6})], mode="ooo",
+                 split_roles=True)
+    roles = [tuple({t.role for t in trav.txns()}) for trav in sched.traversals]
+    assert roles == [(WRITE,), (READ,)]
+    assert sched.traversals[0].ports() == (BULK_FILL, APPEND)
+    assert sched.traversals[1].ports() == (ATTN_READ,)
+
+
+def test_plan_validates_inputs():
+    with pytest.raises(ValueError, match="unknown schedule mode"):
+        plan([], mode="speculative")
+    with pytest.raises(ValueError, match="max_ports"):
+        plan([], max_ports=0)
+    with pytest.raises(ValueError, match="program order"):
+        plan([_decode({5}, {5}), _prefill({3})])
+    # empty phases are dropped, an all-empty cycle plans to zero traversals
+    assert plan([PhaseTxn(0, "idle", ())]).traversals == ()
+
+
+# --------------------------------------------------------------------------
+# engine integration: mixed prefill+decode workload
+# --------------------------------------------------------------------------
+
+STAGGER_LENS = (6, 14, 22, 30)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import registry
+    from repro.models import init_params
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _staggered(cfg, params, max_new=4, **kw):
+    """Staggered prompt lengths + a small prefill chunk keep some slots
+    mid-prefill while others decode, so macro-cycles carry multiple
+    phases — the workload the scheduler exists for."""
+    from repro.serve.engine import MultiPortEngine
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in STAGGER_LENS]
+    eng = MultiPortEngine(params, cfg, slots=4, max_len=64, chunk_tokens=8,
+                          seq_tile=8, **kw)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    done = eng.run(max_cycles=500)
+    assert len(done) == len(prompts)
+    return eng, {r.rid: tuple(r.generated) for r in done}
+
+
+def test_ooo_coschedules_and_saves_traversals(setup):
+    """Acceptance: under a mixed workload ooo commits STRICTLY fewer pool
+    traversals per macro-cycle than the static walk, co-schedules
+    multi-phase cycles, and stays token-identical."""
+    cfg, params = setup
+    eo, to = _staggered(cfg, params, schedule_mode="ooo")
+    es, ts = _staggered(cfg, params, schedule_mode="static")
+    assert to == ts
+    assert eo.multi_phase_cycles > 0 and es.multi_phase_cycles > 0
+    assert eo.coscheduled_cycles > 0
+    assert es.coscheduled_cycles == 0
+    assert eo.coschedule_frac > 0.5
+    assert (eo.pool_traversals / eo.cycles
+            < es.pool_traversals / es.cycles)
+    # the merges really produced >2-port mixes (per-mix tile accounting ran)
+    assert any(k.startswith("3-port[") for k in eo.pool.mix_counts)
+    # static only ever issues the legacy single-phase mixes
+    assert all(k.startswith(("1-port[", "2-port[1W+1R"))
+               for k in es.pool.mix_counts)
+
+
+def test_reference_kernels_coschedule_too(setup):
+    """The two-pass reference pool discipline (split_roles) still merges
+    phases before the role split — fewer traversals, same tokens."""
+    cfg, params = setup
+    eo, to = _staggered(cfg, params, kernel_mode="reference",
+                        schedule_mode="ooo")
+    es, ts = _staggered(cfg, params, kernel_mode="reference",
+                        schedule_mode="static")
+    assert to == ts
+    assert eo.coscheduled_cycles > 0
+    assert eo.pool_traversals < es.pool_traversals
+
+
+def test_port_budget_degradations_token_identical(setup):
+    """max_ports is the paper's B1B0 knob: 2-port and 1-port budgets still
+    decode the same tokens; 1-port degrades the compute to the two-pass
+    oracle and never issues a multi-port traversal."""
+    cfg, params = setup
+    _, oracle = _staggered(cfg, params, schedule_mode="static")
+    e2, t2 = _staggered(cfg, params, schedule_mode="ooo", max_ports=2)
+    e1, t1 = _staggered(cfg, params, schedule_mode="ooo", max_ports=1)
+    assert t2 == oracle and t1 == oracle
+    assert e1.compute_port_mix == "w+r" and not e1._fused_compute
+    assert all(k.startswith("1-port[") for k in e1.pool.mix_counts)
+    assert all(int(k[0]) <= 2 for k in e2.pool.mix_counts)
+
+
+def test_page_reuse_raw_split_regression(setup):
+    """page_tokens=1 makes every decode append allocate a fresh page — the
+    page evict just freed — so evict's scrub write hazards (RAW) against
+    the decode READ of that page and the scheduler must keep them in
+    separate traversals. Tokens must match the reference oracle."""
+    from repro.serve.engine import MultiPortEngine
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (4, 6, 5)]
+    max_news = (2, 10, 3)          # staggered finishes: evict mid-decode
+
+    def serve(kernel_mode, schedule_mode):
+        eng = MultiPortEngine(params, cfg, slots=2, max_len=16,
+                              page_tokens=1, chunk_tokens=4, seq_tile=8,
+                              kernel_mode=kernel_mode,
+                              schedule_mode=schedule_mode)
+        for p, mn in zip(prompts, max_news):
+            eng.submit(p, max_new=mn)
+        done = eng.run(max_cycles=500)
+        assert len(done) == len(prompts)
+        return eng, {r.rid: tuple(r.generated) for r in done}
+
+    eo, to = serve("pallas", "ooo")
+    _, tr = serve("reference", "static")
+    assert to == tr
+    # at least one cycle carried evict AND decode yet did NOT merge them
+    # (the RAW split), visible in the per-cycle schedule log
+    split_cycles = [
+        log for log in eo.schedule_log
+        if {EVICT, DECODE} <= {ph for t in log for ph in t}
+        and all(len(set(t)) == 1 for t in log)]
+    assert split_cycles, "expected a RAW-split evict+decode cycle"
+
+
+def test_ooo_token_identical_property(setup):
+    """Property (CI installs the ``dev`` extra; skips locally): random
+    staggered admissions and port budgets — ooo stays token-identical to
+    the static oracle through arbitrary admission/eviction interleavings."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.serve.engine import MultiPortEngine
+    cfg, params = setup
+
+    @hyp.settings(max_examples=5, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(
+        prompt_lens=st.lists(st.integers(2, 20), min_size=2, max_size=5),
+        chunk_tokens=st.sampled_from([4, 8]),
+        max_ports=st.integers(1, 4),
+        data=st.data())
+    def prop(prompt_lens, chunk_tokens, max_ports, data):
+        rng = np.random.default_rng(7)
+        prompts = [list(rng.integers(0, cfg.vocab, n)) for n in prompt_lens]
+        gaps = data.draw(st.lists(st.integers(0, 3),
+                                  min_size=len(prompts),
+                                  max_size=len(prompts)), label="gaps")
+
+        def serve(schedule_mode, mp):
+            eng = MultiPortEngine(params, cfg, slots=2, max_slots=4,
+                                  max_len=32, chunk_tokens=chunk_tokens,
+                                  seq_tile=8, schedule_mode=schedule_mode,
+                                  max_ports=mp)
+            for p, gap in zip(prompts, gaps):
+                eng.submit(p, max_new=3)
+                for _ in range(gap):          # stagger: run between admits
+                    if eng.pending_work():
+                        eng.step()
+            done = eng.run(max_cycles=500)
+            assert len(done) == len(prompts)
+            return {r.rid: tuple(r.generated) for r in done}
+
+        assert serve("ooo", max_ports) == serve("static", 4)
+
+    prop()
+
+
+def test_sharded_ooo_matches_static():
+    """Data-parallel KV + scheduler: over 4 forced host devices the ooo
+    schedule still co-schedules, saves traversals, and decodes the same
+    tokens as the sharded static walk and the unsharded oracle."""
+    body = """
+        import jax, numpy as np
+        from repro.configs import registry
+        from repro.models import init_params
+        from repro.launch.mesh import make_kv_mesh
+        from repro.serve.engine import MultiPortEngine
+
+        cfg = registry.get("tinyllama-1.1b", reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        prompts = [list(rng.integers(0, cfg.vocab, n))
+                   for n in (6, 14, 22, 30)]
+
+        def serve(schedule_mode, mesh):
+            eng = MultiPortEngine(params, cfg, slots=4, max_len=64,
+                                  chunk_tokens=8, seq_tile=8, mesh=mesh,
+                                  schedule_mode=schedule_mode)
+            for p in prompts:
+                eng.submit(p, max_new=4)
+            done = eng.run(max_cycles=500)
+            assert len(done) == len(prompts)
+            return eng, {r.rid: tuple(r.generated) for r in done}
+
+        _, oracle = serve("ooo", None)
+        mesh = make_kv_mesh(4)
+        eo, to = serve("ooo", mesh)
+        es, ts = serve("static", mesh)
+        assert to == oracle and ts == oracle
+        assert eo.n_kv_shards == 4
+        assert eo.coscheduled_cycles > 0 and es.coscheduled_cycles == 0
+        assert eo.pool_traversals < es.pool_traversals
+        print("SCHED-SHARDED-OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SCHED-SHARDED-OK" in r.stdout
