@@ -1,0 +1,374 @@
+"""Open-loop serving bench: latency SLOs under real traffic (bench-serve/v1).
+
+Every other bench in this repo is CLOSED-loop — all requests submitted up
+front, ratio gates on traversals/tiles/traces. This one drives the engine
+the way production traffic does: requests ARRIVE on a seeded virtual-clock
+schedule (``serve/traffic.py``: Poisson arrivals, heavy-tailed
+prompt/output lengths over the config registry's scenario spread, or a
+JSONL trace replay), wait in the arrival-ordered admission queue while
+slots are contended, and the engine runs macro-cycles continuously.
+
+**The clock is virtual**: one tick per pool traversal (idle macro-cycles
+cost one tick), so every latency number is deterministic on CI and prices
+exactly what the paper prices — a scheduler that spends more pool
+traversals per macro-cycle (``schedule_mode="static"``, the rigid
+one-traversal-per-phase walk) burns more ticks for the same work, its
+queues grow, and its TAIL latency blows up. The bench serves the SAME
+arrival schedule under ``ooo`` (the PR-6 dependency-tracked port-mix
+scheduler) and ``static`` and reports, per mode: p50/p99 TTFT, p50/p99
+per-token latency, p50/p99 queue delay (all in virtual ticks; wall-clock
+columns opt-in via ``--wall-clock``), goodput (tokens from SLO-meeting
+requests per tick), queue-depth mean/max, and the engine's
+slot-contention / eviction-pressure counters.
+
+A second section checks the open-loop contract itself: with "infinite"
+slots (one per request) the open-loop admission path must reproduce the
+closed-loop token output EXACTLY — arrival timing may never change what
+gets generated, only when.
+
+CI gate (.github/workflows/ci.yml ``bench-serve``, via
+benchmarks/ci_gates.sh; schema + semantics in benchmarks/README.md):
+
+    python benchmarks/serve_bench.py --json BENCH_serve.json \
+        --max-p99-ttft-cycles T --min-goodput G
+
+exits non-zero unless, at the same arrival rate, ``ooo`` meets BOTH SLOs
+(p99 TTFT <= T virtual ticks, goodput >= G tokens/tick) AND the SLO still
+differentiates the schedulers: ``static`` misses the p99-TTFT SLO, or
+``ooo`` is strictly better on p99 TTFT with at-least-equal goodput. Token
+identity (open vs closed loop, and per-request ooo vs static) is part of
+the gate; ``BENCH_serve.json`` is written before the gate exits so the
+record uploads on failures too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+from repro.serve.traffic import drive, poisson_arrivals, trace_arrivals
+
+# workload geometry (shared with engine_bench's tile sweep): small enough
+# for CPU interpret mode, contended enough that queues actually form
+S_MAX = 64
+SEQ_TILE = 8
+CHUNK_TOKENS = 8
+SLOTS = 4
+MAX_PROMPT = 40
+MAX_OUTPUT = 10
+
+SCHEDULE_MODES = ("ooo", "static")
+
+
+def _setup():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _pct(vals, q) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if vals else 0.0
+
+
+def summarize(eng: MultiPortEngine, qdepth: list, wall: float,
+              slo_ttft=None) -> dict:
+    """Latency/goodput record for one open-loop run. Goodput counts only
+    tokens from requests whose TTFT met ``slo_ttft`` (all tokens when no
+    SLO is given); throughput counts everything."""
+    reqs = eng.finished
+    ttft = [r.ttft_ticks for r in reqs if r.ttft_ticks is not None]
+    tpot = [r.tpot_ticks for r in reqs if r.tpot_ticks is not None]
+    qdelay = [r.admit_tick - r.arrival_tick for r in reqs
+              if r.admit_tick is not None]
+    toks = sum(len(r.generated) for r in reqs)
+    ticks = max(eng.vclock, 1)
+    good = toks if slo_ttft is None else sum(
+        len(r.generated) for r in reqs
+        if r.ttft_ticks is not None and r.ttft_ticks <= slo_ttft)
+    ttft_wall = [r.t_first - r.t_submit for r in reqs
+                 if r.t_first is not None]
+    return {
+        "requests_finished": len(reqs),
+        "tokens": toks,
+        "total_ticks": eng.vclock,
+        "cycles": eng.cycles,
+        "pool_traversals": eng.pool_traversals,
+        "traversals_per_cycle": eng.pool_traversals / max(eng.cycles, 1),
+        "ttft_p50": _pct(ttft, 50), "ttft_p99": _pct(ttft, 99),
+        "tpot_p50": _pct(tpot, 50), "tpot_p99": _pct(tpot, 99),
+        "queue_delay_p50": _pct(qdelay, 50),
+        "queue_delay_p99": _pct(qdelay, 99),
+        "goodput_tokens_per_tick": good / ticks,
+        "throughput_tokens_per_tick": toks / ticks,
+        "queue_depth_mean": float(np.mean(qdepth)) if qdepth else 0.0,
+        "queue_depth_max": int(max(qdepth)) if qdepth else 0,
+        "peak_queue_depth": eng.admission.peak_depth,
+        "slot_contention_cycles": eng.slot_contention_cycles,
+        "evict_pressure_admissions": eng.evict_pressure_admissions,
+        "evictions": eng.evictions,
+        "coschedule_frac": eng.coschedule_frac,
+        # wall-clock column: recorded always, reported via --wall-clock,
+        # never gated (virtual ticks are the deterministic SLO base)
+        "wall": {
+            "seconds": wall,
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "ttft_p50_s": _pct(ttft_wall, 50),
+            "ttft_p99_s": _pct(ttft_wall, 99),
+        },
+    }
+
+
+def _tokens_by_index(reqs) -> dict:
+    """rid -> generated tokens; rids are submission-ordered in every run
+    of the same arrival list, so they align across modes."""
+    return {r.rid: tuple(r.generated) for r in reqs}
+
+
+def run_modes(params, cfg, arrivals, slo_ttft=None) -> dict:
+    """The same arrival schedule under each schedule mode, contended
+    (slots = SLOTS, no growth): the open-loop pressure run."""
+    out = {}
+    toks = {}
+    for mode in SCHEDULE_MODES:
+        eng = MultiPortEngine(params, cfg, slots=SLOTS, max_slots=SLOTS,
+                              max_len=S_MAX, seq_tile=SEQ_TILE,
+                              chunk_tokens=CHUNK_TOKENS,
+                              schedule_mode=mode)
+        qdepth, wall = drive(eng, arrivals)
+        s = summarize(eng, qdepth, wall, slo_ttft=slo_ttft)
+        s["schedule_mode"] = mode
+        out[mode] = s
+        toks[mode] = _tokens_by_index(eng.finished)
+    out["tokens_match"] = toks["ooo"] == toks["static"]
+    return out
+
+
+def run_identity(params, cfg, arrivals) -> dict:
+    """Open-loop admission with 'infinite' slots (one per request) must
+    reproduce the closed-loop token output exactly: arrival timing decides
+    WHEN work happens, never WHAT is generated."""
+    n = len(arrivals)
+    open_eng = MultiPortEngine(params, cfg, slots=n, max_slots=n,
+                               max_len=S_MAX, seq_tile=SEQ_TILE,
+                               chunk_tokens=CHUNK_TOKENS)
+    drive(open_eng, arrivals)
+    closed_eng = MultiPortEngine(params, cfg, slots=n, max_slots=n,
+                                 max_len=S_MAX, seq_tile=SEQ_TILE,
+                                 chunk_tokens=CHUNK_TOKENS)
+    for a in arrivals:
+        closed_eng.submit(list(a.prompt), a.max_new, arrival_tick=0)
+    closed_eng.run(max_cycles=20000)
+    to, tc = (_tokens_by_index(open_eng.finished),
+              _tokens_by_index(closed_eng.finished))
+    return {
+        "slots": n,
+        "open_finished": len(open_eng.finished),
+        "closed_finished": len(closed_eng.finished),
+        "open_vs_closed_tokens_match": (
+            to == tc and len(open_eng.finished) == n),
+    }
+
+
+def arrival_stats(arrivals) -> dict:
+    plens = [a.prompt_len for a in arrivals]
+    olens = [a.max_new for a in arrivals]
+    return {
+        "count": len(arrivals),
+        "first_tick": arrivals[0].arrival_tick if arrivals else 0,
+        "last_tick": arrivals[-1].arrival_tick if arrivals else 0,
+        "prompt_len": {"min": min(plens), "max": max(plens),
+                       "mean": float(np.mean(plens))},
+        "max_new": {"min": min(olens), "max": max(olens),
+                    "mean": float(np.mean(olens))},
+        "scenarios": dict(sorted(Counter(
+            a.scenario for a in arrivals).items())),
+    }
+
+
+def report(modes: dict, ident: dict, ast: dict, wall_clock: bool) -> None:
+    print("# open-loop serving: latency SLOs under the virtual clock "
+          "(1 tick = 1 pool traversal)")
+    print(f"arrivals: {ast['count']} over ticks "
+          f"[{ast['first_tick']}, {ast['last_tick']}], prompt_len "
+          f"{ast['prompt_len']['min']}..{ast['prompt_len']['max']} "
+          f"(mean {ast['prompt_len']['mean']:.1f}), max_new "
+          f"{ast['max_new']['min']}..{ast['max_new']['max']} "
+          f"(mean {ast['max_new']['mean']:.1f})")
+    cols = ("mode,ttft_p50,ttft_p99,tpot_p50,tpot_p99,qdelay_p99,"
+            "goodput_tok/tick,ticks,cycles,trav/cycle,qdepth_mean/max,"
+            "contention,evict_pressure")
+    if wall_clock:
+        cols += ",wall_s,wall_tok/s,wall_ttft_p99_s"
+    print(cols)
+    for mode in SCHEDULE_MODES:
+        s = modes[mode]
+        row = (f"{mode},{s['ttft_p50']:.1f},{s['ttft_p99']:.1f},"
+               f"{s['tpot_p50']:.2f},{s['tpot_p99']:.2f},"
+               f"{s['queue_delay_p99']:.1f},"
+               f"{s['goodput_tokens_per_tick']:.3f},{s['total_ticks']},"
+               f"{s['cycles']},{s['traversals_per_cycle']:.3f},"
+               f"{s['queue_depth_mean']:.2f}/{s['queue_depth_max']},"
+               f"{s['slot_contention_cycles']},"
+               f"{s['evict_pressure_admissions']}")
+        if wall_clock:
+            w = s["wall"]
+            row += (f",{w['seconds']:.2f},{w['tokens_per_s']:.1f},"
+                    f"{w['ttft_p99_s']:.3f}")
+        print(row)
+    print(f"tokens_match(ooo==static),{modes['tokens_match']}")
+    print()
+    print("# open-loop == closed-loop identity (infinite slots)")
+    print(f"slots,{ident['slots']},open_finished,{ident['open_finished']},"
+          f"closed_finished,{ident['closed_finished']},tokens_match,"
+          f"{ident['open_vs_closed_tokens_match']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=14,
+                    help="open-loop arrivals to generate (ignored with "
+                         "--trace)")
+    ap.add_argument("--arrival-rate", type=float, default=0.25,
+                    help="Poisson arrival rate in requests per virtual "
+                         "tick (pool traversal)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a JSONL arrival trace instead of the "
+                         "seeded Poisson generator")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the bench-serve/v1 record "
+                         "(BENCH_serve.json)")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="report the wall-clock columns alongside the "
+                         "virtual-clock ones (recorded in the JSON either "
+                         "way; never gated)")
+    ap.add_argument("--max-p99-ttft-cycles", type=float, default=None,
+                    help="SLO gate: exit non-zero unless ooo's p99 TTFT "
+                         "(virtual-clock ticks) is <= this AND the SLO "
+                         "still differentiates ooo from static")
+    ap.add_argument("--min-goodput", type=float, default=None,
+                    help="SLO gate: exit non-zero if ooo's goodput "
+                         "(tokens/tick from SLO-meeting requests) drops "
+                         "below this")
+    args = ap.parse_args(argv)
+
+    cfg, params = _setup()
+    if args.trace:
+        arrivals = trace_arrivals(args.trace, vocab=cfg.vocab,
+                                  seed=args.seed)
+        for a in arrivals:
+            if a.prompt_len + a.max_new > S_MAX:
+                raise SystemExit(
+                    f"--trace: request ({a.prompt_len}+{a.max_new}) "
+                    f"exceeds the bench max_len {S_MAX}")
+    else:
+        arrivals = poisson_arrivals(
+            args.requests, args.arrival_rate, seed=args.seed,
+            vocab=cfg.vocab, max_prompt=MAX_PROMPT, max_output=MAX_OUTPUT)
+
+    ast = arrival_stats(arrivals)
+    modes = run_modes(params, cfg, arrivals,
+                      slo_ttft=args.max_p99_ttft_cycles)
+    ident = run_identity(params, cfg, arrivals)
+    report(modes, ident, ast, args.wall_clock)
+
+    ooo, static = modes["ooo"], modes["static"]
+    slo_differentiates = True
+    if args.max_p99_ttft_cycles is not None:
+        slo_differentiates = (
+            static["ttft_p99"] > args.max_p99_ttft_cycles
+            or (ooo["ttft_p99"] < static["ttft_p99"]
+                and ooo["goodput_tokens_per_tick"]
+                >= static["goodput_tokens_per_tick"]))
+
+    if args.json:
+        record = {
+            "schema": "bench-serve/v1",
+            "config": {
+                "arch": "tinyllama-1.1b", "reduced": True,
+                "requests": ast["count"],
+                "arrival_rate": None if args.trace else args.arrival_rate,
+                "trace": args.trace, "seed": args.seed,
+                "slots": SLOTS, "max_len": S_MAX, "seq_tile": SEQ_TILE,
+                "chunk_tokens": CHUNK_TOKENS,
+                "max_prompt": MAX_PROMPT, "max_output": MAX_OUTPUT,
+                "clock": "virtual (1 tick = 1 pool traversal; idle "
+                         "macro-cycle = 1 tick)",
+            },
+            "arrivals": ast,
+            "per_mode": {m: modes[m] for m in SCHEDULE_MODES},
+            "identity": ident,
+            "gate": {
+                "max_p99_ttft_cycles": args.max_p99_ttft_cycles,
+                "min_goodput": args.min_goodput,
+                "ooo_ttft_p99": ooo["ttft_p99"],
+                "static_ttft_p99": static["ttft_p99"],
+                "ooo_goodput": ooo["goodput_tokens_per_tick"],
+                "static_goodput": static["goodput_tokens_per_tick"],
+                "slo_differentiates": slo_differentiates,
+                "schedule_tokens_match": modes["tokens_match"],
+                "open_vs_closed_tokens_match":
+                    ident["open_vs_closed_tokens_match"],
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\nwrote {args.json}")
+
+    failed = False
+    if args.max_p99_ttft_cycles is not None:
+        if ooo["ttft_p99"] > args.max_p99_ttft_cycles:
+            print(f"GATE FAIL: ooo p99 TTFT {ooo['ttft_p99']:.1f} ticks > "
+                  f"{args.max_p99_ttft_cycles}", file=sys.stderr)
+            failed = True
+        elif not slo_differentiates:
+            print(f"GATE FAIL: SLO no longer differentiates — static p99 "
+                  f"TTFT {static['ttft_p99']:.1f} also meets "
+                  f"{args.max_p99_ttft_cycles} and ooo is not strictly "
+                  f"better (ooo {ooo['ttft_p99']:.1f} ticks / "
+                  f"{ooo['goodput_tokens_per_tick']:.3f} tok/tick vs "
+                  f"static {static['ttft_p99']:.1f} / "
+                  f"{static['goodput_tokens_per_tick']:.3f})",
+                  file=sys.stderr)
+            failed = True
+        else:
+            how = ("misses the SLO"
+                   if static["ttft_p99"] > args.max_p99_ttft_cycles
+                   else "strictly worse")
+            print(f"GATE OK: ooo p99 TTFT {ooo['ttft_p99']:.1f} <= "
+                  f"{args.max_p99_ttft_cycles} ticks; static "
+                  f"{static['ttft_p99']:.1f} ({how})")
+    if args.min_goodput is not None:
+        if ooo["goodput_tokens_per_tick"] < args.min_goodput:
+            print(f"GATE FAIL: ooo goodput "
+                  f"{ooo['goodput_tokens_per_tick']:.3f} tok/tick < "
+                  f"{args.min_goodput}", file=sys.stderr)
+            failed = True
+        else:
+            print(f"GATE OK: ooo goodput "
+                  f"{ooo['goodput_tokens_per_tick']:.3f} tok/tick >= "
+                  f"{args.min_goodput} (static "
+                  f"{static['goodput_tokens_per_tick']:.3f})")
+    if args.max_p99_ttft_cycles is not None or args.min_goodput is not None:
+        if not modes["tokens_match"]:
+            print("GATE FAIL: ooo and static disagree on generated tokens",
+                  file=sys.stderr)
+            failed = True
+        if not ident["open_vs_closed_tokens_match"]:
+            print("GATE FAIL: open-loop admission with infinite slots "
+                  "does not reproduce closed-loop tokens", file=sys.stderr)
+            failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,14 @@ Multi-device (data-parallel KV — the paged pool sharded page-aligned over a
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --kv-shards 4
+
+Open-loop (requests ARRIVE on a virtual-clock schedule instead of all being
+submitted up front — seeded Poisson via ``--arrival-rate``, or a JSONL
+trace via ``--trace``; ``--slo`` prints p99-TTFT SLO attainment in
+virtual-clock ticks, 1 tick = 1 pool traversal):
+
+    PYTHONPATH=src python -m repro.launch.serve --arrival-rate 0.25 \
+        --requests 16 --slo 120
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import numpy as np
 from repro.configs import registry
 from repro.launch.mesh import make_kv_mesh
 from repro.models import init_params
+from repro.serve import traffic
 from repro.serve.engine import MultiPortEngine
 
 
@@ -69,8 +78,25 @@ def main() -> None:
                          "two-pass W-then-R oracle")
     ap.add_argument("--no-interpret", action="store_true",
                     help="lower Pallas kernels through Mosaic (TPU)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop mode: seeded Poisson arrivals at this "
+                         "many requests per virtual tick (1 tick = 1 pool "
+                         "traversal), heavy-tailed lengths over the "
+                         "registry scenario spread; requests are admitted "
+                         "FIFO as slots free up instead of being submitted "
+                         "all at once")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="open-loop mode: replay a JSONL arrival trace "
+                         "(see repro.serve.traffic.write_trace) instead of "
+                         "the Poisson generator")
+    ap.add_argument("--slo", type=float, default=None, metavar="TICKS",
+                    help="p99-TTFT SLO in virtual-clock ticks: print "
+                         "attainment (fraction of requests whose TTFT met "
+                         "it) with the open-loop latency summary")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.trace and args.arrival_rate is not None:
+        raise SystemExit("--trace and --arrival-rate are exclusive")
 
     cfg = registry.get(args.arch, reduced=args.reduced)
     if cfg.input_mode != "tokens":
@@ -115,13 +141,38 @@ def main() -> None:
                           mesh=mesh,
                           schedule_mode=args.schedule_mode,
                           max_ports=args.max_ports)
-    rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
-        eng.submit(list(rng.integers(0, cfg.vocab, int(rng.integers(3, 10)))),
-                   max_new=args.max_new)
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
+    open_loop = args.trace is not None or args.arrival_rate is not None
+    if open_loop:
+        if args.trace:
+            arrivals = traffic.trace_arrivals(args.trace, vocab=cfg.vocab,
+                                              seed=args.seed)
+        else:
+            max_prompt = max(args.max_len - args.max_new, 2)
+            arrivals = traffic.poisson_arrivals(
+                args.requests, args.arrival_rate, seed=args.seed,
+                vocab=cfg.vocab, max_prompt=min(40, max_prompt),
+                max_output=args.max_new)
+        for a in arrivals:
+            if a.prompt_len + a.max_new > args.max_len:
+                raise SystemExit(
+                    f"arrival ({a.prompt_len}+{a.max_new}) exceeds "
+                    f"--max-len {args.max_len}")
+        print(f"open-loop: {len(arrivals)} arrivals over ticks "
+              f"[{arrivals[0].arrival_tick}, {arrivals[-1].arrival_tick}]"
+              if arrivals else "open-loop: empty schedule")
+        t0 = time.perf_counter()
+        traffic.drive(eng, arrivals)
+        dt = time.perf_counter() - t0
+        done = eng.finished
+    else:
+        rng = np.random.default_rng(args.seed)
+        for _ in range(args.requests):
+            eng.submit(list(rng.integers(0, cfg.vocab,
+                                         int(rng.integers(3, 10)))),
+                       max_new=args.max_new)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     mode = "single-port" if args.single_port else "multi-port"
     print(f"[{mode}] {len(done)} requests, {toks} tokens, "
@@ -152,6 +203,28 @@ def main() -> None:
               f"(balance {eng.kv_tile_balance:.2f}x ideal); pool tiles r/w "
               f"by shard {eng.pool.tile_reads_by_shard}/"
               f"{eng.pool.tile_writes_by_shard}")
+    if open_loop:
+        ttft = np.array([r.ttft_ticks for r in done
+                         if r.ttft_ticks is not None], dtype=np.float64)
+        tpot = np.array([r.tpot_ticks for r in done
+                         if r.tpot_ticks is not None], dtype=np.float64)
+        if ttft.size:
+            line = (f"latency (virtual ticks, 1 tick = 1 pool traversal): "
+                    f"TTFT p50/p99 {np.percentile(ttft, 50):.1f}/"
+                    f"{np.percentile(ttft, 99):.1f}")
+            if tpot.size:
+                line += (f"; per-token p50/p99 {np.percentile(tpot, 50):.2f}/"
+                         f"{np.percentile(tpot, 99):.2f}")
+            print(line)
+        print(f"queue: peak depth {eng.admission.peak_depth}, "
+              f"slot-contention cycles {eng.slot_contention_cycles}, "
+              f"evict-pressure admissions {eng.evict_pressure_admissions}, "
+              f"total ticks {eng.vclock}")
+        if args.slo is not None and ttft.size:
+            met = int((ttft <= args.slo).sum())
+            print(f"SLO (p99 TTFT <= {args.slo:g} ticks): "
+                  f"{'MET' if np.percentile(ttft, 99) <= args.slo else 'MISSED'}"
+                  f" — {met}/{ttft.size} requests within SLO")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
 

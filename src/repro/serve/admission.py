@@ -1,0 +1,77 @@
+"""Host-side admission control for the multi-port serving engine.
+
+The engine used to pop admissions straight off a ``deque`` inside its
+prefill phase — workable closed-loop, but the open-loop traffic harness
+needs admission to be a first-class HOST-side decision, decoupled from the
+device macro-cycle: requests arrive on a virtual-clock schedule (see
+``serve/traffic.py``), wait here while slots are contended, and are
+admitted when capacity frees up. Keeping the queue its own object also
+pins the architectural invariant the regression tests check:
+
+**Admission follows ARRIVAL order (FIFO) under slot contention.** When
+several queued requests compete for one freed slot, the OLDEST ready
+request wins — :meth:`pop_ready` only ever surfaces the queue head, never
+a younger request that happens to look cheaper (shorter prompt, fewer
+pages). A ready-set implementation that re-ordered by readiness or size
+would systematically starve long-prompt requests behind a stream of short
+ones; head-of-line blocking is the contract, and
+``tests/serve/test_admission.py`` pins it.
+
+The queue measures itself: ``peak_depth`` (most requests ever waiting),
+``admitted``, and per-request wait stamps land on the request objects
+themselves (``admit_cycle`` / ``admit_tick``), which the open-loop bench
+turns into queue-delay percentiles. Requests only need ``arrival_tick``
+(virtual-clock arrival time) — the queue is generic over the payload.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+
+class AdmissionQueue:
+    """Arrival-ordered FIFO of submitted-but-not-admitted requests."""
+
+    def __init__(self):
+        self._q: deque = deque()
+        self.peak_depth = 0
+        self.submitted = 0
+        self.admitted = 0
+
+    def push(self, req) -> None:
+        """Enqueue in submission order (== arrival order: callers submit as
+        the traffic schedule fires, and ties share the submission order)."""
+        self._q.append(req)
+        self.submitted += 1
+        self.peak_depth = max(self.peak_depth, len(self._q))
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def head(self):
+        """The oldest queued request (None when empty) — the ONLY request
+        eligible for the next admission."""
+        return self._q[0] if self._q else None
+
+    def head_ready(self, now: float) -> bool:
+        """True when the oldest queued request has arrived by virtual tick
+        ``now`` (closed-loop submissions stamp their arrival at submit time,
+        so they are always ready)."""
+        return bool(self._q) and self._q[0].arrival_tick <= now
+
+    def ready_depth(self, now: float) -> int:
+        """How many queued requests have arrived by ``now`` — the open-loop
+        bench's queue-depth sample."""
+        return sum(1 for r in self._q if r.arrival_tick <= now)
+
+    def pop_ready(self, now: float) -> Optional[object]:
+        """Admit the queue HEAD if it has arrived; None otherwise. Never
+        skips ahead — a later, shorter request must wait behind the head
+        (FIFO; no starvation of long-prompt requests)."""
+        if not self.head_ready(now):
+            return None
+        self.admitted += 1
+        return self._q.popleft()

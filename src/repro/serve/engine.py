@@ -81,6 +81,37 @@ tiles actually touched; ``steady_decode_tile_bound`` is the ideal
 CPU-CI escape hatch; pass ``False`` on TPU deployments to lower through
 Mosaic.
 
+**Async host loop** (this revision): host-side admission/scheduling is
+decoupled from device macro-cycles. Admission lives in its own
+:class:`~repro.serve.admission.AdmissionQueue` (arrival-ordered FIFO — a
+freed slot under contention always goes to the OLDEST ready request, so
+long-prompt requests are never starved by younger short ones), and
+``step()`` is a two-stage software pipeline: the decode compute of
+macro-cycle N is DISPATCHED but not forced (JAX async dispatch — the jit
+call returns device futures), and its results are RETIRED at the start of
+macro-cycle N+1, after the host has already drained new arrivals and made
+the next cycle's admission decisions. While cycle N executes on the
+device, cycle N+1 is being planned (phase collection + the PR-6 hazard
+scheduler). Staging buffers are DOUBLE-BUFFERED: decode staging alternates
+between two preallocated host buffers, so filling cycle N+1's stage never
+overwrites memory the in-flight cycle N compute may still be reading.
+State evolution (tokens, cycle counts, traversals) is bit-identical to the
+synchronous loop — only the forcing point moves; ``flush()`` retires a
+trailing in-flight cycle and ``run()`` calls it.
+
+**Virtual clock**: ``vclock`` counts POOL TRAVERSALS (one tick = one
+physical pool traversal; a macro-cycle that commits none — idle/status
+only — costs one tick). Latency is measured against this clock, so SLO
+numbers are deterministic on CI and directly reflect what the paper
+prices: a scheduler spending more traversals per macro-cycle burns more
+ticks for the same work. Requests carry arrival/admit/first-token/finish
+stamps in both ticks and macro-cycles (plus opt-in wall-clock
+timestamps); ``slot_contention_cycles`` counts cycles where a ready
+arrival waited on a full slot table and ``evict_pressure_admissions``
+counts admissions that only proceeded because a slot was freed that same
+cycle — the open-loop bench (``benchmarks/serve_bench.py``) turns these
+into TTFT/per-token percentiles, goodput, and queue-depth curves.
+
 **Data-parallel KV** (``mesh`` with a ``kv`` axis): the pool's word axis —
 its sequence/page axis — shards across devices with page-aligned
 boundaries (``distributed.sharding.kv_shard_plan``; a page never straddles
@@ -103,7 +134,7 @@ path at every device count, in both kernel modes — ``kernel_mode=
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
 from typing import Optional
 
 import jax
@@ -119,6 +150,7 @@ from repro.memory.paged_kv import (APPEND, ATTN_READ, BULK_FILL, SCRUB,
                                    PagedPool, _bucket, seq_tile_buckets)
 from repro.models import decode_step, prefill_chunk
 from repro.serve import scheduler as sched_mod
+from repro.serve.admission import AdmissionQueue
 from repro.serve.scheduler import PhaseTxn, PortTxn
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
@@ -146,6 +178,39 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
+    # open-loop latency stamps (virtual-clock ticks = pool traversals, plus
+    # the macro-cycle index; wall-clock seconds recorded alongside as the
+    # opt-in column — never the deterministic gate)
+    arrival_tick: float = 0.0
+    arrival_cycle: int = 0
+    admit_tick: Optional[int] = None
+    admit_cycle: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    first_token_cycle: Optional[int] = None
+    finish_tick: Optional[int] = None
+    finish_cycle: Optional[int] = None
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def ttft_ticks(self) -> Optional[float]:
+        """Time to first token in virtual ticks (None until it exists)."""
+        if self.first_token_tick is None:
+            return None
+        return self.first_token_tick - self.arrival_tick
+
+    @property
+    def tpot_ticks(self) -> Optional[float]:
+        """Per-token decode latency in virtual ticks — the mean tick cost
+        of tokens AFTER the first; None until finished or for single-token
+        requests (which never enter decode)."""
+        if self.finish_tick is None or self.first_token_tick is None:
+            return None
+        if len(self.generated) < 2:
+            return None
+        return ((self.finish_tick - self.first_token_tick)
+                / (len(self.generated) - 1))
 
 
 @dataclasses.dataclass
@@ -156,6 +221,45 @@ class _PrefillState:
     consumed: int
     stage_k: np.ndarray                 # [L, max_len, Hkv, D]
     stage_v: np.ndarray
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unretired decode macro-cycle: the jitted step's
+    un-forced device results plus the host metadata needed to retire them.
+    Created at the end of ``step()`` (JAX async dispatch — the jit call
+    returned futures), consumed at the START of the next ``step()`` (or by
+    ``flush()``), so the device executes cycle N while the host plans
+    cycle N+1."""
+    cycle: int                     # macro-cycle index the work belongs to
+    vclock_end: int                # virtual clock after that cycle's commit
+    active: list                   # slots the decode step served
+    row_of: dict                   # slot -> staged batch row
+    lens: np.ndarray               # per-row pre-append cache lengths
+    state: dict                    # un-forced jit outputs (cache_k/cache_v)
+    logits: object                 # un-forced next-token logits
+
+
+class _DoubleBuffer:
+    """Two alternating preallocated host staging buffers per key: the
+    in-flight cycle's staging source is never overwritten by the next
+    cycle's fill (``jnp.asarray`` may alias host memory on CPU), and the
+    hot loop stops paying a fresh ``np.zeros`` allocation per cycle."""
+
+    def __init__(self):
+        self._bufs: dict = {}
+
+    def get(self, key, shape, dtype=np.float32) -> np.ndarray:
+        slot = self._bufs.setdefault(key, [None, None, 0])
+        idx = slot[2]
+        slot[2] ^= 1
+        buf = slot[idx]
+        if buf is None or buf.shape != shape or buf.dtype != dtype:
+            buf = np.zeros(shape, dtype)
+            slot[idx] = buf
+        else:
+            buf.fill(0)
+        return buf
 
 
 class MultiPortEngine:
@@ -256,9 +360,26 @@ class MultiPortEngine:
         self.slot_len: list[int] = [0] * slots      # tokens committed to pool
         self._pending: dict[int, np.ndarray] = {}   # slot -> KV word to append
         self._prefilling: dict[int, _PrefillState] = {}
-        self.queue: deque[Request] = deque()
+        # host-side admission: arrival-ordered FIFO, decoupled from the
+        # device macro-cycle (see serve/admission.py)
+        self.admission = AdmissionQueue()
         self.finished: list[Request] = []
         self.cycles = 0
+        # virtual clock: pool traversals + idle macro-cycles (1 tick each);
+        # all latency stamps are measured against this
+        self.idle_ticks = 0
+        # open-loop pressure counters: cycles where a ready arrival waited
+        # on a full slot table, and admissions that only went through
+        # because an eviction freed their slot that same cycle
+        self.slot_contention_cycles = 0
+        self.evict_pressure_admissions = 0
+        self.evictions = 0
+        # async pipeline state: the dispatched-but-unretired decode cycle,
+        # double-buffered staging, and this cycle's stamp/bookkeeping sets
+        self._inflight: Optional[_InFlight] = None
+        self._stage_bufs = _DoubleBuffer()
+        self._freed_slots_this_cycle: set = set()
+        self._token_events: list[Request] = []
         self.decode_steps = 0           # macro-cycles that carried decode traffic
         self.decode_traversals = 0      # pool traversals those cycles needed
         # steady state = decode cycles carrying both an append and a read
@@ -346,7 +467,13 @@ class MultiPortEngine:
         """Current slot-table size (grows on demand up to ``max_slots``)."""
         return len(self.slot_req)
 
-    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+    def submit(self, prompt: list[int], max_new: int = 16,
+               arrival_tick: Optional[float] = None) -> Request:
+        """Enqueue a request and return it (latency stamps land on the
+        returned object as the request moves through admission/serving).
+        ``arrival_tick`` is its open-loop arrival time on the virtual
+        clock; omitted (closed loop) it arrives NOW, so it is immediately
+        admissible — the pre-harness behavior."""
         if len(prompt) + max_new > self.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
@@ -355,11 +482,45 @@ class MultiPortEngine:
             raise ValueError("empty prompt")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new))
-        return rid
+        req = Request(
+            rid, list(prompt), max_new,
+            arrival_tick=(self.vclock if arrival_tick is None
+                          else arrival_tick),
+            arrival_cycle=self.cycles, t_submit=time.perf_counter())
+        self.admission.push(req)
+        return req
 
     def pending_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
+        return bool(self.admission) or any(r is not None
+                                           for r in self.slot_req)
+
+    @property
+    def vclock(self) -> int:
+        """Virtual-clock ticks elapsed: one per pool traversal, plus one
+        per idle macro-cycle — the deterministic time base every latency
+        stamp and SLO gate is measured in."""
+        return self.pool.traversals + self.idle_ticks
+
+    def advance_idle(self, ticks: int) -> None:
+        """Fast-forward the virtual clock through a known-idle stretch
+        (the open-loop driver calls this instead of spinning status-only
+        macro-cycles while waiting for the next scheduled arrival)."""
+        if ticks < 0:
+            raise ValueError(f"ticks must be >= 0, got {ticks}")
+        self.idle_ticks += ticks
+
+    @property
+    def has_inflight(self) -> bool:
+        """True while a dispatched decode macro-cycle awaits retirement."""
+        return self._inflight is not None
+
+    def flush(self) -> None:
+        """Retire a trailing in-flight decode cycle (forces its device
+        results). ``run()`` calls this; drivers that step manually must
+        too before reading final per-request state."""
+        if self._inflight is not None:
+            self._retire(self._inflight)
+            self._inflight = None
 
     @property
     def pool_traversals(self) -> int:
@@ -403,7 +564,8 @@ class MultiPortEngine:
         finished = any(r is not None and r.done for r in self.slot_req)
         can_place = (any(r is None for r in self.slot_req)
                      or len(self.slot_req) < self.max_slots)
-        admit = (bool(self.queue) and can_place) or bool(self._prefilling)
+        admit = ((self.admission.head_ready(self.vclock) and can_place)
+                 or bool(self._prefilling))
         active = any(r is not None and not r.done and i not in self._prefilling
                      for i, r in enumerate(self.slot_req))
         enabled = (finished, admit, active, True)
@@ -423,6 +585,8 @@ class MultiPortEngine:
                 self.slot_len[i] = 0
                 self._pending.pop(i, None)
                 self._prefilling.pop(i, None)
+                self.evictions += 1
+                self._freed_slots_this_cycle.add(i)
         return freed
 
     def _stage_len(self, need: int) -> int:
@@ -501,12 +665,25 @@ class MultiPortEngine:
         through a single chunked-prefill compute step, and all chunks' K,V
         become streams of the SAME bulk-write port transaction."""
         nl, _, hkv, hd = self._kv_dims
-        while self.queue:
+        # arrival-ordered admission wave: only the QUEUE HEAD is ever
+        # eligible (AdmissionQueue.pop_ready) — under slot contention a
+        # freed slot goes to the oldest ready request, never a younger
+        # shorter one (FIFO; no long-prompt starvation)
+        now = self.vclock
+        while self.admission.head_ready(now):
             slot = self._free_slot()
             if slot is None:
+                # a ready arrival waited this cycle on a full slot table
+                self.slot_contention_cycles += 1
                 break
-            req = self.queue.popleft()
+            req = self.admission.pop_ready(now)
             req.slot = slot
+            req.admit_cycle = self.cycles
+            req.admit_tick = now
+            if slot in self._freed_slots_this_cycle:
+                # admission only proceeded because this cycle's EVICT
+                # phase freed the slot — eviction-pressure signal
+                self.evict_pressure_admissions += 1
             if self.cfg.input_mode == "embeddings":
                 raise NotImplementedError("engine demo serves token models")
             self.slot_req[slot] = req
@@ -541,8 +718,10 @@ class MultiPortEngine:
         toks = np.zeros((nb, c), np.int32)
         clen = np.zeros((nb,), np.int32)
         offs = np.full((nb,), self._dead_row, np.int32)
-        stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
-        stage_v = np.zeros_like(stage_k)
+        stage_k = self._stage_bufs.get(("prefill", "k"),
+                                       (nl, nb, stage_s, hkv, hd))
+        stage_v = self._stage_bufs.get(("prefill", "v"),
+                                       (nl, nb, stage_s, hkv, hd))
         for slot in order:
             j = row_of[slot]
             ps = self._prefilling[slot]
@@ -593,6 +772,9 @@ class MultiPortEngine:
                 req.generated.append(int(np.argmax(lg[j])))
                 if len(req.generated) >= req.max_new:
                     req.done = True
+                # stamped AFTER this cycle's pool commit (the token isn't
+                # "served" until its KV traversal lands) — see step()
+                self._token_events.append(req)
         return streams
 
     def _collect_decode(self):
@@ -613,20 +795,26 @@ class MultiPortEngine:
         """Tokens the slot will hold once this cycle's append commits."""
         return self.slot_len[slot] + (1 if slot in self._pending else 0)
 
-    def _compute_decode(self, active: list, gathered: list
-                        ) -> tuple[int, int, list]:
-        """Run one fused decode step for all active slots over staging caches
-        assembled from the pool gather; stash each slot's new KV word as the
-        next cycle's append. The staging batch is padded to a power-of-two
-        bucket so slot-pool growth retraces the jit only at bucket edges, and
-        the staging LENGTH covers a bucketed count of live seq_tile tiles so
-        the decode kernel's grid scales with cache_len, not max_len. Under
+    def _dispatch_decode(self, active: list, gathered: list
+                         ) -> tuple[int, int, list, _InFlight]:
+        """Dispatch one fused decode step for all active slots over staging
+        caches assembled from the pool gather — WITHOUT forcing the device
+        results (JAX async dispatch): retirement (``_retire``) happens at
+        the start of the next macro-cycle, after the host has planned it,
+        so device compute and host scheduling overlap. The staging batch is
+        padded to a power-of-two bucket so slot-pool growth retraces the
+        jit only at bucket edges, the staging LENGTH covers a bucketed
+        count of live seq_tile tiles so the decode kernel's grid scales
+        with cache_len, not max_len, and the staging buffers are
+        DOUBLE-BUFFERED — the next cycle's fill never touches the buffer
+        this cycle's in-flight compute was dispatched from. Under
         data-parallel KV the batch rows are grouped into contiguous
         per-home-device blocks so the shard_map'd kernel's shards line up
         with the pool's page placement.
 
         Returns (R-port tiles touched, ideal per-slot ceil tile bound,
-        per-device tile reads)."""
+        per-device tile reads, the in-flight handle) — tile accounting is
+        pure host arithmetic over live lengths, so it needs no results."""
         nl, _, hkv, hd = self._kv_dims
         if self.n_kv_shards == 1:
             nb = _bucket(len(self.slot_req), lo=self._init_slots)
@@ -639,8 +827,10 @@ class MultiPortEngine:
         need_of = {i: rows.shape[0] + 1                 # post-append lens
                    for i, rows in zip(active, gathered)}
         stage_s = self._stage_len(max(need_of.values(), default=1))
-        stage_k = np.zeros((nl, nb, stage_s, hkv, hd), np.float32)
-        stage_v = np.zeros_like(stage_k)
+        stage_k = self._stage_bufs.get(("decode", "k"),
+                                       (nl, nb, stage_s, hkv, hd))
+        stage_v = self._stage_bufs.get(("decode", "v"),
+                                       (nl, nb, stage_s, hkv, hd))
         lens = np.full((nb,), self._dead_row, np.int32)
         last_tokens = np.zeros((nb, 1), np.int32)
         for i, rows in zip(active, gathered):
@@ -659,23 +849,42 @@ class MultiPortEngine:
                  "cache_v": jnp.asarray(stage_v)}
         st, logits = self._decode(self.params, state,
                                   {"inputs": jnp.asarray(last_tokens)})
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        ck, cv = st["cache_k"], st["cache_v"]
-        for i in active:
-            j = row_of[i]
-            self._pending[i] = self._kv_words(ck, cv, j, int(lens[j]),
-                                              int(lens[j]) + 1)[0]
+        inflight = _InFlight(cycle=self.cycles, vclock_end=self.vclock,
+                             active=list(active), row_of=row_of, lens=lens,
+                             state=st, logits=logits)
+        bounded = self._fused_compute and self.length_bound
+        tiles, bound, per_dev = self._tiles_touched(
+            [[need_of[i] for i in g] for g in groups], stage_s,
+            bounded=bounded)
+        return tiles, bound, per_dev, inflight
+
+    def _retire(self, inf: _InFlight) -> None:
+        """Force an in-flight decode cycle's device results and fold them
+        into host state: each slot's new KV word becomes the NEXT cycle's
+        append, its token lands on the request, and finished requests get
+        their latency stamps — at the virtual-clock time their cycle's
+        traversals committed, not the later wall moment retirement ran."""
+        ck = np.asarray(inf.state["cache_k"])
+        cv = np.asarray(inf.state["cache_v"])
+        nxt = np.asarray(jnp.argmax(inf.logits, axis=-1))
+        now_wall = time.perf_counter()
+        for i in inf.active:
+            j = inf.row_of[i]
+            self._pending[i] = self._kv_words(ck, cv, j, int(inf.lens[j]),
+                                              int(inf.lens[j]) + 1)[0]
             r = self.slot_req[i]
             r.generated.append(int(nxt[j]))
             if len(r.generated) >= r.max_new:
                 r.done = True
-        bounded = self._fused_compute and self.length_bound
-        return self._tiles_touched([[need_of[i] for i in g] for g in groups],
-                                   stage_s, bounded=bounded)
+                r.finish_cycle = inf.cycle
+                r.finish_tick = inf.vclock_end
+                r.t_finish = now_wall
 
     def _service_status(self) -> dict:
         return {"cycle": self.cycles,
-                "queue": len(self.queue),
+                "vclock": self.vclock,
+                "queue": len(self.admission),
+                "queue_ready": self.admission.ready_depth(self.vclock),
                 "active": sum(r is not None and not r.done
                               for r in self.slot_req),
                 "prefilling": len(self._prefilling),
@@ -747,8 +956,17 @@ class MultiPortEngine:
 
     # ---- the macro-cycle -----------------------------------------------------
     def step(self) -> dict:
-        """One external clock cycle: walk enabled ports in priority order,
-        then issue the collected traffic against the physical pool."""
+        """One external clock cycle of the PIPELINED host loop: retire the
+        previous cycle's in-flight decode (its tokens/appends feed this
+        cycle's phases), walk enabled ports in priority order, issue the
+        collected traffic against the physical pool, then DISPATCH this
+        cycle's decode compute without forcing it — the device executes it
+        while the host plans the next macro-cycle. State evolution is
+        bit-identical to the synchronous loop; only the forcing point
+        moved."""
+        self.flush()
+        self._freed_slots_this_cycle = set()
+        self._token_events = []
         cfg = self._port_enables()
         sched = build_schedule(cfg)
         slots = sched.slots
@@ -804,13 +1022,32 @@ class MultiPortEngine:
             self._pending.pop(slot, None)
 
         dt = self.pool.traversals - t0
+        if dt == 0:
+            # an idle (status-only) macro-cycle still costs one virtual
+            # tick — otherwise the clock would stall while the open-loop
+            # engine waits on future arrivals
+            self.idle_ticks += 1
+        # latency stamps for this cycle's prefill-produced tokens: a first
+        # token counts as served once its cycle's traversals COMMITTED, at
+        # the post-commit virtual-clock reading
+        now_tick, now_wall = self.vclock, time.perf_counter()
+        for r in self._token_events:
+            r.first_token_cycle = self.cycles
+            r.first_token_tick = now_tick
+            r.t_first = now_wall
+            if r.done:
+                r.finish_cycle = self.cycles
+                r.finish_tick = now_tick
+                r.t_finish = now_wall
         if admits:
             self.prefill_steps += 1
             self.prefill_traversals += dt
         if active:
             self.decode_steps += 1
             self.decode_traversals += dt
-            tiles, bound, per_dev = self._compute_decode(active, gathered)
+            tiles, bound, per_dev, inflight = self._dispatch_decode(
+                active, gathered)
+            self._inflight = inflight
             self.decode_tile_reads += tiles
             for d, t in enumerate(per_dev):
                 self.decode_tile_reads_by_dev[d] += t
@@ -829,4 +1066,5 @@ class MultiPortEngine:
     def run(self, max_cycles: int = 10_000) -> list[Request]:
         while self.pending_work() and self.cycles < max_cycles:
             self.step()
+        self.flush()
         return self.finished

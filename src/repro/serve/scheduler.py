@@ -36,6 +36,18 @@ traversal's port count — the paper's B1B0 knob; phases wider than the
 budget pre-split into single-transaction units. ``split_roles=True``
 post-splits every traversal into a writes-traversal followed by a
 reads-traversal (the two-pass reference / bare-macro pool discipline).
+
+**Pipelining (PR 7).** :func:`plan` is pure host-side work over page-id
+footprints — it never touches device buffers — so the engine's async step
+loop plans cycle N's schedule while cycle N-1's dispatched decode is still
+executing on device (the dispatch is retired at the START of the next
+step). That placement is load-bearing for the planner's inputs staying
+valid: the phase footprints are computed from host page tables, which the
+in-flight cycle never mutates (all table updates happen at commit, before
+the next plan). The traversal count this module emits is also the serving
+harness's TIME BASE: the open-loop bench's virtual clock advances one tick
+per committed pool traversal, so a mode that plans more traversals per
+macro-cycle (``static``) pays for them directly in measured TTFT tail.
 """
 from __future__ import annotations
 

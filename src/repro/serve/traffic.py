@@ -1,0 +1,229 @@
+"""Open-loop traffic generation: seeded arrival processes with heavy-tailed
+prompt/output lengths drawn over the config registry's scenario spread.
+
+Every bench before this one was CLOSED-loop: all requests submitted up
+front, the engine drained at its own pace, and the gates were ratio-shaped
+(traversals, tiles, traces). The paper's pitch — bandwidth for
+multi-connected devices under real traffic — only cashes out if the
+configurable port mix holds tail latency when arrivals are bursty and
+lengths are heavy-tailed, the regime the flexible multi-port memory
+controller literature (arXiv 1712.03477) evaluates with open-loop request
+streams. This module provides that stream:
+
+* :func:`poisson_arrivals` — a seeded Poisson process (exponential
+  inter-arrivals at ``rate`` requests per VIRTUAL TICK — see below) whose
+  per-request prompt/output lengths are bounded-Pareto heavy-tailed
+  (``alpha`` ~ 1.2: most requests short, a fat tail of long ones), scaled
+  per request by a scenario drawn from the registry spread.
+* :func:`trace_arrivals` / :func:`write_trace` — JSONL trace replay (and
+  its inverse), so measured or hand-built schedules rerun bit-identically.
+* :func:`scenario_spread` — one scenario per registry architecture, its
+  length scale derived deterministically from the arch's reduced geometry
+  (layers x heads x head_dim as a proxy for the context its deployments
+  carry). The engine under test serves ONE architecture's weights, so
+  scenarios modulate LENGTHS (and tag the request), not token ids.
+
+**The clock is virtual.** Arrival times are in POOL-TRAVERSAL ticks — the
+engine's hardware time unit (one tick = one physical pool traversal; an
+idle macro-cycle costs one tick). Scheduling arrivals in ticks is what
+makes the harness genuinely open-loop: the arrival process does not slow
+down because the server got slower, so a scheduler that spends more
+traversals per macro-cycle (``schedule_mode="static"``) faces the same
+tick schedule with less capacity and its queues — and tail latency — grow.
+Determinism on CI falls out: same seed, same schedule, same percentiles;
+wall-clock timing is recorded alongside but never gates.
+
+Same seed => identical arrival schedule, bit-for-bit
+(``tests/serve/test_traffic.py`` pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One open-loop request: arrival time in virtual ticks + its payload."""
+
+    arrival_tick: int
+    prompt: tuple                  # token ids
+    max_new: int
+    scenario: str = ""
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A length-distribution profile: scale factors applied to the base
+    heavy-tailed prompt/output draws, tagged with the registry arch that
+    induced it."""
+
+    name: str
+    prompt_scale: float
+    output_scale: float
+
+
+def scenario_spread(arch_ids: Optional[Sequence[str]] = None
+                    ) -> tuple[Scenario, ...]:
+    """One scenario per registry architecture, length scales spread over
+    [0.5x, 2.0x] by the arch's reduced attention geometry (layers x heads x
+    head_dim — a deterministic, config-derived proxy for how long that
+    arch's deployments run). The spread is what keeps the traffic mix from
+    collapsing to one effective length distribution."""
+    ids = tuple(arch_ids) if arch_ids is not None else registry.ARCH_IDS
+    sizes = {}
+    for a in ids:
+        cfg = registry.get(a, reduced=True)
+        hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+        sizes[a] = cfg.n_layers * cfg.n_heads * hd
+    lo, hi = min(sizes.values()), max(sizes.values())
+    span = max(hi - lo, 1)
+
+    def _scale(v: int) -> float:
+        return 0.5 * 4.0 ** ((v - lo) / span)          # 0.5 .. 2.0
+
+    return tuple(
+        Scenario(name=a, prompt_scale=_scale(sizes[a]),
+                 # outputs skew shorter than prompts but keep the spread
+                 output_scale=0.5 + 0.5 * _scale(sizes[a]))
+        for a in ids)
+
+
+def _bounded_pareto(rng: np.random.Generator, alpha: float, lo: float,
+                    hi: float, size: int) -> np.ndarray:
+    """Bounded Pareto(alpha) on [lo, hi] via inverse-CDF — heavy-tailed
+    (most mass near ``lo``, a fat tail toward ``hi``) yet hard-bounded so
+    every draw fits the engine's ``max_len`` budget."""
+    u = rng.random(size)
+    ratio = (lo / hi) ** alpha
+    return lo / (1.0 - u * (1.0 - ratio)) ** (1.0 / alpha)
+
+
+def poisson_arrivals(n_requests: int, rate: float, *, seed: int, vocab: int,
+                     max_prompt: int, max_output: int, min_prompt: int = 2,
+                     min_output: int = 1, alpha: float = 1.2,
+                     scenarios: Optional[Sequence[Scenario]] = None
+                     ) -> tuple[Arrival, ...]:
+    """A seeded open-loop schedule: ``n_requests`` Poisson arrivals at
+    ``rate`` requests per virtual tick, each with bounded-Pareto prompt and
+    output lengths scaled by a per-request scenario drawn uniformly from
+    ``scenarios`` (default: the full registry spread). Deterministic in
+    ``seed``; token ids uniform over ``vocab``."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    if not min_prompt <= max_prompt:
+        raise ValueError(f"bad prompt bounds [{min_prompt}, {max_prompt}]")
+    if not min_output <= max_output:
+        raise ValueError(f"bad output bounds [{min_output}, {max_output}]")
+    scen = tuple(scenarios) if scenarios is not None else scenario_spread()
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, n_requests)
+    ticks = np.floor(np.cumsum(gaps)).astype(np.int64)
+    plen = _bounded_pareto(rng, alpha, min_prompt, max_prompt, n_requests)
+    olen = _bounded_pareto(rng, alpha, min_output, max_output, n_requests)
+    which = rng.integers(0, len(scen), n_requests)
+    out = []
+    for i in range(n_requests):
+        s = scen[which[i]]
+        p = int(np.clip(round(plen[i] * s.prompt_scale),
+                        min_prompt, max_prompt))
+        o = int(np.clip(round(olen[i] * s.output_scale),
+                        min_output, max_output))
+        prompt = tuple(int(t) for t in rng.integers(0, vocab, p))
+        out.append(Arrival(arrival_tick=int(ticks[i]), prompt=prompt,
+                           max_new=o, scenario=s.name))
+    return tuple(out)
+
+
+def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000
+          ) -> tuple[list, float]:
+    """The open-loop host loop: submit each arrival once the engine's
+    virtual clock reaches its tick, step macro-cycles continuously
+    (fast-forwarding idle stretches with :meth:`advance_idle` so the clock
+    never stalls), and retire the last in-flight dispatch at the end.
+    Returns (per-cycle ready-queue-depth samples, wall seconds). Latency
+    stamps land on the engine's request objects."""
+    pending = deque(arrivals)
+    qdepth: list[int] = []
+    t0 = time.perf_counter()
+    while pending or eng.pending_work() or eng.has_inflight:
+        while pending and pending[0].arrival_tick <= eng.vclock:
+            a = pending.popleft()
+            eng.submit(list(a.prompt), a.max_new, arrival_tick=a.arrival_tick)
+        if not eng.pending_work():
+            if pending:
+                # idle until the next scheduled arrival — the virtual
+                # clock keeps ticking, the engine does not spin
+                eng.advance_idle(max(int(pending[0].arrival_tick)
+                                     - eng.vclock, 1))
+                continue
+            eng.flush()
+            continue
+        eng.step()
+        qdepth.append(eng.admission.ready_depth(eng.vclock))
+        if eng.cycles >= max_cycles:
+            break
+    eng.flush()
+    return qdepth, time.perf_counter() - t0
+
+
+def write_trace(path: str, arrivals: Sequence[Arrival]) -> None:
+    """Persist a schedule as JSONL — one ``{"arrival", "prompt", "max_new",
+    "scenario"}`` object per line — the replayable inverse of
+    :func:`trace_arrivals`."""
+    with open(path, "w") as f:
+        for a in arrivals:
+            f.write(json.dumps({"arrival": a.arrival_tick,
+                                "prompt": list(a.prompt),
+                                "max_new": a.max_new,
+                                "scenario": a.scenario}) + "\n")
+
+
+def trace_arrivals(path: str, *, vocab: int, seed: int = 0
+                   ) -> tuple[Arrival, ...]:
+    """Replay a JSONL trace. Each line needs ``arrival`` and ``max_new``
+    plus EITHER ``prompt`` (explicit token ids) or ``prompt_len`` (ids
+    filled deterministically from ``seed``). Lines must be sorted by
+    arrival; malformed lines raise with their line number."""
+    rng = np.random.default_rng(seed)
+    out: list[Arrival] = []
+    last = None
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+                tick = int(rec["arrival"])
+                max_new = int(rec["max_new"])
+                if "prompt" in rec:
+                    prompt = tuple(int(t) for t in rec["prompt"])
+                else:
+                    prompt = tuple(
+                        int(t) for t in
+                        rng.integers(0, vocab, int(rec["prompt_len"])))
+            except (KeyError, TypeError, ValueError) as e:
+                raise ValueError(f"{path}:{ln}: bad trace line: {e}") from e
+            if not prompt:
+                raise ValueError(f"{path}:{ln}: empty prompt")
+            if last is not None and tick < last:
+                raise ValueError(
+                    f"{path}:{ln}: arrivals must be sorted "
+                    f"({tick} after {last})")
+            last = tick
+            out.append(Arrival(arrival_tick=tick, prompt=prompt,
+                               max_new=max_new,
+                               scenario=str(rec.get("scenario", "trace"))))
+    return tuple(out)

@@ -1,0 +1,158 @@
+"""Traffic-generator contracts: seeded determinism, heavy-tail sanity,
+trace round-trips, and the open-loop == closed-loop identity property
+(hypothesis, importorskip per ROADMAP)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+from repro.serve.traffic import (Arrival, _bounded_pareto, drive,
+                                 poisson_arrivals, scenario_spread,
+                                 trace_arrivals, write_trace)
+
+VOCAB = registry.get("tinyllama-1.1b", reduced=True).vocab
+
+
+def _gen(seed, n=24, rate=0.4):
+    return poisson_arrivals(n, rate, seed=seed, vocab=VOCAB,
+                            max_prompt=40, max_output=10)
+
+
+def test_same_seed_identical_schedule():
+    a, b = _gen(7), _gen(7)
+    assert a == b          # Arrival is frozen: full bit-for-bit equality
+
+
+def test_different_seeds_differ():
+    assert _gen(1) != _gen(2)
+
+
+def test_arrivals_sorted_and_bounded():
+    arr = _gen(3, n=64)
+    ticks = [a.arrival_tick for a in arr]
+    assert ticks == sorted(ticks)
+    assert all(t >= 0 for t in ticks)
+    for a in arr:
+        assert 2 <= a.prompt_len <= 40
+        assert 1 <= a.max_new <= 10
+        assert all(0 <= t < VOCAB for t in a.prompt)
+        assert a.scenario in registry.ARCH_IDS
+
+
+def test_bounded_pareto_heavy_tail():
+    # the length distribution must be genuinely heavy-tailed: hard-bounded,
+    # mass concentrated near the lower bound (median well below the
+    # midpoint), yet right-skewed (mean above median) with the upper half
+    # of the range actually reached
+    rng = np.random.default_rng(0)
+    lo, hi = 2.0, 40.0
+    x = _bounded_pareto(rng, 1.2, lo, hi, 4000)
+    assert float(x.min()) >= lo and float(x.max()) <= hi
+    med, mean = float(np.median(x)), float(x.mean())
+    assert med < lo + 0.25 * (hi - lo)
+    assert mean > med
+    assert float(x.max()) > lo + 0.5 * (hi - lo)
+
+
+def test_scenario_spread_deterministic_and_spread():
+    s1, s2 = scenario_spread(), scenario_spread()
+    assert s1 == s2
+    assert len(s1) == len(registry.ARCH_IDS)
+    scales = sorted(s.prompt_scale for s in s1)
+    assert scales[0] == pytest.approx(0.5)
+    assert scales[-1] == pytest.approx(2.0)
+    assert len(set(scales)) >= 2
+
+
+def test_trace_round_trip(tmp_path):
+    arr = _gen(11, n=8)
+    p = tmp_path / "trace.jsonl"
+    write_trace(str(p), arr)
+    assert trace_arrivals(str(p), vocab=VOCAB) == arr
+
+
+def test_trace_prompt_len_deterministic(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text('{"arrival": 0, "prompt_len": 5, "max_new": 2}\n'
+                 '{"arrival": 3, "prompt_len": 3, "max_new": 1}\n')
+    a1 = trace_arrivals(str(p), vocab=VOCAB, seed=4)
+    a2 = trace_arrivals(str(p), vocab=VOCAB, seed=4)
+    assert a1 == a2
+    assert [x.prompt_len for x in a1] == [5, 3]
+
+
+def test_trace_errors_carry_line_numbers(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"arrival": 5, "prompt_len": 2, "max_new": 1}\n'
+                 '{"arrival": 3, "prompt_len": 2, "max_new": 1}\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:2.*sorted"):
+        trace_arrivals(str(p), vocab=VOCAB)
+    p.write_text('{"arrival": 0, "max_new": 1}\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:1"):
+        trace_arrivals(str(p), vocab=VOCAB)
+
+
+# ---------------------------------------------------------------------------
+# open-loop == closed-loop identity (the bench gate's property, in-tree)
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _tokens(eng):
+    return {r.rid: tuple(r.generated) for r in eng.finished}
+
+
+def _run_identity(served, arrivals):
+    cfg, params = served
+    n = len(arrivals)
+    kw = dict(slots=n, max_slots=n, max_len=32, seq_tile=8, chunk_tokens=8)
+    open_eng = MultiPortEngine(params, cfg, **kw)
+    drive(open_eng, arrivals)
+    closed = MultiPortEngine(params, cfg, **kw)
+    for a in arrivals:
+        closed.submit(list(a.prompt), a.max_new, arrival_tick=0)
+    closed.run()
+    assert len(open_eng.finished) == n
+    assert _tokens(open_eng) == _tokens(closed)
+
+
+def test_open_loop_matches_closed_loop_smoke(served):
+    arr = poisson_arrivals(4, 0.3, seed=5, vocab=served[0].vocab,
+                           max_prompt=12, max_output=4)
+    _run_identity(served, arr)
+
+
+def test_open_loop_admission_reproduces_closed_loop(served):
+    """Property (CI installs the ``dev`` extra; skips locally): arrival
+    timing decides WHEN work happens, never WHAT is generated — with one
+    slot per request, open-loop admission of ANY schedule yields exactly
+    the closed-loop token output."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=5, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(st.lists(
+        st.tuples(st.integers(0, 9),       # arrival gap (ticks)
+                  st.integers(1, 10),      # prompt length
+                  st.integers(1, 4)),      # max_new
+        min_size=1, max_size=4))
+    def prop(spec):
+        rng = np.random.default_rng(0)
+        tick, arrivals = 0, []
+        for gap, plen, max_new in spec:
+            tick += gap
+            arrivals.append(Arrival(
+                arrival_tick=tick,
+                prompt=tuple(int(t) for t in
+                             rng.integers(0, served[0].vocab, plen)),
+                max_new=max_new))
+        _run_identity(served, tuple(arrivals))
+
+    prop()
