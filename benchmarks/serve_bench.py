@@ -1,4 +1,4 @@
-"""Open-loop serving bench: latency SLOs under real traffic (bench-serve/v1).
+"""Open-loop serving bench: latency SLOs under real traffic (bench-serve/v2).
 
 Every other bench in this repo is CLOSED-loop — all requests submitted up
 front, ratio gates on traversals/tiles/traces. This one drives the engine
@@ -39,10 +39,36 @@ differentiates the schedulers: ``static`` misses the p99-TTFT SLO, or
 identity (open vs closed loop, and per-request ooo vs static) is part of
 the gate; ``BENCH_serve.json`` is written before the gate exits so the
 record uploads on failures too.
+
+**Overload section (v2, ``--overload-sweep``)**: a SUSTAINED
+above-saturation arrival-rate sweep — requests scale with rate so
+arrivals cover the same virtual-tick window at every rate and the
+backlog never drains — comparing a PROTECTED engine (admission TTL,
+bounded queue, graceful-degradation controller — the overload-safe
+serving layer) against a no-shedding BASELINE on the same schedules.
+Goodput counts only tokens from requests whose TTFT met the overload
+SLO. The gate asserts
+the protected engine's goodput stays within ``--overload-band`` (default
+20%) of the pre-overload plateau at EVERY overload rate while the
+baseline degrades past the band at the deepest rate; that shed requests
+never touched the engine (no admit stamp, no slot, no tokens, no pool
+pages); and that every survivor's tokens are identical to the
+pressure-free run — load shedding changes WHO gets served, never WHAT is
+generated.
+
+**Chaos section (v2, ``--chaos-seed``)**: a seeded
+:class:`~repro.serve.chaos.FaultPlan` (capacity squeezes, mid-stream
+cancels, delayed retirement) injected into a driven engine via
+:class:`~repro.serve.chaos.ChaosHarness`, with the pool/engine invariant
+audit after every fault — a violation is a hard exit — and survivor
+tokens (not shed, not cancelled) gated identical to the fault-free run.
+``--chaos-only`` runs just this section (the CI ``chaos`` invocation,
+writing ``BENCH_chaos.json``).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from collections import Counter
@@ -52,6 +78,8 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import init_params
+from repro.serve.admission import OverloadController
+from repro.serve.chaos import ChaosHarness, FaultPlan, InvariantViolation
 from repro.serve.engine import MultiPortEngine
 from repro.serve.traffic import drive, poisson_arrivals, trace_arrivals
 
@@ -65,6 +93,30 @@ MAX_PROMPT = 40
 MAX_OUTPUT = 10
 
 SCHEDULE_MODES = ("ooo", "static")
+
+# overload sweep geometry: the plateau rate sits below the 4-slot
+# engine's saturation knee (~1.3 req/tick on this workload); the sweep
+# rates are 3x and 6x it. Arrivals SUSTAIN for OVERLOAD_DURATION virtual
+# ticks at every rate (requests = rate * duration) — a fixed request
+# COUNT would turn the deep rates into a finite burst the baseline can
+# drain after arrivals stop, compressing its wall-clock enough to hide
+# the SLO misses from the goodput-per-tick metric. The protected
+# engine's admission TTL bounds queue WAIT; the goodput SLO adds service
+# grace on top (a request admitted right at its deadline still needs
+# prefill cycles)
+OVERLOAD_PLATEAU_RATE = 1.0
+OVERLOAD_RATES = (3.0, 6.0)
+OVERLOAD_DURATION = 24.0
+OVERLOAD_TTL = 8.0
+OVERLOAD_SLO_TTFT = 12.0
+OVERLOAD_QUEUE_DEPTH = 8
+
+# chaos section geometry: enough contention that cancels hit live slots
+# and squeezes actually park admissions (the engine's 32-page pool)
+CHAOS_REQUESTS = 20
+CHAOS_RATE = 0.8
+CHAOS_FAULTS = 6
+CHAOS_MAX_SQUEEZE = 16
 
 
 def _setup():
@@ -177,6 +229,191 @@ def run_identity(params, cfg, arrivals) -> dict:
     }
 
 
+def _shed_untouched(eng) -> bool:
+    """True iff every shed request never consumed engine resources: no
+    admit stamp, no slot, no generated token, no pool pages — the "shed
+    work is free work" contract the overload gate enforces."""
+    return all(r.admit_tick is None and r.slot is None
+               and not r.generated and r.rid not in eng.pool.tables
+               for r in eng.shed)
+
+
+def _overload_engine(params, cfg, protected: bool) -> MultiPortEngine:
+    kw = dict(slots=SLOTS, max_slots=SLOTS, max_len=S_MAX,
+              seq_tile=SEQ_TILE, chunk_tokens=CHUNK_TOKENS)
+    if protected:
+        kw.update(default_ttl_ticks=OVERLOAD_TTL,
+                  max_queue_depth=OVERLOAD_QUEUE_DEPTH,
+                  overload=OverloadController())
+    return MultiPortEngine(params, cfg, **kw)
+
+
+def _overload_run(params, cfg, arrivals, protected: bool) -> tuple:
+    eng = _overload_engine(params, cfg, protected)
+    res = drive(eng, arrivals)
+    s = summarize(eng, res.qdepth, res.wall, slo_ttft=OVERLOAD_SLO_TTFT)
+    ov = eng.overload
+    s.update({
+        "protected": protected,
+        "submitted": res.submitted,
+        "shed": res.shed,
+        "shed_deadline": res.shed_deadline,
+        "shed_queue_full": res.shed_queue_full,
+        "shed_capacity": res.shed_capacity,
+        "capacity_recoveries": res.capacity_recoveries,
+        "capacity_parked_cycles": eng.capacity_parked_cycles,
+        "shed_untouched": _shed_untouched(eng),
+        "degraded_cycles": ov.degraded_cycles if ov else 0,
+        "overload_transitions": list(ov.transitions) if ov else [],
+    })
+    return s, _tokens_by_index(eng.finished)
+
+
+def run_overload(params, cfg, seed: int, band: float) -> dict:
+    """The above-saturation sweep: one pressure-free plateau run, then at
+    each overload rate a PROTECTED run (TTL + bounded queue + degradation
+    controller) and a no-shedding BASELINE run of the same schedule.
+
+    All runs draw from ONE master arrival list (generated at rate 1.0),
+    truncated to ``rate * OVERLOAD_DURATION`` requests and re-stamped at
+    the run's rate — so request index i carries the SAME prompt in every
+    run and rids align across the whole sweep. The deepest-rate baseline,
+    which sheds nothing and therefore serves every master request, is the
+    token reference: every survivor in every run (including the
+    pressure-free plateau, which anchors the reference transitively) must
+    generate exactly its reference tokens."""
+    n_max = max(1, round(max(OVERLOAD_RATES) * OVERLOAD_DURATION))
+    master = poisson_arrivals(
+        n_max, 1.0, seed=seed, vocab=cfg.vocab,
+        max_prompt=MAX_PROMPT, max_output=MAX_OUTPUT)
+
+    def _arr(rate):
+        # dividing the rate-1.0 Poisson ticks by `rate` is a Poisson
+        # process at `rate` over the same ~OVERLOAD_DURATION window
+        n = max(1, round(rate * OVERLOAD_DURATION))
+        return tuple(dataclasses.replace(
+            a, arrival_tick=int(a.arrival_tick / rate))
+            for a in master[:n])
+
+    plateau, plateau_toks = _overload_run(params, cfg,
+                                          _arr(OVERLOAD_PLATEAU_RATE), True)
+    plateau_goodput = plateau["goodput_tokens_per_tick"]
+    sweep = []
+    run_toks = [plateau_toks]
+    untouched_ok = plateau["shed_untouched"]
+    ref_tokens = None
+    for rate in OVERLOAD_RATES:
+        arrivals = _arr(rate)
+        for protected in (True, False):
+            s, toks = _overload_run(params, cfg, arrivals, protected)
+            s["rate"] = rate
+            s["goodput_vs_plateau"] = (s["goodput_tokens_per_tick"]
+                                       / max(plateau_goodput, 1e-9))
+            untouched_ok = untouched_ok and s["shed_untouched"]
+            sweep.append(s)
+            run_toks.append(toks)
+            if not protected and rate == max(OVERLOAD_RATES):
+                ref_tokens = toks
+    survivors_ok = (
+        len(ref_tokens) == n_max      # the reference covers every rid
+        and plateau["requests_finished"] == len(_arr(OVERLOAD_PLATEAU_RATE))
+        and all(toks[rid] == ref_tokens[rid]
+                for toks in run_toks for rid in toks))
+    prot = [s for s in sweep if s["protected"]]
+    base = [s for s in sweep if not s["protected"]]
+    deepest = max(base, key=lambda s: s["rate"])
+    return {
+        "plateau_rate": OVERLOAD_PLATEAU_RATE,
+        "rates": list(OVERLOAD_RATES),
+        "duration_ticks": OVERLOAD_DURATION,
+        "requests_per_rate": {str(r): max(1, round(r * OVERLOAD_DURATION))
+                              for r in (OVERLOAD_PLATEAU_RATE,
+                                        *OVERLOAD_RATES)},
+        "ttl_ticks": OVERLOAD_TTL,
+        "slo_ttft": OVERLOAD_SLO_TTFT,
+        "max_queue_depth": OVERLOAD_QUEUE_DEPTH,
+        "band": band,
+        "plateau": plateau,
+        "sweep": sweep,
+        "gate": {
+            "plateau_goodput": plateau_goodput,
+            "protected_min_vs_plateau": min(
+                s["goodput_vs_plateau"] for s in prot),
+            "baseline_deepest_vs_plateau": deepest["goodput_vs_plateau"],
+            "protected_within_band": all(
+                s["goodput_vs_plateau"] >= 1.0 - band for s in prot),
+            "baseline_degrades": (
+                deepest["goodput_vs_plateau"] < 1.0 - band),
+            "shed_untouched": untouched_ok,
+            "survivor_tokens_match": survivors_ok,
+        },
+    }
+
+
+def run_chaos(params, cfg, chaos_seed: int, arrival_seed: int) -> dict:
+    """The fault-injection section: drive the same seeded schedule twice
+    — fault-free, then under a generated :class:`FaultPlan` — auditing
+    the engine/pool invariants after every injection and comparing
+    survivor tokens (neither shed nor cancelled) against the fault-free
+    run. An :class:`InvariantViolation` is recorded and fails the gate;
+    it never silently passes."""
+    arrivals = poisson_arrivals(
+        CHAOS_REQUESTS, CHAOS_RATE, seed=arrival_seed, vocab=cfg.vocab,
+        max_prompt=MAX_PROMPT, max_output=MAX_OUTPUT)
+    kw = dict(slots=SLOTS, max_slots=SLOTS, max_len=S_MAX,
+              seq_tile=SEQ_TILE, chunk_tokens=CHUNK_TOKENS)
+    ref = MultiPortEngine(params, cfg, **kw)
+    drive(ref, arrivals)
+    ref_tokens = _tokens_by_index(ref.finished)
+
+    plan = FaultPlan.generate(chaos_seed, horizon=max(ref.vclock, 1),
+                              n_faults=CHAOS_FAULTS,
+                              max_squeeze=CHAOS_MAX_SQUEEZE)
+    eng = MultiPortEngine(params, cfg, **kw)
+    harness = ChaosHarness(plan)
+    violation = None
+    try:
+        res = drive(eng, arrivals, on_cycle=harness)
+        harness.finalize(eng)
+    except InvariantViolation as e:
+        violation = str(e)
+        res = None
+    survivors = {r.rid: tuple(r.generated) for r in eng.finished
+                 if not r.cancelled and r.shed_reason is None}
+    kinds_fired = sorted({i["kind"] for i in harness.injected
+                          if i.get("rid", "") is not None})
+    return {
+        "chaos_seed": chaos_seed,
+        "arrival_seed": arrival_seed,
+        "requests": CHAOS_REQUESTS,
+        "rate": CHAOS_RATE,
+        "plan": [{"tick": f.tick, "kind": f.kind,
+                  "magnitude": f.magnitude, "duration": f.duration}
+                 for f in plan.faults],
+        "injected": harness.injected,
+        "invariant_checks": harness.invariant_checks,
+        "invariant_violation": violation,
+        "straggler_events": harness.straggler_events,
+        "cancelled": eng.cancelled,
+        "shed": len(eng.shed),
+        "shed_capacity": eng.shed_capacity,
+        "capacity_recoveries": eng.capacity_recoveries,
+        "fault_free_finished": len(ref.finished),
+        "chaos_finished": res.served if res is not None else None,
+        "survivors": len(survivors),
+        "kinds_fired": kinds_fired,
+        "gate": {
+            "invariants_ok": violation is None,
+            "survivor_tokens_match": all(
+                survivors[rid] == ref_tokens.get(rid)
+                for rid in survivors),
+            "all_kinds_injected": all(
+                any(i["kind"] == k for i in harness.injected)
+                for k in ("squeeze", "cancel", "stall")),
+        },
+    }
+
+
 def arrival_stats(arrivals) -> dict:
     plens = [a.prompt_len for a in arrivals]
     olens = [a.max_new for a in arrivals]
@@ -231,6 +468,48 @@ def report(modes: dict, ident: dict, ast: dict, wall_clock: bool) -> None:
           f"{ident['open_vs_closed_tokens_match']}")
 
 
+def report_overload(ov: dict) -> None:
+    print()
+    print("# overload sweep: goodput (SLO-met tokens/tick, "
+          f"TTFT<={ov['slo_ttft']:.0f}) vs the pre-overload plateau "
+          f"(rate {ov['plateau_rate']}, "
+          f"goodput {ov['gate']['plateau_goodput']:.3f})")
+    print("rate,engine,served,shed(ddl/qfull/cap),goodput,vs_plateau,"
+          "degraded_cycles,ticks")
+    for s in ov["sweep"]:
+        eng = "protected" if s["protected"] else "baseline"
+        print(f"{s['rate']},{eng},{s['requests_finished']},"
+              f"{s['shed']}({s['shed_deadline']}/{s['shed_queue_full']}/"
+              f"{s['shed_capacity']}),"
+              f"{s['goodput_tokens_per_tick']:.3f},"
+              f"{s['goodput_vs_plateau']:.2f},{s['degraded_cycles']},"
+              f"{s['total_ticks']}")
+    g = ov["gate"]
+    print(f"protected_within_band,{g['protected_within_band']},"
+          f"baseline_degrades,{g['baseline_degrades']},"
+          f"shed_untouched,{g['shed_untouched']},"
+          f"survivor_tokens_match,{g['survivor_tokens_match']}")
+
+
+def report_chaos(ch: dict) -> None:
+    print()
+    print(f"# chaos: seeded fault injection (seed {ch['chaos_seed']}, "
+          f"{len(ch['plan'])} faults) with invariant audit")
+    for i in ch["injected"]:
+        print(f"tick {i['tick']},{i['kind']},"
+              + ",".join(f"{k}={v}" for k, v in i.items()
+                         if k not in ("tick", "kind")))
+    g = ch["gate"]
+    print(f"invariant_checks,{ch['invariant_checks']},violations,"
+          f"{ch['invariant_violation'] or 'none'}")
+    print(f"survivors,{ch['survivors']}/{ch['fault_free_finished']},"
+          f"cancelled,{ch['cancelled']},shed,{ch['shed']},"
+          f"straggler_events,{ch['straggler_events']}")
+    print(f"invariants_ok,{g['invariants_ok']},survivor_tokens_match,"
+          f"{g['survivor_tokens_match']},all_kinds_injected,"
+          f"{g['all_kinds_injected']}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=14,
@@ -258,7 +537,26 @@ def main(argv=None) -> None:
                     help="SLO gate: exit non-zero if ooo's goodput "
                          "(tokens/tick from SLO-meeting requests) drops "
                          "below this")
+    ap.add_argument("--overload-sweep", action="store_true",
+                    help="run the above-saturation overload sweep "
+                         "(protected vs no-shedding baseline) and gate "
+                         "goodput against the pre-overload plateau")
+    ap.add_argument("--overload-band", type=float, default=0.2,
+                    help="overload gate band: protected goodput must stay "
+                         "within this fraction of the plateau at every "
+                         "overload rate while the baseline degrades past "
+                         "it at the deepest rate (default 0.2)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run the seeded fault-injection section "
+                         "(capacity squeezes, mid-stream cancels, delayed "
+                         "retirement) with invariant checks as hard "
+                         "failures")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run ONLY the chaos section (requires "
+                         "--chaos-seed); the CI chaos invocation")
     args = ap.parse_args(argv)
+    if args.chaos_only and args.chaos_seed is None:
+        ap.error("--chaos-only requires --chaos-seed")
 
     cfg, params = _setup()
     if args.trace:
@@ -274,11 +572,42 @@ def main(argv=None) -> None:
             args.requests, args.arrival_rate, seed=args.seed,
             vocab=cfg.vocab, max_prompt=MAX_PROMPT, max_output=MAX_OUTPUT)
 
+    chaos = (run_chaos(params, cfg, args.chaos_seed, args.seed)
+             if args.chaos_seed is not None else None)
+    if args.chaos_only:
+        report_chaos(chaos)
+        if args.json:
+            record = {"schema": "bench-serve/v2", "chaos": chaos}
+            with open(args.json, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"\nwrote {args.json}")
+        g = chaos["gate"]
+        failed = False
+        for name in ("invariants_ok", "survivor_tokens_match",
+                     "all_kinds_injected"):
+            if not g[name]:
+                print(f"GATE FAIL: chaos {name} is False"
+                      + (f" ({chaos['invariant_violation']})"
+                         if name == "invariants_ok" else ""),
+                      file=sys.stderr)
+                failed = True
+        if not failed:
+            print(f"GATE OK: {chaos['invariant_checks']} invariant audits "
+                  f"clean, {chaos['survivors']} survivors token-identical "
+                  f"to the fault-free run")
+        sys.exit(1 if failed else 0)
+
     ast = arrival_stats(arrivals)
     modes = run_modes(params, cfg, arrivals,
                       slo_ttft=args.max_p99_ttft_cycles)
     ident = run_identity(params, cfg, arrivals)
+    overload = (run_overload(params, cfg, args.seed, args.overload_band)
+                if args.overload_sweep else None)
     report(modes, ident, ast, args.wall_clock)
+    if overload is not None:
+        report_overload(overload)
+    if chaos is not None:
+        report_chaos(chaos)
 
     ooo, static = modes["ooo"], modes["static"]
     slo_differentiates = True
@@ -291,7 +620,7 @@ def main(argv=None) -> None:
 
     if args.json:
         record = {
-            "schema": "bench-serve/v1",
+            "schema": "bench-serve/v2",
             "config": {
                 "arch": "tinyllama-1.1b", "reduced": True,
                 "requests": ast["count"],
@@ -306,6 +635,8 @@ def main(argv=None) -> None:
             "arrivals": ast,
             "per_mode": {m: modes[m] for m in SCHEDULE_MODES},
             "identity": ident,
+            "overload": overload,
+            "chaos": chaos,
             "gate": {
                 "max_p99_ttft_cycles": args.max_p99_ttft_cycles,
                 "min_goodput": args.min_goodput,
@@ -366,6 +697,44 @@ def main(argv=None) -> None:
             print("GATE FAIL: open-loop admission with infinite slots "
                   "does not reproduce closed-loop tokens", file=sys.stderr)
             failed = True
+    if overload is not None:
+        g = overload["gate"]
+        if not g["protected_within_band"]:
+            print(f"GATE FAIL: protected goodput fell to "
+                  f"{g['protected_min_vs_plateau']:.2f}x of the plateau "
+                  f"(band: >= {1.0 - args.overload_band:.2f}x)",
+                  file=sys.stderr)
+            failed = True
+        if not g["baseline_degrades"]:
+            print(f"GATE FAIL: the no-shedding baseline held "
+                  f"{g['baseline_deepest_vs_plateau']:.2f}x of the plateau "
+                  f"at the deepest rate — the sweep is not actually "
+                  f"above saturation", file=sys.stderr)
+            failed = True
+        if not g["shed_untouched"]:
+            print("GATE FAIL: a shed request consumed engine resources "
+                  "(admit stamp, slot, tokens, or pool pages)",
+                  file=sys.stderr)
+            failed = True
+        if not g["survivor_tokens_match"]:
+            print("GATE FAIL: a surviving request's tokens differ from "
+                  "the pressure-free run", file=sys.stderr)
+            failed = True
+        if not failed:
+            print(f"GATE OK: protected goodput >= "
+                  f"{g['protected_min_vs_plateau']:.2f}x plateau at every "
+                  f"overload rate; baseline fell to "
+                  f"{g['baseline_deepest_vs_plateau']:.2f}x; sheds "
+                  f"untouched; survivors token-identical")
+    if chaos is not None:
+        for name in ("invariants_ok", "survivor_tokens_match",
+                     "all_kinds_injected"):
+            if not chaos["gate"][name]:
+                print(f"GATE FAIL: chaos {name} is False"
+                      + (f" ({chaos['invariant_violation']})"
+                         if name == "invariants_ok" else ""),
+                      file=sys.stderr)
+                failed = True
     if failed:
         sys.exit(1)
 

@@ -93,6 +93,22 @@ def main() -> None:
                     help="p99-TTFT SLO in virtual-clock ticks: print "
                          "attainment (fraction of requests whose TTFT met "
                          "it) with the open-loop latency summary")
+    ap.add_argument("--deadline", type=float, default=None, metavar="TICKS",
+                    help="admission TTL in virtual ticks: a request still "
+                         "queued past arrival+TTL is SHED (head-only, "
+                         "counted) instead of admitted — overload-safe "
+                         "serving's deadline stage")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="bound the admission queue: submissions beyond "
+                         "this depth are rejected immediately "
+                         "(shed_reason='queue_full') rather than queued "
+                         "into unbounded delay")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="open-loop only: inject a seeded FaultPlan "
+                         "(capacity squeezes, mid-stream cancels, delayed "
+                         "retirement) through serve.chaos.ChaosHarness "
+                         "with engine/pool invariant audits after every "
+                         "fault")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.trace and args.arrival_rate is not None:
@@ -140,8 +156,13 @@ def main() -> None:
                           interpret=not args.no_interpret,
                           mesh=mesh,
                           schedule_mode=args.schedule_mode,
-                          max_ports=args.max_ports)
+                          max_ports=args.max_ports,
+                          default_ttl_ticks=args.deadline,
+                          max_queue_depth=args.max_queue_depth)
     open_loop = args.trace is not None or args.arrival_rate is not None
+    if args.chaos_seed is not None and not open_loop:
+        raise SystemExit("--chaos-seed needs open-loop mode "
+                         "(--arrival-rate or --trace)")
     if open_loop:
         if args.trace:
             arrivals = traffic.trace_arrivals(args.trace, vocab=cfg.vocab,
@@ -160,8 +181,16 @@ def main() -> None:
         print(f"open-loop: {len(arrivals)} arrivals over ticks "
               f"[{arrivals[0].arrival_tick}, {arrivals[-1].arrival_tick}]"
               if arrivals else "open-loop: empty schedule")
+        harness = None
+        if args.chaos_seed is not None:
+            from repro.serve.chaos import ChaosHarness, FaultPlan
+            horizon = (arrivals[-1].arrival_tick + 1) if arrivals else 1
+            harness = ChaosHarness(
+                FaultPlan.generate(args.chaos_seed, horizon=horizon))
         t0 = time.perf_counter()
-        traffic.drive(eng, arrivals)
+        traffic.drive(eng, arrivals, on_cycle=harness)
+        if harness is not None:
+            harness.finalize(eng)
         dt = time.perf_counter() - t0
         done = eng.finished
     else:
@@ -220,6 +249,19 @@ def main() -> None:
               f"slot-contention cycles {eng.slot_contention_cycles}, "
               f"evict-pressure admissions {eng.evict_pressure_admissions}, "
               f"total ticks {eng.vclock}")
+        if eng.shed or eng.cancelled or eng.capacity_parked_cycles:
+            print(f"overload: shed {len(eng.shed)} "
+                  f"(deadline {eng.shed_deadline}, queue_full "
+                  f"{eng.shed_queue_full}, capacity {eng.shed_capacity}), "
+                  f"capacity parked/recovered "
+                  f"{eng.capacity_parked_cycles}/{eng.capacity_recoveries}, "
+                  f"cancelled {eng.cancelled}")
+        if harness is not None:
+            print(f"chaos [seed {args.chaos_seed}]: "
+                  f"{len(harness.injected)} actions, "
+                  f"{harness.invariant_checks} invariant audits clean, "
+                  f"stalled retirements {eng.stalled_retirements}, "
+                  f"straggler events {harness.straggler_events}")
         if args.slo is not None and ttft.size:
             met = int((ttft <= args.slo).sum())
             print(f"SLO (p99 TTFT <= {args.slo:g} ticks): "

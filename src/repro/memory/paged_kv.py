@@ -204,6 +204,9 @@ class PagedPool:
     mix_counts: dict = dataclasses.field(default_factory=dict)
                                        # PortConfig.describe() -> traversals
                                        # serviced with that port mix
+    quarantine_by_shard: list = dataclasses.field(default_factory=list)
+                                       # shard -> pages withheld from
+                                       # allocation by a chaos squeeze
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
@@ -260,7 +263,8 @@ class PagedPool:
                    seq_tile=seq_tile or page_tokens,
                    tile_reads_by_shard=[0] * kv_shards,
                    tile_writes_by_shard=[0] * kv_shards,
-                   io_width=word_width)
+                   io_width=word_width,
+                   quarantine_by_shard=[[] for _ in range(kv_shards)])
 
     # ---- shard geometry ------------------------------------------------------
     @property
@@ -279,6 +283,50 @@ class PagedPool:
     @property
     def free_page_count(self) -> int:
         return sum(len(fl) for fl in self.free_by_shard)
+
+    @property
+    def quarantined_pages(self) -> tuple:
+        """Pages withheld from allocation by a fault-injection squeeze
+        (sorted; empty outside chaos runs)."""
+        return tuple(sorted(p for q in self.quarantine_by_shard for p in q))
+
+    def quarantine(self, n_per_shard: int,
+                   keep_free: Optional[Sequence[int]] = None) -> list:
+        """Fault injection: withhold up to ``n_per_shard`` FREE pages per
+        shard from allocation (an admission-time capacity squeeze — the
+        chaos harness's knob). Only free pages are taken, and a
+        ``keep_free`` floor (per shard) protects pages the engine has
+        conservatively reserved for in-flight sequences' worst-case
+        growth, so a squeeze pressures ADMISSION — parked/retried/shed at
+        the queue — without ever making an already-admitted sequence's
+        append fail mid-stream. Returns the page ids actually taken;
+        :meth:`release_quarantine` gives them back."""
+        if n_per_shard < 0:
+            raise ValueError(f"n_per_shard must be >= 0, got {n_per_shard}")
+        keep = list(keep_free) if keep_free is not None \
+            else [0] * self.kv_shards
+        if len(keep) != self.kv_shards:
+            raise ValueError(
+                f"keep_free has {len(keep)} entries for {self.kv_shards} "
+                f"shards")
+        taken = []
+        for s, fl in enumerate(self.free_by_shard):
+            n = min(n_per_shard, max(0, len(fl) - keep[s]))
+            for _ in range(n):
+                p = fl.pop()
+                self.quarantine_by_shard[s].append(p)
+                taken.append(p)
+        return taken
+
+    def release_quarantine(self) -> list:
+        """Return every quarantined page to its owning shard's free list
+        (the squeeze's scheduled end). Returns the released page ids."""
+        released = []
+        for s, q in enumerate(self.quarantine_by_shard):
+            self.free_by_shard[s].extend(q)
+            released.extend(q)
+            q.clear()
+        return released
 
     def home_of(self, seq: int) -> Optional[int]:
         """The shard a sequence's pages live on (None before admission)."""
@@ -308,6 +356,47 @@ class PagedPool:
         shard = self._pick_home(self._home_loads(),
                                 [len(fl) for fl in self.free_by_shard])
         self.home[seq] = shard
+        return shard
+
+    def peek_home(self, seq: int) -> int:
+        """The shard :meth:`assign_home` WOULD pick (or has picked) for a
+        sequence, without committing anything — the admission precheck's
+        view."""
+        got = self.home.get(seq)
+        if got is not None:
+            return got
+        return self._pick_home(self._home_loads(),
+                               [len(fl) for fl in self.free_by_shard])
+
+    def admission_precheck(self, seq: int, total_tokens: int,
+                           reserved_by_shard: Optional[Sequence[int]] = None
+                           ) -> int:
+        """Raise :class:`PoolCapacityError` unless a sequence's WORST-CASE
+        page demand (``total_tokens`` words over its whole lifetime) fits
+        its home shard's free list right now, minus ``reserved_by_shard``
+        pages the caller has already promised to other in-flight
+        sequences. Non-mutating — no home assignment, no page pops — so
+        the engine can probe at admission time, PARK the request on
+        failure, and retry after evictions free pages (the recovery path
+        that replaces an uncatchable mid-cycle capacity failure). Returns
+        the home shard the probe validated against."""
+        shard = self.peek_home(seq)
+        held = len(self.tables.get(seq, []))
+        need = max(0, -(-(self.lengths.get(seq, 0) + total_tokens)
+                        // self.page_tokens) - held)
+        reserved = reserved_by_shard[shard] if reserved_by_shard is not None \
+            else 0
+        avail = len(self.free_by_shard[shard]) - reserved
+        if need > avail:
+            quarantined = len(self.quarantine_by_shard[shard])
+            raise PoolCapacityError(
+                f"admission precheck: seq {seq} needs {need} pages on home "
+                f"shard {shard} for its worst-case {total_tokens} tokens but "
+                f"only {max(avail, 0)} of the shard's "
+                f"{len(self.free_by_shard[shard])} free pages are "
+                f"unreserved ({reserved} reserved for in-flight sequences, "
+                f"{quarantined} quarantined) — park and retry after "
+                f"evictions, or shed")
         return shard
 
     def _tile_shard(self, tile: int) -> int:

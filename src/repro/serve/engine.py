@@ -147,10 +147,11 @@ from repro.core.clockgen import build_schedule
 from repro.core.ports import MAX_PORTS, READ, WRITE, PortConfig
 from repro.kernels.tiling import fit_seq_tile
 from repro.memory.paged_kv import (APPEND, ATTN_READ, BULK_FILL, SCRUB,
-                                   PagedPool, _bucket, seq_tile_buckets)
+                                   PagedPool, PoolCapacityError, _bucket,
+                                   seq_tile_buckets)
 from repro.models import decode_step, prefill_chunk
 from repro.serve import scheduler as sched_mod
-from repro.serve.admission import AdmissionQueue
+from repro.serve.admission import AdmissionQueue, OverloadController
 from repro.serve.scheduler import PhaseTxn, PortTxn
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
@@ -183,6 +184,17 @@ class Request:
     # opt-in column — never the deterministic gate)
     arrival_tick: float = 0.0
     arrival_cycle: int = 0
+    # overload-safety state: an optional absolute admission deadline
+    # (arrival + TTL, virtual ticks — expired heads are shed, never
+    # admitted), why/when the request was shed (None = served), how many
+    # cycles it was parked retrying a full home shard, and whether a chaos
+    # fault cancelled it mid-stream (cancelled/shed requests are excluded
+    # from the survivor token-identity checks)
+    deadline_tick: Optional[float] = None
+    shed_reason: Optional[str] = None
+    shed_tick: Optional[int] = None
+    capacity_retries: int = 0
+    cancelled: bool = False
     admit_tick: Optional[int] = None
     admit_cycle: Optional[int] = None
     first_token_tick: Optional[int] = None
@@ -238,6 +250,13 @@ class _InFlight:
     lens: np.ndarray               # per-row pre-append cache lengths
     state: dict                    # un-forced jit outputs (cache_k/cache_v)
     logits: object                 # un-forced next-token logits
+    rids: dict = dataclasses.field(default_factory=dict)
+                                   # slot -> rid at dispatch time: retirement
+                                   # skips rows whose slot was reassigned
+                                   # while the dispatch was outstanding
+                                   # (possible when a chaos stall lets
+                                   # evict/admit run between dispatch and
+                                   # retire)
 
 
 class _DoubleBuffer:
@@ -271,7 +290,11 @@ class MultiPortEngine:
                  seq_tile: int = 128, length_bound: bool = True,
                  dynamic_grid: bool = True, interpret: bool = True,
                  mesh=None, kv_axis: str = "kv",
-                 schedule_mode: str = "ooo", max_ports: int = MAX_PORTS):
+                 schedule_mode: str = "ooo", max_ports: int = MAX_PORTS,
+                 max_queue_depth: Optional[int] = None,
+                 default_ttl_ticks: Optional[float] = None,
+                 capacity_retry_limit: int = 16,
+                 overload: Optional[OverloadController] = None):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
@@ -361,8 +384,33 @@ class MultiPortEngine:
         self._pending: dict[int, np.ndarray] = {}   # slot -> KV word to append
         self._prefilling: dict[int, _PrefillState] = {}
         # host-side admission: arrival-ordered FIFO, decoupled from the
-        # device macro-cycle (see serve/admission.py)
-        self.admission = AdmissionQueue()
+        # device macro-cycle (see serve/admission.py); bounded when the
+        # caller sets max_queue_depth (overload safety: explicit rejection
+        # beats unbounded queue delay)
+        self.admission = AdmissionQueue(max_depth=max_queue_depth)
+        # overload-safe serving state: the default admission TTL stamped on
+        # submissions (deadline = arrival + TTL, virtual ticks), the
+        # capacity-retry budget for a head parked on a full home shard, the
+        # optional graceful-degradation controller, and the shed record
+        if capacity_retry_limit < 1:
+            raise ValueError(
+                f"capacity_retry_limit must be >= 1, got "
+                f"{capacity_retry_limit}")
+        self.default_ttl_ticks = default_ttl_ticks
+        self.capacity_retry_limit = capacity_retry_limit
+        self.overload = overload
+        self.shed: list[Request] = []       # all shed requests, any reason
+        self.shed_deadline = 0              # expired before admission
+        self.shed_queue_full = 0            # rejected by the bounded queue
+        self.shed_capacity = 0              # capacity-retry budget exhausted
+        self.capacity_parked_cycles = 0     # cycles a head waited on pages
+        self.capacity_recoveries = 0        # parked heads later admitted
+        self.cancelled = 0                  # chaos mid-stream cancellations
+        # chaos delayed-retirement state: cycles the in-flight decode must
+        # stay unretired (the host keeps admitting/prefilling/evicting but
+        # cannot dispatch new decode work until the stall drains)
+        self.retire_stall_cycles = 0
+        self.stalled_retirements = 0
         self.finished: list[Request] = []
         self.cycles = 0
         # virtual clock: pool traversals + idle macro-cycles (1 tick each);
@@ -468,12 +516,20 @@ class MultiPortEngine:
         return len(self.slot_req)
 
     def submit(self, prompt: list[int], max_new: int = 16,
-               arrival_tick: Optional[float] = None) -> Request:
+               arrival_tick: Optional[float] = None,
+               ttl_ticks: Optional[float] = None) -> Request:
         """Enqueue a request and return it (latency stamps land on the
         returned object as the request moves through admission/serving).
         ``arrival_tick`` is its open-loop arrival time on the virtual
         clock; omitted (closed loop) it arrives NOW, so it is immediately
-        admissible — the pre-harness behavior."""
+        admissible — the pre-harness behavior. ``ttl_ticks`` (default: the
+        engine's ``default_ttl_ticks``) sets an admission deadline of
+        ``arrival + ttl`` on the virtual clock: a request whose deadline
+        passes while it is still queued is SHED, never admitted. When a
+        ``max_queue_depth`` bound is set and the queue is full, the
+        request is shed immediately (``shed_reason == "queue_full"``) —
+        callers must check ``req.shed_reason`` rather than assume
+        enqueue."""
         if len(prompt) + max_new > self.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
@@ -487,8 +543,58 @@ class MultiPortEngine:
             arrival_tick=(self.vclock if arrival_tick is None
                           else arrival_tick),
             arrival_cycle=self.cycles, t_submit=time.perf_counter())
-        self.admission.push(req)
+        ttl = self.default_ttl_ticks if ttl_ticks is None else ttl_ticks
+        if ttl is not None:
+            if ttl <= 0:
+                raise ValueError(f"ttl_ticks must be > 0, got {ttl}")
+            req.deadline_tick = req.arrival_tick + ttl
+        if not self.admission.push(req):
+            self._shed(req, "queue_full")
         return req
+
+    def _shed(self, req: Request, reason: str) -> None:
+        """Record a load-shedding decision: stamp the request with why and
+        when (virtual tick) it was dropped and bump the per-reason
+        counter. Shed requests never occupy a slot, a page, or a pool
+        traversal past this point."""
+        req.shed_reason = reason
+        req.shed_tick = self.vclock
+        self.shed.append(req)
+        if reason == "deadline":
+            self.shed_deadline += 1
+        elif reason == "queue_full":
+            self.shed_queue_full += 1
+        elif reason == "capacity":
+            self.shed_capacity += 1
+        else:
+            raise ValueError(f"unknown shed reason: {reason!r}")
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request mid-stream: mark it done so the next EVICT
+        phase frees its slot and scrubs its pages through the pool's
+        normal port-D path (no bespoke teardown — cancellation IS an
+        eviction). The request lands in ``finished`` flagged
+        ``cancelled=True`` so token-identity checks exclude it. Returns
+        False when ``rid`` is not live in a slot (already finished,
+        queued, or unknown)."""
+        for r in self.slot_req:
+            if r is not None and r.rid == rid and not r.done:
+                r.cancelled = True
+                r.done = True
+                self.cancelled += 1
+                return True
+        return False
+
+    def stall_retirement(self, cycles: int) -> None:
+        """Chaos hook: delay retirement of the async-dispatched decode by
+        ``cycles`` macro-cycles. While stalled the engine keeps evicting,
+        admitting and prefilling, but the in-flight decode is neither
+        forced nor is new decode work dispatched (per-slot decode compute
+        is independent, so the stall is token-identical — only WHEN
+        results are folded back moves)."""
+        if cycles < 1:
+            raise ValueError(f"cycles must be >= 1, got {cycles}")
+        self.retire_stall_cycles += cycles
 
     def pending_work(self) -> bool:
         return bool(self.admission) or any(r is not None
@@ -658,6 +764,26 @@ class MultiPortEngine:
         w = np.moveaxis(w, 2, 0)                              # [T, L, 2, ...]
         return w.reshape(t1 - t0, -1)
 
+    def _reserved_pages_by_shard(self) -> list[int]:
+        """Worst-case pages every LIVE slot may still carve from its home
+        shard: a request commits at most ``len(prompt) + max_new - 1``
+        words (the final token's KV never lands — eviction precedes its
+        append), so its outstanding claim is that ceiling minus the pages
+        it already holds. The admission precheck (and the chaos harness's
+        quarantine floor) subtracts these reservations from the free
+        lists, so admitting a new request — or quarantining pages — can
+        never strand a request that was already admitted."""
+        reserved = [0] * self.n_kv_shards
+        pt = self.pool.page_tokens
+        for r in self.slot_req:
+            if r is None:
+                continue
+            worst = len(r.prompt) + r.max_new - 1
+            held = len(self.pool.tables.get(r.rid, ()))
+            need = max(0, -(-worst // pt) - held)
+            reserved[self.pool.assign_home(r.rid)] += need
+        return reserved
+
     def _collect_prefill(self) -> list:
         """Port B: admit queued requests into free (or newly grown) slots,
         then advance EVERY mid-prefill slot by one fixed-size token chunk.
@@ -668,15 +794,48 @@ class MultiPortEngine:
         # arrival-ordered admission wave: only the QUEUE HEAD is ever
         # eligible (AdmissionQueue.pop_ready) — under slot contention a
         # freed slot goes to the oldest ready request, never a younger
-        # shorter one (FIFO; no long-prompt starvation)
+        # shorter one (FIFO; no long-prompt starvation). Overload safety
+        # wraps the same loop: a degraded controller caps admissions per
+        # cycle, and each candidate head passes the pool's capacity
+        # precheck BEFORE it is popped — a full home shard parks the head
+        # (retry next cycle, after evictions free pages) instead of
+        # raising mid-admission, and a head that exhausts its retry
+        # budget is shed.
         now = self.vclock
+        cap = self.overload.cap() if self.overload is not None else None
+        admitted_now = 0
+        reserved = None
         while self.admission.head_ready(now):
+            if cap is not None and admitted_now >= cap:
+                break
+            head = self.admission.head()
+            if reserved is None:
+                reserved = self._reserved_pages_by_shard()
+            worst = len(head.prompt) + head.max_new - 1
+            try:
+                shard = self.pool.admission_precheck(
+                    head.rid, worst, reserved_by_shard=reserved)
+            except PoolCapacityError:
+                if head.capacity_retries >= self.capacity_retry_limit:
+                    # eviction-aware backoff exhausted: shed (drop_head
+                    # keeps the admitted counter honest)
+                    self.admission.drop_head()
+                    self._shed(head, "capacity")
+                    continue
+                head.capacity_retries += 1
+                self.capacity_parked_cycles += 1
+                break       # park: this cycle's evictions already ran,
+                            # retry after the NEXT cycle frees pages
             slot = self._free_slot()
             if slot is None:
                 # a ready arrival waited this cycle on a full slot table
                 self.slot_contention_cycles += 1
                 break
             req = self.admission.pop_ready(now)
+            admitted_now += 1
+            if req.capacity_retries:
+                self.capacity_recoveries += 1
+            reserved[shard] += -(-worst // self.pool.page_tokens)
             req.slot = slot
             req.admit_cycle = self.cycles
             req.admit_tick = now
@@ -703,7 +862,11 @@ class MultiPortEngine:
         # the staging caches cover a bucketed LIVE prefix, not max_len, so
         # the chunk kernel's tile grid is bounded by the longest live prefix
         order = sorted(self._prefilling)
-        c = self.chunk_tokens
+        # a degraded overload controller shrinks the per-cycle chunk (the
+        # generated tokens are unchanged — chunked prefill is chunk-size
+        # invariant — only the per-cycle port-traffic shape moves)
+        c = (self.overload.chunk_tokens(self.chunk_tokens)
+             if self.overload is not None else self.chunk_tokens)
         if self.n_kv_shards == 1:
             nb = _bucket(len(order), lo=1)
             row_of = {s: j for j, s in enumerate(order)}
@@ -851,7 +1014,8 @@ class MultiPortEngine:
                                   {"inputs": jnp.asarray(last_tokens)})
         inflight = _InFlight(cycle=self.cycles, vclock_end=self.vclock,
                              active=list(active), row_of=row_of, lens=lens,
-                             state=st, logits=logits)
+                             state=st, logits=logits,
+                             rids={i: self.slot_req[i].rid for i in active})
         bounded = self._fused_compute and self.length_bound
         tiles, bound, per_dev = self._tiles_touched(
             [[need_of[i] for i in g] for g in groups], stage_s,
@@ -870,9 +1034,14 @@ class MultiPortEngine:
         now_wall = time.perf_counter()
         for i in inf.active:
             j = inf.row_of[i]
+            r = self.slot_req[i]
+            if r is None or r.rid != inf.rids.get(i):
+                # the slot was evicted (e.g. a chaos cancel) and possibly
+                # reassigned while this dispatch was outstanding — folding
+                # the stale row back in would corrupt the new occupant
+                continue
             self._pending[i] = self._kv_words(ck, cv, j, int(inf.lens[j]),
                                               int(inf.lens[j]) + 1)[0]
-            r = self.slot_req[i]
             r.generated.append(int(nxt[j]))
             if len(r.generated) >= r.max_new:
                 r.done = True
@@ -893,7 +1062,10 @@ class MultiPortEngine:
                          else 0 for i in range(len(self.slot_req))],
                 "pool_utilization": self.pool.utilization,
                 "pool_traversals": self.pool.traversals,
-                "kv_shards": self.n_kv_shards}
+                "kv_shards": self.n_kv_shards,
+                "shed": len(self.shed),
+                "overload_state": (self.overload.state
+                                   if self.overload is not None else None)}
 
     # ---- dependency scheduling ----------------------------------------------
     def _build_phases(self, scrub: list, admits: list, appends: list,
@@ -964,7 +1136,24 @@ class MultiPortEngine:
         while the host plans the next macro-cycle. State evolution is
         bit-identical to the synchronous loop; only the forcing point
         moved."""
-        self.flush()
+        # chaos delayed retirement: while stalled the in-flight decode is
+        # NOT forced this cycle (and no new decode work is collected or
+        # dispatched below) — evict/admit/prefill keep running
+        stalled = self.retire_stall_cycles > 0
+        if stalled:
+            self.retire_stall_cycles -= 1
+            if self._inflight is not None:
+                self.stalled_retirements += 1
+        else:
+            self.flush()
+        # deadline shedding happens at the HEAD of the cycle, before any
+        # admission decision: expired heads never reach a slot, a page, or
+        # a pool traversal (head-only — see AdmissionQueue)
+        for req in self.admission.shed_expired_heads(self.vclock):
+            self._shed(req, "deadline")
+        if self.overload is not None:
+            self.overload.observe(self.admission.ready_depth(self.vclock),
+                                  cycle=self.cycles, tick=self.vclock)
         self._freed_slots_this_cycle = set()
         self._token_events = []
         cfg = self._port_enables()
@@ -984,8 +1173,9 @@ class MultiPortEngine:
             elif port == PREFILL:
                 state["admits"] = self._collect_prefill()
             elif port == DECODE:
-                (state["appends"], state["active"],
-                 state["reads"]) = self._collect_decode()
+                if not stalled:
+                    (state["appends"], state["active"],
+                     state["reads"]) = self._collect_decode()
             else:
                 state["status"] = self._service_status()
             return state

@@ -146,14 +146,44 @@ def poisson_arrivals(n_requests: int, rate: float, *, seed: int, vocab: int,
     return tuple(out)
 
 
-def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000
-          ) -> tuple[list, float]:
+@dataclasses.dataclass
+class DriveResult:
+    """What one open-loop run did: the per-cycle ready-queue-depth samples
+    and wall seconds the pre-overload harness returned, plus the
+    load-shedding ledger (every overload decision the engine made, counted
+    by reason) the bench's overload section gates on. Iterates as the
+    legacy ``(qdepth, wall)`` pair so existing unpacking call sites keep
+    working."""
+
+    qdepth: list
+    wall: float
+    submitted: int = 0
+    served: int = 0
+    shed: int = 0                   # total, any reason
+    shed_deadline: int = 0
+    shed_queue_full: int = 0
+    shed_capacity: int = 0
+    capacity_recoveries: int = 0    # parked heads later admitted
+    cancelled: int = 0              # chaos mid-stream cancellations
+    degraded_cycles: int = 0        # cycles the overload controller degraded
+    overload_transitions: int = 0
+
+    def __iter__(self):
+        return iter((self.qdepth, self.wall))
+
+
+def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000,
+          on_cycle=None) -> DriveResult:
     """The open-loop host loop: submit each arrival once the engine's
     virtual clock reaches its tick, step macro-cycles continuously
     (fast-forwarding idle stretches with :meth:`advance_idle` so the clock
     never stalls), and retire the last in-flight dispatch at the end.
-    Returns (per-cycle ready-queue-depth samples, wall seconds). Latency
-    stamps land on the engine's request objects."""
+    Returns a :class:`DriveResult` (unpacks as the legacy ``(qdepth,
+    wall)`` pair); latency stamps land on the engine's request objects and
+    shed requests land in ``eng.shed`` with their reason. ``on_cycle``
+    (the chaos harness's injection point) is called with the engine after
+    each cycle's arrivals are submitted, BEFORE the macro-cycle runs — a
+    fault injected there shapes the very cycle it is due in."""
     pending = deque(arrivals)
     qdepth: list[int] = []
     t0 = time.perf_counter()
@@ -161,6 +191,8 @@ def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000
         while pending and pending[0].arrival_tick <= eng.vclock:
             a = pending.popleft()
             eng.submit(list(a.prompt), a.max_new, arrival_tick=a.arrival_tick)
+        if on_cycle is not None:
+            on_cycle(eng)
         if not eng.pending_work():
             if pending:
                 # idle until the next scheduled arrival — the virtual
@@ -175,7 +207,17 @@ def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000
         if eng.cycles >= max_cycles:
             break
     eng.flush()
-    return qdepth, time.perf_counter() - t0
+    ov = getattr(eng, "overload", None)
+    return DriveResult(
+        qdepth=qdepth, wall=time.perf_counter() - t0,
+        submitted=len(arrivals), served=len(eng.finished),
+        shed=len(eng.shed), shed_deadline=eng.shed_deadline,
+        shed_queue_full=eng.shed_queue_full,
+        shed_capacity=eng.shed_capacity,
+        capacity_recoveries=eng.capacity_recoveries,
+        cancelled=eng.cancelled,
+        degraded_cycles=ov.degraded_cycles if ov is not None else 0,
+        overload_transitions=len(ov.transitions) if ov is not None else 0)
 
 
 def write_trace(path: str, arrivals: Sequence[Arrival]) -> None:

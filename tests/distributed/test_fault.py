@@ -1,0 +1,88 @@
+"""Unit tests for the fault-tolerance primitives in distributed/fault.py
+— previously only exercised indirectly. The chaos harness
+(serve/chaos.py) now wires Heartbeat and StragglerDetector into the
+serving engine, so their contracts need pinning on their own: heartbeat
+files parse and stale detection keys off wall time, the straggler EMA
+excludes the outliers it flags, and the failure injector fires each
+configured step exactly once.
+"""
+import time
+
+import pytest
+
+from repro.distributed.fault import (FailureInjector, Heartbeat,
+                                     InjectedFailure, StragglerDetector)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat
+
+def test_heartbeat_beat_writes_step_and_timestamp(tmp_path):
+    hb = Heartbeat(str(tmp_path), worker="w3")
+    before = time.time()
+    hb.beat(17)
+    step, stamp = (tmp_path / "heartbeat_w3").read_text().split()
+    assert int(step) == 17
+    assert before <= float(stamp) <= time.time()
+    hb.beat(18)                                      # overwrites, not appends
+    assert (tmp_path / "heartbeat_w3").read_text().split()[0] == "18"
+
+
+def test_heartbeat_stale_workers_timeout_band(tmp_path):
+    Heartbeat(str(tmp_path), worker="fresh").beat(1)
+    old = tmp_path / "heartbeat_old"
+    old.write_text(f"5 {time.time() - 100.0}")
+    (tmp_path / "not_a_heartbeat").write_text("ignored")
+    assert Heartbeat.stale_workers(str(tmp_path), timeout_s=60) == ["old"]
+    assert set(Heartbeat.stale_workers(str(tmp_path), timeout_s=0.0)) \
+        == {"fresh", "old"}
+    assert Heartbeat.stale_workers(str(tmp_path / "missing"), 60) == []
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+
+def test_straggler_warmup_and_detection():
+    d = StragglerDetector(multiplier=3.0, warmup=3)
+    assert not d.record(0, 1.0)                      # seeds the EMA
+    assert not d.record(1, 100.0)                    # within warmup: never
+    d2 = StragglerDetector(multiplier=3.0, warmup=3)
+    for s in range(4):
+        assert not d2.record(s, 1.0)
+    assert d2.record(4, 10.0)                        # 10 > 3 * EMA(=1.0)
+    assert d2.events == [{"step": 4, "duration": 10.0, "ema": 1.0}]
+    assert not d2.record(5, 1.0)
+
+
+def test_straggler_does_not_poison_ema():
+    """A flagged outlier must NOT be folded into the EMA — otherwise one
+    straggler raises the bar and masks the next one."""
+    d = StragglerDetector(multiplier=2.0, ema_decay=0.5, warmup=1)
+    d.record(0, 1.0)
+    d.record(1, 1.0)
+    assert d.record(2, 100.0)
+    assert d._ema == 1.0                             # unchanged by outlier
+    assert d.record(3, 100.0)                        # still flagged
+    assert len(d.events) == 2
+
+
+def test_straggler_ema_tracks_normal_steps():
+    d = StragglerDetector(multiplier=3.0, ema_decay=0.9, warmup=1)
+    d.record(0, 1.0)
+    d.record(1, 2.0)
+    assert d._ema == pytest.approx(0.9 * 1.0 + 0.1 * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+
+def test_failure_injector_fires_each_step_once():
+    inj = FailureInjector(fail_at_steps=(2, 5))
+    inj.maybe_fail(0)
+    inj.maybe_fail(1)
+    with pytest.raises(InjectedFailure, match="step 2"):
+        inj.maybe_fail(2)
+    inj.maybe_fail(2)                                # restart: no refire
+    with pytest.raises(InjectedFailure, match="step 5"):
+        inj.maybe_fail(5)
+    inj.maybe_fail(5)

@@ -3,21 +3,30 @@ long-prompt requests, and the queue/engine pressure counters. The bugfix
 these pin: admission used to be an implementation detail of the prefill
 phase — any future 'pick the cheapest queued request' optimization would
 silently starve long prompts behind a stream of short ones. AdmissionQueue
-only ever surfaces its HEAD."""
+only ever surfaces its HEAD.
+
+The overload-safety layer rides the same contracts: the bounded queue
+rejects at push (never mid-queue), deadline shedding only ever drops
+expired HEADS (an expired request buried behind a live head is not
+reaped early — that would bypass arrival order), and the
+OverloadController's degrade/restore transitions follow its hysteresis
+band exactly."""
 import dataclasses
+from typing import Optional
 
 import jax
 import pytest
 
 from repro.configs import registry
 from repro.models import init_params
-from repro.serve.admission import AdmissionQueue
+from repro.serve.admission import AdmissionQueue, OverloadController
 from repro.serve.engine import MultiPortEngine
 
 
 @dataclasses.dataclass
 class FakeReq:
     arrival_tick: int
+    deadline_tick: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -47,6 +56,105 @@ def test_queue_counters():
     q.push(FakeReq(2))
     assert q.peak_depth == 3           # depth never re-peaked
     assert q.admitted == 1
+
+
+# ---------------------------------------------------------------------------
+# overload semantics: bounded depth + deadline shedding (queue level)
+
+def test_bounded_depth_rejects_at_push():
+    q = AdmissionQueue(max_depth=2)
+    assert q.push(FakeReq(0)) and q.push(FakeReq(0))
+    assert not q.push(FakeReq(0))          # full: refused, not queued
+    assert (len(q), q.submitted, q.rejected) == (2, 2, 1)
+    q.pop_ready(0)
+    assert q.push(FakeReq(1))              # slot freed -> accepted again
+    assert q.rejected == 1
+
+
+def test_bounded_depth_validation():
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_depth=0)
+
+
+def test_deadline_shed_is_head_only():
+    """An expired request buried behind a LIVE head stays queued — reaping
+    it early would bypass arrival order. It is shed when it surfaces."""
+    q = AdmissionQueue()
+    live = FakeReq(arrival_tick=5)                       # not ready at t=3
+    expired = FakeReq(arrival_tick=0, deadline_tick=2)
+    q.push(live)
+    q.push(expired)
+    assert q.shed_expired_heads(3) == []                 # head is live
+    assert len(q) == 2 and q.shed_expired == 0
+    assert q.pop_ready(5) is live                        # FIFO intact
+    assert q.shed_expired_heads(5) == [expired]
+    assert q.shed_expired == 1 and len(q) == 0
+
+
+def test_pop_ready_sheds_expired_heads_first():
+    q = AdmissionQueue()
+    a = FakeReq(arrival_tick=0, deadline_tick=1)
+    b = FakeReq(arrival_tick=0, deadline_tick=1)
+    c = FakeReq(arrival_tick=0)                          # no deadline
+    for r in (a, b, c):
+        q.push(r)
+    assert q.pop_ready(4) is c                           # a, b shed en route
+    assert q.shed_expired == 2
+    assert q.admitted == 1                               # sheds not admitted
+
+
+def test_deadline_boundary_is_inclusive():
+    """now == deadline_tick is still servable; only now > deadline sheds."""
+    q = AdmissionQueue()
+    r = FakeReq(arrival_tick=0, deadline_tick=3)
+    q.push(r)
+    assert q.shed_expired_heads(3) == []
+    assert q.pop_ready(3) is r
+
+
+# ---------------------------------------------------------------------------
+# OverloadController: hysteresis band, degrade/restore transitions
+
+def test_overload_controller_validation():
+    with pytest.raises(ValueError):
+        OverloadController(depth_high=2, depth_low=2)    # band collapsed
+    with pytest.raises(ValueError):
+        OverloadController(sustain=0)
+    with pytest.raises(ValueError):
+        OverloadController(chunk_shrink=0)
+    with pytest.raises(ValueError):
+        OverloadController(admission_cap=0)
+
+
+def test_overload_controller_hysteresis_and_transitions():
+    c = OverloadController(depth_high=4, depth_low=1, sustain=3)
+    # pressure must SUSTAIN: 2 hot cycles + a cool one resets the count
+    for depth in (5, 6, 0, 5, 5):
+        c.observe(depth, cycle=0, tick=0)
+    assert not c.degraded
+    c.observe(4, cycle=7, tick=9)                        # 3rd consecutive
+    assert c.degraded
+    assert c.transitions == [
+        {"cycle": 7, "tick": 9, "to": "degraded", "ready_depth": 4}]
+    # degraded policy: smaller chunk, capped admissions
+    assert c.chunk_tokens(8) == 4
+    assert c.cap() == c.admission_cap == 1
+    # recovery needs sustained calm at/below depth_low
+    for depth in (1, 0, 2, 1, 1):                        # the 2 resets
+        c.observe(depth, cycle=10, tick=20)
+    assert c.degraded
+    c.observe(0, cycle=13, tick=26)
+    assert not c.degraded
+    assert c.transitions[-1]["to"] == "normal"
+    assert c.degraded_cycles == 6                        # every degraded obs
+    # restored: full chunk, uncapped
+    assert c.chunk_tokens(8) == 8 and c.cap() is None
+
+
+def test_overload_controller_chunk_floor():
+    c = OverloadController(chunk_shrink=16)
+    c.state = "degraded"
+    assert c.chunk_tokens(8) == 1                        # never 0
 
 
 # ---------------------------------------------------------------------------
@@ -117,3 +225,50 @@ def test_eviction_pressure_counter_under_churn(served):
     assert eng.evictions == 3
     assert quick.finish_cycle < late.admit_cycle
     assert eng.evict_pressure_admissions >= 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level load shedding: bounded queue + deadline TTL
+
+def test_engine_bounded_queue_sheds_at_submit(served):
+    cfg, params = served
+    eng = MultiPortEngine(params, cfg, slots=1, max_slots=1, max_len=32,
+                          seq_tile=8, chunk_tokens=8, max_queue_depth=1)
+    kept = eng.submit([1, 2, 3], max_new=1)
+    over = [eng.submit([4, 5], max_new=1) for _ in range(2)]
+    assert [r.shed_reason for r in over] == ["queue_full"] * 2
+    assert eng.shed == over and eng.shed_queue_full == 2
+    assert eng.admission.rejected == 2
+    done = eng.run()
+    assert [r.rid for r in done] == [kept.rid]           # sheds never served
+    assert all(r.admit_tick is None and not r.generated for r in over)
+
+
+def test_engine_deadline_ttl_sheds_queued_request(served):
+    """A request whose TTL expires while it waits behind the slot occupant
+    is shed with reason/tick stamped — it never gets a slot or a token."""
+    cfg, params = served
+    eng = MultiPortEngine(params, cfg, slots=1, max_slots=1, max_len=32,
+                          seq_tile=8, chunk_tokens=8)
+    occupant = eng.submit(list(range(1, 9)), max_new=8)  # holds the slot
+    doomed = eng.submit([2, 3], max_new=1, ttl_ticks=2)
+    assert doomed.deadline_tick == doomed.arrival_tick + 2
+    done = eng.run()
+    assert [r.rid for r in done] == [occupant.rid]
+    assert doomed.shed_reason == "deadline"
+    assert doomed.shed_tick is not None
+    assert doomed.shed_tick > doomed.deadline_tick
+    assert eng.shed_deadline == 1 and eng.shed == [doomed]
+    assert doomed.admit_tick is None and not doomed.generated
+
+
+def test_engine_default_ttl_applies_to_every_submit(served):
+    cfg, params = served
+    eng = MultiPortEngine(params, cfg, slots=1, max_slots=1, max_len=32,
+                          seq_tile=8, chunk_tokens=8, default_ttl_ticks=5.0)
+    a = eng.submit([1, 2], max_new=1)
+    b = eng.submit([3, 4], max_new=1, ttl_ticks=99)      # per-request wins
+    assert a.deadline_tick == a.arrival_tick + 5.0
+    assert b.deadline_tick == b.arrival_tick + 99
+    with pytest.raises(ValueError):
+        eng.submit([5], max_new=1, ttl_ticks=0)

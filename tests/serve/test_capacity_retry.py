@@ -1,0 +1,155 @@
+"""PoolCapacityError recovery at admission: park -> retry -> success/shed.
+
+The engine prechecks the pool BEFORE popping the admission head (worst-case
+page demand, ``len(prompt) + max_new - 1`` words, against the free list
+minus the pages reserved for in-flight growth). A failed precheck PARKS the
+head in place — nothing is popped, no slot is consumed — and retries next
+macro-cycle; capacity freed by evictions (or a released quarantine) admits
+it with its ``capacity_retries`` stamp intact. Only after
+``capacity_retry_limit`` failed attempts is it shed with reason
+``"capacity"``. These tests pin both arcs at 1 in-process device and — via
+the subprocess pattern from tests/distributed/test_paged_sharding.py — on
+an 8-shard pool, where the squeeze is per home shard.
+
+Geometry used throughout (page_tokens == seq_tile == 8):
+1 slot * ceil(32/8) = 4 pages, or 2 slots * ceil(32/8) = 8 pages.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.models import init_params
+from repro.serve.engine import MultiPortEngine
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 1)
+    kw.setdefault("max_slots", kw["slots"])
+    return MultiPortEngine(params, cfg, max_len=32, seq_tile=8,
+                           chunk_tokens=8, **kw)
+
+
+def test_park_then_recover_after_quarantine_release(served):
+    """A request that cannot fit its worst case parks (not shed, not
+    admitted) and is admitted — tokens identical to an unsqueezed run —
+    once the squeeze lifts."""
+    cfg, params = served
+    eng = _engine(params, cfg)
+    assert eng.pool.free_page_count == 4
+    eng.pool.quarantine(3)                   # 1 page (8 words) left
+    req = eng.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=3)   # worst 10 -> 2pg
+    for _ in range(3):
+        eng.step()
+    assert req.admit_tick is None and req.slot is None       # parked, alive
+    assert req.capacity_retries == 3
+    assert eng.capacity_parked_cycles == 3
+    assert eng.shed == [] and len(eng.admission) == 1
+    eng.pool.release_quarantine()
+    done = eng.run()
+    assert [r.rid for r in done] == [req.rid]
+    assert eng.capacity_recoveries == 1
+    assert req.capacity_retries == 3                         # stamp survives
+    ref = _engine(params, cfg)
+    ref_req = ref.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=3)
+    ref.run()
+    assert req.generated == ref_req.generated                # squeeze-free
+
+
+def test_park_then_recover_after_eviction(served):
+    """The eviction-aware arc: the parked request is admitted by the pages
+    a FINISHED request's eviction frees, with the quarantine still held."""
+    cfg, params = served
+    eng = _engine(params, cfg, slots=2)
+    assert eng.pool.free_page_count == 8
+    eng.pool.quarantine(5)                   # 3 pages free
+    a = eng.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=2)     # worst 9 -> 2pg
+    b = eng.submit([8, 7, 6, 5, 4, 3, 2, 1], max_new=2)
+    eng.step()                               # a admitted; b parked behind it
+    assert a.admit_tick is not None
+    assert b.admit_tick is None and b.capacity_retries >= 1
+    done = eng.run()
+    assert [r.rid for r in done] == [a.rid, b.rid]
+    assert eng.capacity_recoveries == 1
+    assert a.finish_cycle < b.admit_cycle                    # evict freed it
+    assert len(eng.pool.quarantined_pages) == 5              # never released
+
+
+def test_retry_exhaustion_sheds_with_reason(served):
+    cfg, params = served
+    eng = _engine(params, cfg, capacity_retry_limit=3)
+    eng.pool.quarantine(4)                   # nothing can ever fit
+    req = eng.submit([1, 2, 3], max_new=1)
+    done = eng.run()
+    assert done == [] and req.shed_reason == "capacity"
+    assert eng.shed_capacity == 1 and eng.shed == [req]
+    assert req.capacity_retries == 3         # parked exactly limit times
+    assert req.admit_tick is None and not req.generated
+    assert req.rid not in eng.pool.tables    # never touched the pool
+    # pool recovers for the next request once the squeeze lifts
+    eng.pool.release_quarantine()
+    ok = eng.submit([4, 5], max_new=1)
+    assert [r.rid for r in eng.run()] == [ok.rid]
+
+
+def test_capacity_retry_limit_validation(served):
+    cfg, params = served
+    with pytest.raises(ValueError):
+        _engine(params, cfg, capacity_retry_limit=0)
+
+
+def test_park_and_recover_on_8_shard_pool():
+    """The same park -> release -> recover arc on an 8-device sharded pool:
+    the squeeze is per HOME shard, and the recovered request's tokens match
+    the unsharded, unsqueezed oracle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import jax
+        from repro.configs import registry
+        from repro.launch.mesh import make_kv_mesh
+        from repro.models import init_params
+        from repro.serve.engine import MultiPortEngine
+
+        cfg = registry.get("tinyllama-1.1b", reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompt = list(range(1, 11))                  # worst 12 -> 2 pages
+
+        oracle = MultiPortEngine(params, cfg, slots=2, max_slots=2,
+                                 max_len=64, seq_tile=8, chunk_tokens=8)
+        oref = oracle.submit(prompt, max_new=3)
+        oracle.run()
+
+        eng = MultiPortEngine(params, cfg, slots=2, max_slots=2,
+                              max_len=64, seq_tile=8, chunk_tokens=8,
+                              mesh=make_kv_mesh(8))
+        assert eng.pool.plan.pages_per_shard == 2    # 16 pages / 8 shards
+        eng.pool.quarantine(1)                       # 1 page left per shard
+        req = eng.submit(prompt, max_new=3)
+        for _ in range(3):
+            eng.step()
+        assert req.admit_tick is None and req.capacity_retries == 3
+        eng.pool.release_quarantine()
+        done = eng.run(max_cycles=1000)
+        assert [r.rid for r in done] == [req.rid]
+        assert eng.capacity_recoveries == 1
+        assert req.generated == oref.generated
+        print("SHARDED-RETRY-OK")
+    """)], capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARDED-RETRY-OK" in r.stdout

@@ -1,0 +1,175 @@
+"""Fault-injection harness: plan determinism, invariant audit teeth, and
+the end-to-end contract — a chaos run's SURVIVORS (neither shed nor
+cancelled) generate tokens identical to the fault-free run of the same
+schedule. Faults change who finishes and when, never what is generated.
+
+The audit itself is tested adversarially: a deliberately corrupted pool
+(duplicated free page, orphaned table) must RAISE — an invariant checker
+that passes everything would make every chaos gate vacuous.
+"""
+import time
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.distributed.fault import Heartbeat
+from repro.models import init_params
+from repro.serve.chaos import (KINDS, ChaosHarness, Fault, FaultPlan,
+                               InvariantViolation, check_invariants)
+from repro.serve.engine import MultiPortEngine
+from repro.serve.traffic import drive, poisson_arrivals
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(params, cfg):
+    return MultiPortEngine(params, cfg, slots=2, max_slots=2, max_len=32,
+                           seq_tile=8, chunk_tokens=8)
+
+
+def _arrivals(cfg, n=10):
+    return poisson_arrivals(n, 0.8, seed=3, vocab=cfg.vocab,
+                            max_prompt=16, max_output=4)
+
+
+# ---------------------------------------------------------------------------
+# plan generation
+
+def test_fault_plan_deterministic_and_sorted():
+    a = FaultPlan.generate(7, 40)
+    b = FaultPlan.generate(7, 40)
+    assert a == b                                    # bit-for-bit
+    assert a != FaultPlan.generate(8, 40)
+    ticks = [f.tick for f in a.faults]
+    assert ticks == sorted(ticks)
+    assert {f.kind for f in a.faults} == set(KINDS)  # every kind cycled in
+    assert all(0 <= f.tick < 40 for f in a.faults)
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault(tick=0, kind="meteor")
+    with pytest.raises(ValueError):
+        Fault(tick=-1, kind="stall")
+    with pytest.raises(ValueError):
+        Fault(tick=0, kind="squeeze", magnitude=0)
+    with pytest.raises(ValueError):
+        Fault(tick=0, kind="cancel", choice=1.0)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, horizon=0)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, 10, kinds=("squeeze", "meteor"))
+
+
+# ---------------------------------------------------------------------------
+# the invariant audit has teeth
+
+def test_check_invariants_clean_engine(served):
+    cfg, params = served
+    eng = _engine(params, cfg)
+    check_invariants(eng)                            # no-op on a fresh pool
+    eng.submit([1, 2, 3], max_new=2)
+    eng.step()
+    check_invariants(eng)                            # and mid-flight
+
+
+def test_check_invariants_catches_duplicate_free_page(served):
+    cfg, params = served
+    eng = _engine(params, cfg)
+    eng.pool.free_by_shard[0].append(eng.pool.free_by_shard[0][0])
+    with pytest.raises(InvariantViolation):
+        check_invariants(eng)
+
+
+def test_check_invariants_catches_orphan_table(served):
+    cfg, params = served
+    eng = _engine(params, cfg)
+    page = eng.pool.free_by_shard[0].pop()
+    eng.pool.tables[999] = [page]                    # rid not in any slot
+    with pytest.raises(InvariantViolation):
+        check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: survivors are token-identical to the fault-free run
+
+def test_chaos_run_survivor_token_identity(served):
+    cfg, params = served
+    arrivals = _arrivals(cfg)
+
+    ref = _engine(params, cfg)
+    drive(ref, arrivals)
+    ref_toks = {r.rid: tuple(r.generated) for r in ref.finished}
+    assert len(ref_toks) == len(arrivals)
+
+    plan = FaultPlan.generate(23, horizon=arrivals[-1].arrival_tick + 1,
+                              max_squeeze=4)
+    eng = _engine(params, cfg)
+    harness = ChaosHarness(plan)
+    drive(eng, arrivals, on_cycle=harness)
+    harness.finalize(eng)
+
+    assert harness.invariant_checks >= len(plan.faults) + 1
+    assert [i["kind"] for i in harness.injected if i["kind"] in KINDS]
+    survivors = [r for r in eng.finished
+                 if not r.cancelled and r.shed_reason is None]
+    assert survivors, "chaos run must still serve someone"
+    for r in survivors:
+        assert tuple(r.generated) == ref_toks[r.rid], r.rid
+    # everyone is accounted for exactly once
+    served_rids = {r.rid for r in eng.finished}
+    shed_rids = {r.rid for r in eng.shed}
+    assert served_rids | shed_rids == set(ref_toks)
+    assert not served_rids & shed_rids
+    check_invariants(eng)                            # final state clean
+
+
+def test_chaos_stall_preserves_tokens(served):
+    """A pure-stall plan (delayed retirement only): every request still
+    finishes, tokens untouched — the stall moves retirement, not data."""
+    cfg, params = served
+    arrivals = _arrivals(cfg, n=6)
+    ref = _engine(params, cfg)
+    drive(ref, arrivals)
+
+    plan = FaultPlan(seed=0, faults=(
+        Fault(tick=1, kind="stall", magnitude=2),
+        Fault(tick=4, kind="stall", magnitude=3),
+    ))
+    eng = _engine(params, cfg)
+    harness = ChaosHarness(plan)
+    drive(eng, arrivals, on_cycle=harness)
+    harness.finalize(eng)
+    assert eng.stalled_retirements > 0               # the stall really bit
+    assert ({r.rid: tuple(r.generated) for r in eng.finished}
+            == {r.rid: tuple(r.generated) for r in ref.finished})
+
+
+# ---------------------------------------------------------------------------
+# distributed/fault.py wiring: heartbeat + straggler detector
+
+def test_chaos_harness_heartbeat_and_straggler(served, tmp_path):
+    cfg, params = served
+    arrivals = _arrivals(cfg, n=6)
+    plan = FaultPlan.generate(5, horizon=8)
+    harness = ChaosHarness(plan, heartbeat_dir=str(tmp_path),
+                           worker="chaos0", straggler_multiplier=0.5)
+    eng = _engine(params, cfg)
+    drive(eng, arrivals, on_cycle=harness)
+    harness.finalize(eng)
+
+    beat = tmp_path / "heartbeat_chaos0"
+    assert beat.exists()
+    step, stamp = beat.read_text().split()
+    assert int(step) <= eng.cycles and float(stamp) <= time.time()
+    assert Heartbeat.stale_workers(str(tmp_path), timeout_s=3600) == []
+    # multiplier 0.5 flags any tick-delta above half the EMA: the idle
+    # gaps in a Poisson schedule guarantee outliers after warmup
+    assert harness.straggler_events > 0
+    assert harness.straggler.events
