@@ -5,8 +5,8 @@
 # and a local repro is the same command CI ran:
 #
 #     benchmarks/ci_gates.sh engine   # bench-engine/v5 ratio/tile gates
-#     benchmarks/ci_gates.sh serve    # bench-serve/v2 latency-SLO +
-#                                     # overload-sweep gates
+#     benchmarks/ci_gates.sh serve    # bench-serve/v3 latency-SLO +
+#                                     # overload-sweep + prefix-mix gates
 #     benchmarks/ci_gates.sh chaos    # seeded fault injection: invariant
 #                                     # audits + survivor token identity
 #
@@ -45,11 +45,18 @@ case "${1:?usage: ci_gates.sh engine|serve|chaos}" in
     # 1.11x/1.16x) while the no-shedding baseline collapses past the
     # band at the deepest rate (measured: 0.34x), sheds never touch the
     # engine, and survivor tokens stay identical to the pressure-free run
+    # the prefix mix rides the same invocation: a paced shared-prefix
+    # scenario where refcounted copy-on-write page sharing must dedup
+    # prompt compute — computed/served ≤ 0.6 with the cache on
+    # (measured: 0.52, hit rate 0.69) while the cache-off leg stays at
+    # exactly 1.0 and greedy tokens stay bit-identical on/off, against
+    # the static/reference oracle, and across the 1/2/4/8-device sweep
     exec python benchmarks/serve_bench.py \
       --requests 16 --arrival-rate 1.5 --seed 0 \
       --json BENCH_serve.json \
       --max-p99-ttft-cycles 5 --min-goodput 1.3 \
-      --overload-sweep --overload-band 0.2
+      --overload-sweep --overload-band 0.2 \
+      --prefix-mix --max-computed-ratio 0.6 --min-prefix-hit-rate 0.5
     ;;
   chaos)
     # seeded fault injection (capacity squeezes, mid-stream cancels,

@@ -1,4 +1,4 @@
-"""Open-loop serving bench: latency SLOs under real traffic (bench-serve/v2).
+"""Open-loop serving bench: latency SLOs under real traffic (bench-serve/v3).
 
 Every other bench in this repo is CLOSED-loop — all requests submitted up
 front, ratio gates on traversals/tiles/traces. This one drives the engine
@@ -64,6 +64,22 @@ audit after every fault — a violation is a hard exit — and survivor
 tokens (not shed, not cancelled) gated identical to the fault-free run.
 ``--chaos-only`` runs just this section (the CI ``chaos`` invocation,
 writing ``BENCH_chaos.json``).
+
+**Prefix section (v3, ``--prefix-mix``)**: a shared-prefix traffic mix —
+one scenario whose requests draw their prompt heads from a small pool of
+common headers (``serve/traffic.py`` scenario pools) — served twice on
+the same schedule: prefix cache ON (refcounted copy-on-write page
+sharing; matched prompt heads attach by refcount bump and skip prefill
+compute) and OFF (every request computes its own KV — today's exclusive
+ownership). Reports admitted-tokens-computed / admitted-tokens-served
+(computed = served minus prefix-attached tokens), the prefix hit rate
+over admissions, and CoW copy counts. The gates
+(``--max-computed-ratio``, ``--min-prefix-hit-rate``) assert the cache
+actually deduplicates — ratio <= the bound with the cache on, EXACTLY
+1.0 with it off — while greedy tokens stay bit-identical between the two
+runs, against a ``static``/``reference`` oracle, and across a
+1/2/4/8-shard device sweep (forced host devices; skipped counts are
+recorded, never silent).
 """
 from __future__ import annotations
 
@@ -117,6 +133,25 @@ CHAOS_REQUESTS = 20
 CHAOS_RATE = 0.8
 CHAOS_FAULTS = 6
 CHAOS_MAX_SQUEEZE = 16
+
+# prefix section geometry: ONE scenario with a 2-header pool so requests
+# actually collide on content; headers span 3 full pages (24 tokens at
+# page_tokens=8) and prompts are long enough to carry a whole header plus
+# a private tail. Attached pages only survive while some sequence
+# references them (no tombstones), so the mix needs OVERLAPPING
+# lifetimes: arrivals staggered slower than a prefill (a sharer admitted
+# before the registrant's prefill commits cannot match) and a decode
+# floor long enough that holders stay live while the next sharer admits
+PREFIX_REQUESTS = 16
+PREFIX_RATE = 0.25
+PREFIX_PACE_TICKS = 2
+PREFIX_SLOTS = 8
+PREFIX_HEADERS = 2
+PREFIX_TOKENS = 24
+PREFIX_MIN_PROMPT = 26
+PREFIX_MIN_OUTPUT = 6
+PREFIX_SWEEP_SHARDS = (1, 2, 4, 8)
+PREFIX_SWEEP_REQUESTS = 8
 
 
 def _setup():
@@ -414,6 +449,112 @@ def run_chaos(params, cfg, chaos_seed: int, arrival_seed: int) -> dict:
     }
 
 
+def _prefix_arrivals(cfg, seed: int):
+    from repro.serve.traffic import scenario_spread
+    sp = scenario_spread(arch_ids=("tinyllama-1.1b",),
+                         shared_prefixes=PREFIX_HEADERS,
+                         prefix_tokens=PREFIX_TOKENS)
+    arr = poisson_arrivals(
+        PREFIX_REQUESTS, PREFIX_RATE, seed=seed, vocab=cfg.vocab,
+        max_prompt=MAX_PROMPT, max_output=MAX_OUTPUT,
+        min_prompt=PREFIX_MIN_PROMPT, min_output=PREFIX_MIN_OUTPUT,
+        scenarios=sp)
+    # Pace the mix: re-stamp arrival ticks on a fixed cadence so
+    # admissions stagger. Poisson bursts admit several same-header
+    # requests in ONE macro-cycle — none can match a prefix that is not
+    # registered yet — and long gaps let every holder die (pages leave
+    # the index with their last reference; there is no tombstone cache).
+    # Neither regime measures dedup; the steady cadence does. Prompts,
+    # headers, and output lengths still come from the seeded pools.
+    return [dataclasses.replace(a, arrival_tick=1 + PREFIX_PACE_TICKS * i)
+            for i, a in enumerate(arr)]
+
+
+def _prefix_run(params, cfg, arrivals, *, prefix_cache: bool,
+                mesh=None, schedule_mode: str = "ooo",
+                kernel_mode: str = "pallas") -> tuple:
+    # wider slot table than the SLO mix: the dedup measurement needs the
+    # paced arrivals ADMITTED on their cadence — a full slot table parks
+    # matched heads until their donors die (uniform service times then
+    # re-batch admissions into convoys)
+    eng = MultiPortEngine(params, cfg, slots=PREFIX_SLOTS,
+                          max_slots=PREFIX_SLOTS,
+                          max_len=S_MAX, seq_tile=SEQ_TILE,
+                          chunk_tokens=CHUNK_TOKENS, mesh=mesh,
+                          schedule_mode=schedule_mode,
+                          kernel_mode=kernel_mode,
+                          prefix_cache=prefix_cache)
+    res = drive(eng, arrivals)
+    served = sum(len(r.prompt) + len(r.generated) for r in eng.finished)
+    stats = eng.prefix_stats
+    computed = served - stats["attached_tokens"]
+    s = {
+        "prefix_cache": prefix_cache,
+        "requests_finished": len(eng.finished),
+        "total_ticks": eng.vclock,
+        "prefill_tokens": eng.prefill_tokens,
+        "admitted": eng.admission.admitted,
+        "tokens_served": served,
+        "tokens_computed": computed,
+        "computed_over_served": computed / max(served, 1),
+        "hit_rate": stats["hits"] / max(eng.admission.admitted, 1),
+        "wall_seconds": res.wall,
+        **{f"prefix_{k}": v for k, v in stats.items()},
+    }
+    return s, _tokens_by_index(eng.finished)
+
+
+def run_prefix(params, cfg, seed: int) -> dict:
+    """The shared-prefix mix: cache on vs off on one schedule, a
+    static/reference oracle, and a 1/2/4/8-shard device sweep — every leg
+    must generate bit-identical greedy tokens (sharing is storage, never
+    numerics), and only the cache-on legs may skip computed tokens."""
+    from repro.launch.mesh import make_kv_mesh
+    arrivals = _prefix_arrivals(cfg, seed)
+    on, toks_on = _prefix_run(params, cfg, arrivals, prefix_cache=True)
+    off, toks_off = _prefix_run(params, cfg, arrivals, prefix_cache=False)
+    oracle, toks_oracle = _prefix_run(params, cfg, arrivals,
+                                      prefix_cache=True,
+                                      schedule_mode="static",
+                                      kernel_mode="reference")
+    sweep = []
+    sweep_ok = True
+    sub = arrivals[:PREFIX_SWEEP_REQUESTS]
+    _, sub_ref = _prefix_run(params, cfg, sub, prefix_cache=False)
+    for k in PREFIX_SWEEP_SHARDS:
+        if jax.device_count() < k:
+            sweep.append({"shards": k, "skipped":
+                          f"{jax.device_count()} devices available"})
+            continue
+        mesh = make_kv_mesh(k) if k > 1 else None
+        s, toks = _prefix_run(params, cfg, sub, prefix_cache=True,
+                              mesh=mesh)
+        s["shards"] = k
+        s["tokens_match_unsharded_off"] = toks == sub_ref
+        sweep_ok = sweep_ok and s["tokens_match_unsharded_off"]
+        sweep.append(s)
+    return {
+        "requests": PREFIX_REQUESTS,
+        "rate": PREFIX_RATE,
+        "headers": PREFIX_HEADERS,
+        "prefix_tokens": PREFIX_TOKENS,
+        "min_prompt": PREFIX_MIN_PROMPT,
+        "on": on,
+        "off": off,
+        "oracle_static_reference": oracle,
+        "device_sweep": sweep,
+        "gate_inputs": {
+            "ratio_on": on["computed_over_served"],
+            "ratio_off": off["computed_over_served"],
+            "hit_rate": on["hit_rate"],
+            "tokens_match_on_off": toks_on == toks_off,
+            "tokens_match_oracle": toks_on == toks_oracle,
+            "device_sweep_tokens_match": sweep_ok,
+            "off_ratio_is_one": off["computed_over_served"] == 1.0,
+        },
+    }
+
+
 def arrival_stats(arrivals) -> dict:
     plens = [a.prompt_len for a in arrivals]
     olens = [a.max_new for a in arrivals]
@@ -510,6 +651,35 @@ def report_chaos(ch: dict) -> None:
           f"{g['all_kinds_injected']}")
 
 
+def report_prefix(pf: dict) -> None:
+    print()
+    print(f"# prefix mix: {pf['requests']} requests, {pf['headers']} shared "
+          f"{pf['prefix_tokens']}-token headers (1 scenario), refcounted "
+          f"CoW page sharing on vs off")
+    print("cache,finished,served_toks,computed_toks,computed/served,"
+          "hit_rate,attached_toks,cow_copies,prefill_toks,ticks")
+    for s in (pf["on"], pf["off"], pf["oracle_static_reference"]):
+        name = "on" if s["prefix_cache"] else "off"
+        if s is pf["oracle_static_reference"]:
+            name = "on(static/ref)"
+        print(f"{name},{s['requests_finished']},{s['tokens_served']},"
+              f"{s['tokens_computed']},{s['computed_over_served']:.3f},"
+              f"{s['hit_rate']:.2f},{s['prefix_attached_tokens']},"
+              f"{s['prefix_cow_copies']},{s['prefill_tokens']},"
+              f"{s['total_ticks']}")
+    for s in pf["device_sweep"]:
+        if "skipped" in s:
+            print(f"sweep shards={s['shards']}: skipped ({s['skipped']})")
+        else:
+            print(f"sweep shards={s['shards']}: ratio "
+                  f"{s['computed_over_served']:.3f}, tokens_match "
+                  f"{s['tokens_match_unsharded_off']}")
+    g = pf["gate_inputs"]
+    print(f"tokens_match on==off,{g['tokens_match_on_off']},"
+          f"oracle,{g['tokens_match_oracle']},"
+          f"device_sweep,{g['device_sweep_tokens_match']}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=14,
@@ -554,7 +724,24 @@ def main(argv=None) -> None:
     ap.add_argument("--chaos-only", action="store_true",
                     help="run ONLY the chaos section (requires "
                          "--chaos-seed); the CI chaos invocation")
+    ap.add_argument("--prefix-mix", action="store_true",
+                    help="run the shared-prefix traffic section: refcounted "
+                         "CoW page sharing on vs off on one schedule, with "
+                         "a static/reference oracle and a 1/2/4/8-shard "
+                         "device sweep, all token-identical")
+    ap.add_argument("--min-prefix-hit-rate", type=float, default=None,
+                    help="prefix gate: exit non-zero unless the cache-on "
+                         "run's prefix hit rate (hits / admissions) is >= "
+                         "this (implies --prefix-mix)")
+    ap.add_argument("--max-computed-ratio", type=float, default=None,
+                    help="prefix gate: exit non-zero unless cache-on "
+                         "computed/served tokens <= this while the "
+                         "cache-off ratio is exactly 1.0 (implies "
+                         "--prefix-mix)")
     args = ap.parse_args(argv)
+    if args.min_prefix_hit_rate is not None \
+            or args.max_computed_ratio is not None:
+        args.prefix_mix = True
     if args.chaos_only and args.chaos_seed is None:
         ap.error("--chaos-only requires --chaos-seed")
 
@@ -577,7 +764,7 @@ def main(argv=None) -> None:
     if args.chaos_only:
         report_chaos(chaos)
         if args.json:
-            record = {"schema": "bench-serve/v2", "chaos": chaos}
+            record = {"schema": "bench-serve/v3", "chaos": chaos}
             with open(args.json, "w") as f:
                 json.dump(record, f, indent=2)
             print(f"\nwrote {args.json}")
@@ -603,11 +790,15 @@ def main(argv=None) -> None:
     ident = run_identity(params, cfg, arrivals)
     overload = (run_overload(params, cfg, args.seed, args.overload_band)
                 if args.overload_sweep else None)
+    prefix = (run_prefix(params, cfg, args.seed)
+              if args.prefix_mix else None)
     report(modes, ident, ast, args.wall_clock)
     if overload is not None:
         report_overload(overload)
     if chaos is not None:
         report_chaos(chaos)
+    if prefix is not None:
+        report_prefix(prefix)
 
     ooo, static = modes["ooo"], modes["static"]
     slo_differentiates = True
@@ -620,7 +811,7 @@ def main(argv=None) -> None:
 
     if args.json:
         record = {
-            "schema": "bench-serve/v2",
+            "schema": "bench-serve/v3",
             "config": {
                 "arch": "tinyllama-1.1b", "reduced": True,
                 "requests": ast["count"],
@@ -637,8 +828,11 @@ def main(argv=None) -> None:
             "identity": ident,
             "overload": overload,
             "chaos": chaos,
+            "prefix": prefix,
             "gate": {
                 "max_p99_ttft_cycles": args.max_p99_ttft_cycles,
+                "min_prefix_hit_rate": args.min_prefix_hit_rate,
+                "max_computed_ratio": args.max_computed_ratio,
                 "min_goodput": args.min_goodput,
                 "ooo_ttft_p99": ooo["ttft_p99"],
                 "static_ttft_p99": static["ttft_p99"],
@@ -735,6 +929,38 @@ def main(argv=None) -> None:
                          if name == "invariants_ok" else ""),
                       file=sys.stderr)
                 failed = True
+    if prefix is not None:
+        g = prefix["gate_inputs"]
+        for name in ("tokens_match_on_off", "tokens_match_oracle",
+                     "device_sweep_tokens_match"):
+            if not g[name]:
+                print(f"GATE FAIL: prefix {name} is False — sharing "
+                      f"changed generated tokens", file=sys.stderr)
+                failed = True
+        if args.max_computed_ratio is not None:
+            if g["ratio_on"] > args.max_computed_ratio:
+                print(f"GATE FAIL: cache-on computed/served "
+                      f"{g['ratio_on']:.3f} > {args.max_computed_ratio} — "
+                      f"the prefix cache is not deduplicating",
+                      file=sys.stderr)
+                failed = True
+            elif not g["off_ratio_is_one"]:
+                print(f"GATE FAIL: cache-off computed/served "
+                      f"{g['ratio_off']:.3f} != 1.0 — tokens skipped with "
+                      f"the cache disabled", file=sys.stderr)
+                failed = True
+            else:
+                print(f"GATE OK: computed/served {g['ratio_on']:.3f} <= "
+                      f"{args.max_computed_ratio} with the cache on, "
+                      f"exactly 1.0 off")
+        if args.min_prefix_hit_rate is not None:
+            if g["hit_rate"] < args.min_prefix_hit_rate:
+                print(f"GATE FAIL: prefix hit rate {g['hit_rate']:.2f} < "
+                      f"{args.min_prefix_hit_rate}", file=sys.stderr)
+                failed = True
+            else:
+                print(f"GATE OK: prefix hit rate {g['hit_rate']:.2f} >= "
+                      f"{args.min_prefix_hit_rate}")
     if failed:
         sys.exit(1)
 

@@ -339,6 +339,27 @@ def kv_shard_plan(n_shards: int, *, n_pages: int,
                        page_tokens=page_tokens)
 
 
+def shard_of_pages(plan: KVShardPlan, pages) -> int:
+    """The ONE shard a page set lives on, raising when it spans several.
+
+    Refcounted prefix sharing leans on this: shared pages pin to the shard
+    where they were first written, a prefix chain therefore never crosses
+    shards (each extension is carved from the attacher's home — the chain's
+    shard — by construction), and an attaching sequence validates its
+    adopted pages here before its home follows them. A multi-shard set is a
+    bookkeeping corruption, not a capacity condition, hence ValueError
+    rather than PoolCapacityError."""
+    pages = list(pages)
+    if not pages:
+        raise ValueError("empty page set has no shard")
+    shards = {plan.shard_of_page(int(p)) for p in pages}
+    if len(shards) != 1:
+        raise ValueError(
+            f"page set {sorted(int(p) for p in pages)} spans shards "
+            f"{sorted(shards)} — shared prefix pages must stay device-local")
+    return shards.pop()
+
+
 def kv_pool_spec(mesh: Mesh, *, num_words: int, page_tokens: int,
                  axis: str = "kv") -> P:
     """Spec for the paged pool storage ``[num_words, word_width]``: the word

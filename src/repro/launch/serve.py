@@ -109,6 +109,12 @@ def main() -> None:
                          "retirement) through serve.chaos.ChaosHarness "
                          "with engine/pool invariant audits after every "
                          "fault")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable refcounted prefix sharing: every "
+                         "admission prefills its full prompt even when an "
+                         "identical prefix is already resident (the "
+                         "launcher serves with the prefix cache ON by "
+                         "default; tokens are bit-identical either way)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.trace and args.arrival_rate is not None:
@@ -158,7 +164,8 @@ def main() -> None:
                           schedule_mode=args.schedule_mode,
                           max_ports=args.max_ports,
                           default_ttl_ticks=args.deadline,
-                          max_queue_depth=args.max_queue_depth)
+                          max_queue_depth=args.max_queue_depth,
+                          prefix_cache=not args.no_prefix_cache)
     open_loop = args.trace is not None or args.arrival_rate is not None
     if args.chaos_seed is not None and not open_loop:
         raise SystemExit("--chaos-seed needs open-loop mode "
@@ -232,6 +239,13 @@ def main() -> None:
               f"(balance {eng.kv_tile_balance:.2f}x ideal); pool tiles r/w "
               f"by shard {eng.pool.tile_reads_by_shard}/"
               f"{eng.pool.tile_writes_by_shard}")
+    if eng.prefix_cache:
+        ps = eng.prefix_stats
+        print(f"prefix cache: {ps['hits']}/{ps['lookups']} admissions "
+              f"attached a resident prefix ({ps['attached_tokens']} tokens "
+              f"/ {ps['attached_pages']} pages adopted without recompute); "
+              f"copy-on-write splits {ps['cow_copies']} "
+              f"({ps['cow_words']} words copied)")
     if open_loop:
         ttft = np.array([r.ttft_ticks for r in done
                          if r.ttft_ticks is not None], dtype=np.float64)

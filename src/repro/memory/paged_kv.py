@@ -59,6 +59,26 @@ multi-port discipline extended across independent memory channels.
 ``kv_shards`` without a mesh keeps the device-aware control plane (home
 shards, per-shard free lists, the capacity precheck) over unsharded
 storage — the cheap CI surface the allocation property tests run against.
+
+**Refcounted copy-on-write page sharing** (the prefix-cache substrate):
+pages are no longer exclusively owned — ``refcounts`` tracks how many page
+tables reference each physical page, :meth:`free` DECREMENTS (a page only
+returns to its shard's free list, and only then may be scrubbed, when the
+last reference dies; earlier releases just detach), and a
+content-addressed prefix index keyed on token-hash chains at page
+granularity (:meth:`register_prefix` / :meth:`match_prefix` /
+:meth:`attach_prefix`) lets a new sequence adopt an already-committed
+prompt prefix by refcount bump instead of recomputing it. Sharing is
+READ-ONLY by construction: a write whose word would land in a shared page
+copy-on-writes it first (fresh page carved on the WRITER's home shard, the
+live words copied through the same traversal's W port, only the writer's
+table remapped — see :meth:`_cow_prepare`), so hazard analysis can treat
+shared pages as read-shared/write-private. Shared pages pin to the shard
+where they were first written and an attaching sequence's home FOLLOWS the
+matched prefix (its unmatched tail is carved there too) — a full
+least-loaded shard sheds load by sharing instead of raising
+:class:`PoolCapacityError`. With no registrations the pool behaves
+bit-identically to exclusive ownership.
 """
 from __future__ import annotations
 
@@ -73,7 +93,8 @@ import numpy as np
 from repro.core import (MemorySpec, PortConfig, READ, WRITE, PortRequest,
                         empty_request, step, step_banked)
 from repro.distributed.sharding import (KVShardPlan, compat_shard_map,
-                                        kv_pool_spec, kv_shard_plan)
+                                        kv_pool_spec, kv_shard_plan,
+                                        shard_of_pages)
 from repro.kernels.tiling import word_pad
 
 # pool port indices
@@ -93,6 +114,36 @@ class PoolCapacityError(MemoryError):
     admission after evictions free pages. Under device-aware allocation the
     error names the full home shard even when OTHER shards still hold free
     pages — a sequence's pages never spill across shards."""
+
+
+# root of every prefix hash chain (see PagedPool.register_prefix)
+_PREFIX_ROOT = -1
+
+
+def _chain_key(parent: int, page_toks: tuple) -> int:
+    """Content-address of a page-granular prefix chain node: the hash of
+    (parent chain key, this page's token tuple). Python's tuple-of-int hash
+    is deterministic (PYTHONHASHSEED only perturbs str/bytes), so the chain
+    is stable across processes — trace replays and subprocess oracles see
+    the same index."""
+    return hash((parent, page_toks))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """A non-mutating :meth:`PagedPool.match_prefix` result: the registered
+    pages a prompt's head can adopt by refcount bump. ``tokens`` counts the
+    matched prefix (the LAST page may be partial — the matcher's own writes
+    copy-on-write around its remaining words); ``full_pages`` is how many
+    matched pages the adopter will never write (``tokens // page_tokens``
+    — the count admission subtracts from worst-case page demand, since a
+    partial tail page is offset by its own CoW replacement). All matched
+    pages live on ``shard`` — shared pages pin where first written."""
+
+    pages: tuple                       # matched page ids, chain order
+    tokens: int                        # matched prefix length in tokens
+    shard: int                         # the one shard holding every page
+    full_pages: int                    # fully-matched pages (never written)
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -207,6 +258,23 @@ class PagedPool:
     quarantine_by_shard: list = dataclasses.field(default_factory=list)
                                        # shard -> pages withheld from
                                        # allocation by a chaos squeeze
+    refcounts: dict = dataclasses.field(default_factory=dict)
+                                       # page -> tables referencing it (every
+                                       # mapped page has an entry >= 1; free
+                                       # and quarantined pages have none)
+    prefix_index: dict = dataclasses.field(default_factory=dict)
+                                       # parent chain key -> {page token
+                                       # tuple -> page id} (content-addressed
+                                       # prefix chains, page granularity)
+    page_reg: dict = dataclasses.field(default_factory=dict)
+                                       # page -> (parent, token tuple): its
+                                       # index slot, dropped on last release
+    prefix_lookups: int = 0            # match_prefix calls
+    prefix_hits: int = 0               # attaches (>= 1 token adopted)
+    prefix_attached_tokens: int = 0    # tokens adopted without recompute
+    prefix_attached_pages: int = 0     # pages adopted by refcount bump
+    cow_copies: int = 0                # shared tail pages remapped on write
+    cow_words: int = 0                 # live words those remaps copied
 
     @classmethod
     def create(cls, *, n_pages: int, page_tokens: int, word_width: int,
@@ -314,6 +382,15 @@ class PagedPool:
             n = min(n_per_shard, max(0, len(fl) - keep[s]))
             for _ in range(n):
                 p = fl.pop()
+                if self.refcounts.get(p, 0):
+                    # free lists never hold mapped pages; a refcounted page
+                    # here means the pool's books are corrupt — refuse the
+                    # squeeze rather than withhold words sequences still read
+                    fl.append(p)
+                    raise ValueError(
+                        f"quarantine refused page {p}: refcount "
+                        f"{self.refcounts[p]} > 0 (tables still reference "
+                        f"it, yet it sat on shard {s}'s free list)")
                 self.quarantine_by_shard[s].append(p)
                 taken.append(p)
         return taken
@@ -369,8 +446,8 @@ class PagedPool:
                                [len(fl) for fl in self.free_by_shard])
 
     def admission_precheck(self, seq: int, total_tokens: int,
-                           reserved_by_shard: Optional[Sequence[int]] = None
-                           ) -> int:
+                           reserved_by_shard: Optional[Sequence[int]] = None,
+                           *, prefix: Optional[PrefixMatch] = None) -> int:
         """Raise :class:`PoolCapacityError` unless a sequence's WORST-CASE
         page demand (``total_tokens`` words over its whole lifetime) fits
         its home shard's free list right now, minus ``reserved_by_shard``
@@ -379,20 +456,41 @@ class PagedPool:
         the engine can probe at admission time, PARK the request on
         failure, and retry after evictions free pages (the recovery path
         that replaces an uncatchable mid-cycle capacity failure). Returns
-        the home shard the probe validated against."""
-        shard = self.peek_home(seq)
-        held = len(self.tables.get(seq, []))
-        need = max(0, -(-(self.lengths.get(seq, 0) + total_tokens)
-                        // self.page_tokens) - held)
+        the home shard the probe validated against.
+
+        With a ``prefix`` match (a fresh sequence adopting shared pages),
+        the probe moves to the PREFIX's shard — the sequence's home will
+        follow the matched pages — and demand shrinks to the unmatched
+        tail: ``ceil(total_tokens / page_tokens) - prefix.full_pages``.
+        Only FULLY-matched pages subtract; a partially-matched tail page
+        is offset by the fresh page its copy-on-write replacement will
+        carve. This is how a request that would overflow the least-loaded
+        shard still admits against a fuller shard that already holds its
+        prompt."""
+        if prefix is not None and self.tables.get(seq):
+            raise ValueError(
+                f"seq {seq} already holds pages — prefix-aware prechecks "
+                f"are for fresh admissions only")
+        if prefix is not None:
+            shard = prefix.shard
+            need = max(0, -(-total_tokens // self.page_tokens)
+                       - prefix.full_pages)
+        else:
+            shard = self.peek_home(seq)
+            held = len(self.tables.get(seq, []))
+            need = max(0, -(-(self.lengths.get(seq, 0) + total_tokens)
+                            // self.page_tokens) - held)
         reserved = reserved_by_shard[shard] if reserved_by_shard is not None \
             else 0
         avail = len(self.free_by_shard[shard]) - reserved
         if need > avail:
             quarantined = len(self.quarantine_by_shard[shard])
+            matched = f", {prefix.tokens} prefix tokens matched" \
+                if prefix is not None else ""
             raise PoolCapacityError(
                 f"admission precheck: seq {seq} needs {need} pages on home "
-                f"shard {shard} for its worst-case {total_tokens} tokens but "
-                f"only {max(avail, 0)} of the shard's "
+                f"shard {shard} for its worst-case {total_tokens} tokens"
+                f"{matched} but only {max(avail, 0)} of the shard's "
                 f"{len(self.free_by_shard[shard])} free pages are "
                 f"unreserved ({reserved} reserved for in-flight sequences, "
                 f"{quarantined} quarantined) — park and retry after "
@@ -433,7 +531,9 @@ class PagedPool:
                     f"mapped and home shard {shard}'s free list is empty "
                     f"({self.free_page_count} pages free pool-wide — pages "
                     f"never straddle shards)")
-            table.append(free.pop())
+            p = free.pop()
+            self.refcounts[p] = 1
+            table.append(p)
 
     def _check_capacity(self, write_streams: Sequence[dict],
                         read_streams: Sequence[dict]) -> None:
@@ -459,6 +559,10 @@ class PagedPool:
                           // self.page_tokens))
             projected[seq] = pages
             need = pages - held
+            if new_tokens:
+                # a shared tail page is write-private: this cycle's commit
+                # will copy-on-write it, carving ONE page beyond table growth
+                need += self.pending_cow_pages(seq)
             shard = self.home.get(seq)
             if shard is None:
                 shard = self._pick_home(loads, sim_free)
@@ -509,15 +613,233 @@ class PagedPool:
                 + token_idx % self.page_tokens)
 
     def free(self, seq: int) -> list:
-        """Release a sequence's pages to their owning shards' free lists;
-        returns the freed page ids (so the caller can scrub them through
-        port D in the same macro-cycle)."""
+        """Release a sequence's CLAIM on its pages: each page's refcount
+        drops by one, and only pages reaching ZERO return to their owning
+        shards' free lists. Returns exactly those dead pages (so the caller
+        scrubs only physically-unreferenced words through port D in the
+        same macro-cycle); pages other sequences still reference DETACH —
+        their words survive untouched for the tables, and prefix-index
+        entries, still mapping them. A dead page also leaves the prefix
+        index, so matches never resolve to recycled storage."""
         pages = self.tables.pop(seq, [])
-        for p in pages:
-            self.free_by_shard[self.plan.shard_of_page(p)].append(p)
         self.lengths.pop(seq, None)
         self.home.pop(seq, None)
-        return pages
+        dead = []
+        for p in pages:
+            rc = self.refcounts.get(p, 1) - 1
+            if rc > 0:
+                self.refcounts[p] = rc
+                continue
+            self.refcounts.pop(p, None)
+            self._deregister_page(p)
+            self.free_by_shard[self.plan.shard_of_page(p)].append(p)
+            dead.append(p)
+        return dead
+
+    # ---- prefix sharing (refcounted copy-on-write) ---------------------------
+    def page_refcount(self, page: int) -> int:
+        """How many page tables reference a page (0 = free/quarantined)."""
+        return self.refcounts.get(page, 0)
+
+    def _deregister_page(self, page: int) -> None:
+        reg = self.page_reg.pop(page, None)
+        if reg is None:
+            return
+        parent, key = reg
+        kids = self.prefix_index.get(parent)
+        if kids and kids.get(key) == page:
+            del kids[key]
+            if not kids:
+                del self.prefix_index[parent]
+
+    def pending_cow_pages(self, seq: int) -> int:
+        """1 when the sequence's NEXT write must copy-on-write a shared
+        tail page — one extra page its home shard must hold beyond plain
+        table growth — else 0. Admission reservations and the transactional
+        capacity checks both consult this, so a squeeze or a crowded shard
+        can never strand an attached sequence mid-append. Always 0 when
+        nothing is shared (exclusive-ownership behavior unchanged)."""
+        length = self.lengths.get(seq, 0)
+        off = length % self.page_tokens
+        if not off:
+            return 0
+        table = self.tables.get(seq, [])
+        idx = length // self.page_tokens
+        if idx >= len(table):
+            return 0
+        return 1 if self.refcounts.get(table[idx], 1) > 1 else 0
+
+    def register_prefix(self, seq: int, tokens: Sequence[int]) -> int:
+        """Index a sequence's COMMITTED prompt KV for future admissions:
+        each page covered by ``tokens`` joins the content-addressed chain
+        under the hash of (parent chain key, the page's token tuple), plus
+        at most one sub-page tail entry ending the chain. First
+        registration wins — an identical chain already indexed keeps its
+        pages (that is the dedup), and the walk continues along the
+        existing chain so extensions converge. Returns how many pages this
+        call newly indexed. The words must already be in the pool
+        (``lengths`` covers ``tokens``) — the engine registers at prefill
+        completion, inside the macro-cycle that commits the final chunk."""
+        toks = tuple(int(t) for t in tokens)
+        committed = self.lengths.get(seq, 0)
+        if committed < len(toks):
+            raise ValueError(
+                f"seq {seq}: cannot register a {len(toks)}-token prefix — "
+                f"only {committed} tokens committed")
+        table = self.tables.get(seq, [])
+        parent = _PREFIX_ROOT
+        new = 0
+        for i in range(0, len(toks), self.page_tokens):
+            key = toks[i:i + self.page_tokens]
+            kids = self.prefix_index.setdefault(parent, {})
+            page = table[i // self.page_tokens]
+            if key not in kids and page not in self.page_reg:
+                kids[key] = page
+                self.page_reg[page] = (parent, key)
+                new += 1
+            if not kids:
+                del self.prefix_index[parent]      # keep the index sparse
+            if len(key) < self.page_tokens:
+                break                              # partial tail ends chains
+            parent = _chain_key(parent, key)
+        return new
+
+    def match_prefix(self, tokens: Sequence[int],
+                     limit: Optional[int] = None) -> Optional[PrefixMatch]:
+        """Walk the prefix index down a prompt's hash chain: full
+        registered pages match page-at-a-time, then the walk may end on ONE
+        partial match — the longest registered page head agreeing with the
+        remaining tokens (valid because word ``i`` of a page depends only
+        on tokens ``0..i`` of the whole prefix under causal attention; the
+        matcher's own writes copy-on-write around the rest). Matching never
+        crosses shards (chains are home-pinned by construction; a foreign
+        page ends the walk). Non-mutating; returns None when nothing
+        matched. ``limit`` caps matched tokens — the engine passes
+        ``len(prompt) - 1`` so at least one prompt position is always
+        recomputed (the first generated token needs its logits)."""
+        toks = tuple(int(t) for t in tokens)
+        lim = len(toks) if limit is None else min(limit, len(toks))
+        self.prefix_lookups += 1
+        pages: list = []
+        matched = 0
+        parent = _PREFIX_ROOT
+        shard = None
+        while matched + self.page_tokens <= lim:
+            key = toks[matched:matched + self.page_tokens]
+            page = self.prefix_index.get(parent, {}).get(key)
+            if page is None:
+                break
+            s = self.plan.shard_of_page(page)
+            if shard is None:
+                shard = s
+            elif s != shard:
+                break
+            pages.append(page)
+            matched += self.page_tokens
+            parent = _chain_key(parent, key)
+        rest = toks[matched:lim]
+        if rest:
+            best = None                            # (match len, page id)
+            for key, page in self.prefix_index.get(parent, {}).items():
+                if shard is not None \
+                        and self.plan.shard_of_page(page) != shard:
+                    continue
+                j = 0
+                while j < len(rest) and j < len(key) and key[j] == rest[j]:
+                    j += 1
+                # longest head wins; page id breaks ties deterministically
+                if j and (best is None or (-j, page) < (-best[0], best[1])):
+                    best = (j, page)
+            if best is not None:
+                j, page = best
+                if shard is None:
+                    shard = self.plan.shard_of_page(page)
+                pages.append(page)
+                matched += j
+        if not matched:
+            return None
+        return PrefixMatch(pages=tuple(pages), tokens=matched, shard=shard,
+                           full_pages=matched // self.page_tokens)
+
+    def attach_prefix(self, seq: int, match: PrefixMatch) -> int:
+        """Attach a FRESH sequence to matched prefix pages by refcount bump
+        — no words move, no pages pop. The sequence's home becomes the
+        shard holding the prefix (shared pages pin where first written, and
+        the unmatched tail will be carved there too), which is what lets a
+        full least-loaded shard shed load by sharing. Returns that shard.
+        Must precede any allocation for the sequence."""
+        if self.tables.get(seq):
+            raise ValueError(f"seq {seq} already holds pages — prefix "
+                             f"attach must precede allocation")
+        if not match.pages:
+            raise ValueError(f"seq {seq}: empty prefix match")
+        shard = shard_of_pages(self.plan, match.pages)
+        if shard != match.shard:
+            raise ValueError(
+                f"seq {seq}: match claims shard {match.shard} but its pages "
+                f"live on shard {shard}")
+        self.tables[seq] = list(match.pages)
+        self.lengths[seq] = match.tokens
+        self.home[seq] = shard
+        for p in match.pages:
+            self.refcounts[p] = self.refcounts.get(p, 0) + 1
+        self.prefix_hits += 1
+        self.prefix_attached_tokens += match.tokens
+        self.prefix_attached_pages += len(match.pages)
+        return shard
+
+    def gather_words(self, seq: int, positions) -> np.ndarray:
+        """Host-side staging gather of a sequence's committed words,
+        cropped to the caller-visible ``io_width``. This is how the engine
+        refills a prefill staging cache from ATTACHED prefix pages whose
+        KV it never computed — control-plane staging like the CoW source
+        read, not a ported traversal (the pool's ports only carry words
+        the model is writing or attending this macro-cycle)."""
+        addr = self._addr(seq, np.asarray(positions))
+        got = np.asarray(self.storage[jnp.asarray(addr)], np.float32)
+        return got[:, :self.io_width]
+
+    def _cow_prepare(self, seq: int, new_tokens: int):
+        """Copy-on-write remap for a write stream: when the sequence's next
+        word would land in a page OTHER tables still reference (refcount >
+        1), carve a fresh page from the FRONT of its home shard's free list
+        — growth pops the BACK, and the split keeps page identities stable
+        between the scheduler's footprint projection and this commit
+        whatever the traversal grouping — move this sequence's refcount to
+        the fresh page, and remap ONLY its table entry. Returns the
+        ``(old_words, new_words)`` address arrays whose live words the
+        caller copies through the same traversal's W port, or None when no
+        copy is needed. The shared page itself is never written again:
+        sharing is read-only by construction, which is exactly the
+        write-private contract the scheduler's hazard analysis assumes."""
+        if new_tokens <= 0:
+            return None
+        length = self.lengths.get(seq, 0)
+        off = length % self.page_tokens
+        idx = length // self.page_tokens
+        table = self.tables.get(seq, [])
+        if not off or idx >= len(table):
+            return None
+        old = table[idx]
+        if self.refcounts.get(old, 1) <= 1:
+            return None
+        shard = self.assign_home(seq)
+        free = self.free_by_shard[shard]
+        if not free:
+            raise PoolCapacityError(
+                f"seq {seq}: copy-on-write of shared page {old} needs a "
+                f"fresh page on home shard {shard} but its free list is "
+                f"empty — the capacity checks should have counted "
+                f"pending_cow_pages")
+        fresh = free.pop(0)
+        self.refcounts[old] -= 1
+        self.refcounts[fresh] = 1
+        table[idx] = fresh
+        self.cow_copies += 1
+        self.cow_words += off
+        words = np.arange(off)
+        return (old * self.page_tokens + words,
+                fresh * self.page_tokens + words)
 
     # ---- footprint projection (scheduler support) ----------------------------
     def mapped_pages(self, seq: int) -> tuple:
@@ -538,7 +860,14 @@ class PagedPool:
         the free lists the simulation copies are the ones the commit pops
         from. A demand that would exhaust its simulated free list stops
         popping (the real commit's capacity precheck raises first, before
-        any traversal issues)."""
+        any traversal issues).
+
+        Share-aware: a demand whose tail page is SHARED (refcount > 1)
+        projects the fresh page its copy-on-write will carve — from the
+        FRONT of the free list, mirroring :meth:`_cow_prepare` — and NOT
+        the shared page, so the scheduler sees the PHYSICAL write
+        footprint: shared pages are read-shared/write-private, and their
+        readers co-schedule with the CoW writer hazard-free."""
         sim_free = [list(fl) for fl in self.free_by_shard]
         sim_table: dict = {}
         sim_len: dict = {}
@@ -549,8 +878,16 @@ class PagedPool:
             # idempotent: the engine pre-assigns homes at admission, so this
             # only reads (and matches the shard the commit path will pop)
             shard = self.assign_home(seq)
-            need = -(-(length + t) // self.page_tokens)
             pages = set()
+            off = length % self.page_tokens
+            idx = length // self.page_tokens
+            if (t and off and idx < len(table)
+                    and self.refcounts.get(table[idx], 1) > 1
+                    and sim_free[shard]):
+                p = sim_free[shard].pop(0)
+                table[idx] = p
+                pages.add(p)
+            need = -(-(length + t) // self.page_tokens)
             while len(table) < need and sim_free[shard]:
                 p = sim_free[shard].pop()
                 table.append(p)
@@ -594,10 +931,23 @@ class PagedPool:
         # matching the scheduler's footprint projection
         self._check_capacity(prefills + appends, reads)
 
+        # copy-on-write remaps commit here (prefills before appends, the
+        # projection's order): each shared tail page a write stream would
+        # touch is replaced by a fresh home-shard page whose live words
+        # ride the SAME traversal's W port as extra lanes
+        cow_fill = [c for c in (self._cow_prepare(s["seq"],
+                                                  int(s["vectors"].shape[0]))
+                                for s in prefills) if c is not None]
+        cow_app = [c for c in (self._cow_prepare(s["seq"],
+                                                 int(s["vectors"].shape[0]))
+                               for s in appends) if c is not None]
+
         lanes = [0, 0, 0, 0]
-        lanes[APPEND] = sum(s["vectors"].shape[0] for s in appends)
+        lanes[APPEND] = (sum(s["vectors"].shape[0] for s in appends)
+                         + sum(len(o) for o, _ in cow_app))
         lanes[ATTN_READ] = sum(len(s["positions"]) for s in reads)
-        lanes[BULK_FILL] = sum(s["vectors"].shape[0] for s in prefills)
+        lanes[BULK_FILL] = (sum(s["vectors"].shape[0] for s in prefills)
+                            + sum(len(o) for o, _ in cow_fill))
         lanes[SCRUB] = len(scrub) * self.page_tokens
         if not any(lanes):
             # no traffic: still mirror the read input shape (one result per
@@ -614,11 +964,24 @@ class PagedPool:
         w_tiles: set = set()               # distinct W-port tiles this cycle
         r_tiles: set = set()               # distinct R-port tiles this cycle
 
-        def _write_req(streams):
+        def _write_req(streams, cow=()):
             addr = np.zeros(q, np.int32)
             data = np.zeros((q, self.spec.word_width), np.float32)
             mask = np.zeros(q, bool)
             at = 0
+            for old, new in cow:
+                # CoW copy lanes: the shared page's live words, gathered
+                # host-side (it cannot be a ported read — the copy must
+                # land in the same traversal), written to the fresh page.
+                # Disjoint from the stream's own words (those start at the
+                # copied offset), so lane order never matters.
+                vals = np.asarray(self.storage[jnp.asarray(old)],
+                                  np.float32)
+                n = len(new)
+                addr[at:at + n] = new
+                data[at:at + n] = vals
+                mask[at:at + n] = True
+                at += n
             for s in streams:
                 seq, vec = s["seq"], np.asarray(s["vectors"], np.float32)
                 t = vec.shape[0]
@@ -635,9 +998,9 @@ class PagedPool:
                                mask=jnp.asarray(mask))
 
         if prefills:
-            reqs[BULK_FILL] = _write_req(prefills)
+            reqs[BULK_FILL] = _write_req(prefills, cow_fill)
         if appends:
-            reqs[APPEND] = _write_req(appends)
+            reqs[APPEND] = _write_req(appends, cow_app)
         if scrub:
             addr = np.zeros(q, np.int32)
             mask = np.zeros(q, bool)

@@ -43,6 +43,15 @@ explicit load-shedding decisions, both COUNTED (``rejected`` /
 the graceful-degradation stage BEFORE shedding — on sustained ready-queue
 pressure it shrinks the engine's prefill chunk and caps admissions per
 cycle, restoring both when pressure clears.
+
+**Prefix-aware admission** (:func:`prefix_admission_plan`, also
+admission-layer policy): the head's prompt is matched against the pool's
+content-addressed prefix index BEFORE the capacity precheck, so matched
+pages — attachable by refcount bump — never count as page demand and the
+precheck probes the PREFIX's shard (where the shared pages live) instead
+of the least-loaded one. A request that would park or shed on a full home
+shard can therefore admit against a fuller shard that already holds its
+prompt, and only its unmatched tail costs prefill compute.
 """
 from __future__ import annotations
 
@@ -135,6 +144,27 @@ class AdmissionQueue:
             shed.append(self._q.popleft())
         self.shed_expired += len(shed)
         return shed
+
+
+def prefix_admission_plan(pool, prompt, max_new: int, *,
+                          enabled: bool = True):
+    """The admission-layer prefix policy: (match, worst_tokens) for one
+    candidate request.
+
+    ``worst`` is the request's worst-case lifetime word demand — prompt
+    plus generated tokens, minus the final token whose KV never lands
+    (eviction precedes its append). The match, when ``enabled``, is capped
+    at ``len(prompt) - 1`` tokens: the LAST prompt position is always
+    recomputed, because the first generated token is read off its prefill
+    logits (a full-prompt attach would leave nothing to take logits from).
+    Matching runs BEFORE the capacity precheck by contract — callers pass
+    the match to :meth:`PagedPool.admission_precheck` so only the
+    unmatched tail counts as page demand, on the prefix's shard."""
+    worst = len(prompt) + max_new - 1
+    match = None
+    if enabled and len(prompt) > 1:
+        match = pool.match_prefix(prompt, limit=len(prompt) - 1)
+    return match, worst
 
 
 @dataclasses.dataclass

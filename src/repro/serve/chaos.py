@@ -27,11 +27,15 @@ scheduled experiment:
 
 * :func:`check_invariants` — the engine-wide consistency audit the
   harness runs after EVERY injection and release (and once more at the
-  end): free + quarantined + mapped pages partition pool capacity with no
-  page owned twice, no orphaned page tables (every table belongs to a
-  live slot), page tables sized exactly for their sequence's committed
-  words, every page on the shard its free list / table placement claims,
-  and slot bookkeeping in sync with the pool. A violation raises
+  end): free ∪ quarantined ∪ ⋃mapped-with-multiplicity partitions pool
+  capacity (a page in k tables is owned exactly k times, all by its
+  refcount; free/quarantined pages are owned once and never also
+  mapped), refcounts equal table multiplicity exactly, quarantine never
+  holds a referenced page, prefix-index registrations only cover live
+  pages, no orphaned page tables (every table belongs to a live slot),
+  page tables sized exactly for their sequence's committed words, every
+  page on the shard its free list / table placement claims, and slot
+  bookkeeping in sync with the pool. A violation raises
   :class:`InvariantViolation` — a hard CI failure, never a warning.
 
 * :class:`ChaosHarness` — plugs into ``drive(..., on_cycle=harness)``:
@@ -133,33 +137,69 @@ def check_invariants(eng) -> None:
 
     The invariants (the chaos gate's hard failures):
 
-    1. **Partition**: free ∪ quarantined ∪ mapped page ids == exactly
-       ``0..n_pages-1``, each page owned once.
-    2. **No orphans**: every page table belongs to a request live in a
+    1. **Partition with multiplicity**: free ∪ quarantined ∪
+       ⋃mapped-with-multiplicity covers exactly ``0..n_pages-1``. A page
+       in k tables is owned k times — all k accounted for by its
+       refcount; free and quarantined pages are owned exactly once and
+       never also mapped.
+    2. **Refcount exactness**: ``pool.refcounts[p]`` equals the number
+       of table slots referencing ``p``, for EVERY mapped page; no
+       refcount entry survives for an unmapped page (no rc-0 retention);
+       every prefix-index-registered page is live (rc >= 1).
+    3. **No orphans**: every page table belongs to a request live in a
        slot (finished/cancelled sequences were freed by EVICT).
-    3. **Table sizing**: each sequence's table holds exactly
+    4. **Table sizing**: each sequence's table holds exactly
        ``ceil(words / page_tokens)`` pages.
-    4. **Shard placement**: every free/quarantined page sits in ITS
-       shard's list, and every sequence's pages live on its home shard.
-    5. **Slot bookkeeping**: ``slot_len`` matches the pool's committed
+    5. **Shard placement**: every free/quarantined page sits in ITS
+       shard's list, and every sequence's pages live on its home shard
+       (prefix attaches re-home the sequence to the shared pages'
+       shard, so this stays exact under sharing).
+    6. **Slot bookkeeping**: ``slot_len`` matches the pool's committed
        word count for every occupied slot.
     """
     pool = eng.pool
     n_pages = pool.plan.n_pages
 
     mapped = _mapped_pages(pool)
+    mult: dict = {}
+    for p in mapped:
+        mult[p] = mult.get(p, 0) + 1
     free = pool.free_pages
     quar = list(pool.quarantined_pages)
-    owned = mapped + free + quar
-    if len(set(owned)) != len(owned):
-        dup = sorted(p for p in set(owned) if owned.count(p) > 1)
-        raise InvariantViolation(f"pages owned twice: {dup}")
+    exclusive = free + quar
+    if len(set(exclusive)) != len(exclusive):
+        dup = sorted(p for p in set(exclusive)
+                     if exclusive.count(p) > 1)
+        raise InvariantViolation(
+            f"pages free/quarantined twice: {dup}")
+    overlap = set(exclusive) & set(mult)
+    if overlap:
+        raise InvariantViolation(
+            f"mapped pages also free/quarantined: {sorted(overlap)}")
+    owned = set(exclusive) | set(mult)
     if sorted(owned) != list(range(n_pages)):
-        lost = sorted(set(range(n_pages)) - set(owned))
-        extra = sorted(set(owned) - set(range(n_pages)))
+        lost = sorted(set(range(n_pages)) - owned)
+        extra = sorted(owned - set(range(n_pages)))
         raise InvariantViolation(
             f"free+quarantined+mapped do not partition capacity "
             f"(lost {lost}, alien {extra})")
+
+    # refcounts mirror table multiplicity EXACTLY: every mapped page has
+    # a refcount equal to how many table slots hold it, and no refcount
+    # outlives its last reference (the no-tombstone contract)
+    bad = {p: (pool.refcounts.get(p), k) for p, k in mult.items()
+           if pool.refcounts.get(p) != k}
+    if bad:
+        raise InvariantViolation(
+            f"refcounts != table multiplicity (page: (rc, refs)): {bad}")
+    stale = sorted(set(pool.refcounts) - set(mult))
+    if stale:
+        raise InvariantViolation(
+            f"refcounts retained for unmapped pages: {stale}")
+    dead_reg = sorted(p for p in pool.page_reg if p not in mult)
+    if dead_reg:
+        raise InvariantViolation(
+            f"prefix index registers unmapped pages: {dead_reg}")
 
     live = {r.rid for r in eng.slot_req if r is not None}
     orphans = set(pool.tables) - live

@@ -151,7 +151,8 @@ from repro.memory.paged_kv import (APPEND, ATTN_READ, BULK_FILL, SCRUB,
                                    seq_tile_buckets)
 from repro.models import decode_step, prefill_chunk
 from repro.serve import scheduler as sched_mod
-from repro.serve.admission import AdmissionQueue, OverloadController
+from repro.serve.admission import (AdmissionQueue, OverloadController,
+                                   prefix_admission_plan)
 from repro.serve.scheduler import PhaseTxn, PortTxn
 
 EVICT, PREFILL, DECODE, STATUS = 0, 1, 2, 3
@@ -294,7 +295,8 @@ class MultiPortEngine:
                  max_queue_depth: Optional[int] = None,
                  default_ttl_ticks: Optional[float] = None,
                  capacity_retry_limit: int = 16,
-                 overload: Optional[OverloadController] = None):
+                 overload: Optional[OverloadController] = None,
+                 prefix_cache: bool = False):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise ValueError("engine currently serves KV-cache families")
         if kernel_mode not in ("pallas", "reference"):
@@ -399,6 +401,15 @@ class MultiPortEngine:
         self.default_ttl_ticks = default_ttl_ticks
         self.capacity_retry_limit = capacity_retry_limit
         self.overload = overload
+        # refcounted prefix caching: admission matches each prompt against
+        # the pool's content-addressed prefix index BEFORE the capacity
+        # precheck (matched pages attach by refcount bump; only the
+        # unmatched tail counts as demand and prefill compute), and every
+        # completed prefill registers its prompt pages for future matches.
+        # Default OFF: the oracle engines stay bit-identical to exclusive
+        # ownership — with it ON, greedy tokens are still identical (the
+        # adopted words are the words prefill would have recomputed).
+        self.prefix_cache = prefix_cache
         self.shed: list[Request] = []       # all shed requests, any reason
         self.shed_deadline = 0              # expired before admission
         self.shed_queue_full = 0            # rejected by the bounded queue
@@ -427,6 +438,9 @@ class MultiPortEngine:
         self._inflight: Optional[_InFlight] = None
         self._stage_bufs = _DoubleBuffer()
         self._freed_slots_this_cycle: set = set()
+        # prompts whose prefill completed this cycle, registered into the
+        # pool's prefix index after the cycle's traversals commit
+        self._register_pending: list = []
         self._token_events: list[Request] = []
         self.decode_steps = 0           # macro-cycles that carried decode traffic
         self.decode_traversals = 0      # pool traversals those cycles needed
@@ -645,6 +659,18 @@ class MultiPortEngine:
         return max(per) / (total / self.n_kv_shards)
 
     @property
+    def prefix_stats(self) -> dict:
+        """Prefix-cache observability: index lookups/hits at admission,
+        tokens and pages adopted without recompute, and the copy-on-write
+        traffic those adoptions later cost. All zero with
+        ``prefix_cache=False``."""
+        p = self.pool
+        return {"lookups": p.prefix_lookups, "hits": p.prefix_hits,
+                "attached_tokens": p.prefix_attached_tokens,
+                "attached_pages": p.prefix_attached_pages,
+                "cow_copies": p.cow_copies, "cow_words": p.cow_words}
+
+    @property
     def coschedule_frac(self) -> float:
         """Fraction of multi-phase macro-cycles (cycles whose pool traffic
         spans >1 engine phase) the scheduler packed into a shared traversal
@@ -780,7 +806,10 @@ class MultiPortEngine:
                 continue
             worst = len(r.prompt) + r.max_new - 1
             held = len(self.pool.tables.get(r.rid, ()))
-            need = max(0, -(-worst // pt) - held)
+            # a shared tail page is write-private: the next append will
+            # copy-on-write it, carving one page beyond plain table growth
+            need = (max(0, -(-worst // pt) - held)
+                    + self.pool.pending_cow_pages(r.rid))
             reserved[self.pool.assign_home(r.rid)] += need
         return reserved
 
@@ -811,10 +840,16 @@ class MultiPortEngine:
             head = self.admission.head()
             if reserved is None:
                 reserved = self._reserved_pages_by_shard()
-            worst = len(head.prompt) + head.max_new - 1
+            # prefix-aware admission: match BEFORE the capacity precheck,
+            # so matched pages (attachable by refcount bump) never count
+            # as demand and the probe moves to the prefix's shard
+            match, worst = prefix_admission_plan(
+                self.pool, head.prompt, head.max_new,
+                enabled=self.prefix_cache)
             try:
                 shard = self.pool.admission_precheck(
-                    head.rid, worst, reserved_by_shard=reserved)
+                    head.rid, worst, reserved_by_shard=reserved,
+                    prefix=match)
             except PoolCapacityError:
                 if head.capacity_retries >= self.capacity_retry_limit:
                     # eviction-aware backoff exhausted: shed (drop_head
@@ -835,7 +870,9 @@ class MultiPortEngine:
             admitted_now += 1
             if req.capacity_retries:
                 self.capacity_recoveries += 1
-            reserved[shard] += -(-worst // self.pool.page_tokens)
+            full = match.full_pages if match is not None else 0
+            reserved[shard] += max(
+                0, -(-worst // self.pool.page_tokens) - full)
             req.slot = slot
             req.admit_cycle = self.cycles
             req.admit_tick = now
@@ -846,14 +883,33 @@ class MultiPortEngine:
             if self.cfg.input_mode == "embeddings":
                 raise NotImplementedError("engine demo serves token models")
             self.slot_req[slot] = req
+            attached = 0
+            if match is not None:
+                # adopt the matched prefix by refcount bump: the request's
+                # home FOLLOWS the shared pages' shard, its table starts at
+                # the matched pages, and prefill resumes at the tail
+                self.pool.attach_prefix(req.rid, match)
+                attached = match.tokens
             # device-aware placement: the home shard is fixed at admission
-            # (least-loaded), BEFORE the first page is carved, so the first
-            # chunk's compute can already be grouped onto its device
+            # (least-loaded, or the prefix's shard), BEFORE the first page
+            # is carved, so the first chunk's compute can already be
+            # grouped onto its device
             self.pool.assign_home(req.rid)
-            self._prefilling[slot] = _PrefillState(
-                consumed=0,
+            self.slot_len[slot] = attached
+            ps = _PrefillState(
+                consumed=attached,
                 stage_k=np.zeros((nl, self.max_len, hkv, hd), np.float32),
                 stage_v=np.zeros((nl, self.max_len, hkv, hd), np.float32))
+            if attached:
+                # the chunk compute attends over the STAGED running cache,
+                # not the pool — backfill the stage with the adopted words
+                # (inverse of _kv_words) so the tail's attention sees the
+                # prefix KV it never computed
+                w = self.pool.gather_words(req.rid, np.arange(attached))
+                w = w.reshape(attached, nl, 2, hkv, hd)
+                ps.stage_k[:, :attached] = np.moveaxis(w[:, :, 0], 0, 1)
+                ps.stage_v[:, :attached] = np.moveaxis(w[:, :, 1], 0, 1)
+            self._prefilling[slot] = ps
         if not self._prefilling:
             return []
 
@@ -932,12 +988,31 @@ class MultiPortEngine:
                 # prefill complete: the FIRST generated token comes from the
                 # prefill logits (no re-feed of prompt[-1] through decode)
                 del self._prefilling[slot]
+                if self.prefix_cache:
+                    # registration is deferred past this cycle's pool
+                    # commit — the final chunk's words are not in the pool
+                    # yet, and nothing can match before the next cycle's
+                    # admissions anyway
+                    self._register_pending.append((req.rid,
+                                                   tuple(req.prompt)))
                 req.generated.append(int(np.argmax(lg[j])))
                 if len(req.generated) >= req.max_new:
                     req.done = True
                 # stamped AFTER this cycle's pool commit (the token isn't
                 # "served" until its KV traversal lands) — see step()
                 self._token_events.append(req)
+            elif self.prefix_cache:
+                # register the full pages committed so far: a sharer that
+                # arrives mid-prefill can attach the in-progress prefix
+                # instead of waiting for completion. Only whole pages — a
+                # partial-tail entry would end the chain and permanently
+                # shadow the full-page entry (first registration wins),
+                # so the sub-page tail is left for the completion call.
+                pt = self.pool.page_tokens
+                full = ps.consumed - ps.consumed % pt
+                if full >= pt:
+                    self._register_pending.append(
+                        (req.rid, tuple(req.prompt[:full])))
         return streams
 
     def _collect_decode(self):
@@ -1210,6 +1285,12 @@ class MultiPortEngine:
                         and self.slot_req[i].rid == s["seq"])
             self.slot_len[slot] += 1
             self._pending.pop(slot, None)
+        # completed prompts' pages join the prefix index now that their
+        # final chunk's words are committed (see _collect_prefill)
+        for rid, ptoks in self._register_pending:
+            if rid in self.pool.tables:
+                self.pool.register_prefix(rid, ptoks)
+        self._register_pending = []
 
         dt = self.pool.traversals - t0
         if dt == 0:

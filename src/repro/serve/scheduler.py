@@ -30,6 +30,20 @@ and a later phase ``b``:
   reads in program order — IS the fused kernel's same-cycle W->R
   contract).
 
+**Refcounted page sharing (PR 9).** With copy-on-write prefix sharing a
+page can appear in MANY sequences' tables, so the same physical page now
+shows up in several phases' READ footprints in one cycle — that is RAR,
+co-schedulable by the rules above, and exactly the point: N decodes
+attending over one shared system-prompt page ride one traversal. The
+hazard analysis needs NO special case because shared pages are
+read-shared / write-private by construction upstream: the pool never
+lets a write land on a refcount>1 page — the appender's footprint
+(``project_write_pages``) carries the FRESH CoW page it will remap to,
+and the CoW copy itself is extra W-port lanes inside that same phase's
+write transaction (same traversal, same port, same commit). A write
+footprint therefore only ever contains write-private pages, and the
+RAW/WAR rules keep doing their job against the readers unchanged.
+
 ``mode="static"`` keeps the old rigid walk as the oracle: one traversal
 per phase, program order, no co-scheduling. ``max_ports`` (1-4) bounds a
 traversal's port count — the paper's B1B0 knob; phases wider than the

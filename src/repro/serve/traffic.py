@@ -23,6 +23,21 @@ streams. This module provides that stream:
   carry). The engine under test serves ONE architecture's weights, so
   scenarios modulate LENGTHS (and tag the request), not token ids.
 
+**Shared-prefix pools (PR 9).** Real traffic is not i.i.d. tokens:
+requests reusing one deployment share its system prompt / few-shot
+header, which is exactly what the pool's refcounted prefix cache
+exploits. A :class:`Scenario` can therefore carry a CONTENT pool —
+``shared_prefixes`` distinct headers of ``prefix_tokens`` tokens each —
+and every request drawn under that scenario has its prompt's head
+replaced by one of those headers (at least one trailing token always
+stays request-private, so prompts never fully collide). The headers come
+from a PER-SCENARIO rng seeded by ``(seed, crc32(name))`` — ``crc32``
+because ``hash(str)`` is randomized per process — so the MAIN rng stream
+is consumed identically with pools on or off: lengths, arrival ticks and
+body tokens of every other scenario are bit-identical, and the default
+(pool-less) spread reproduces PR 7 schedules exactly. Prompts serialize
+whole, so traces round-trip with no special casing.
+
 **The clock is virtual.** Arrival times are in POOL-TRAVERSAL ticks — the
 engine's hardware time unit (one tick = one physical pool traversal; an
 idle macro-cycle costs one tick). Scheduling arrivals in ticks is what
@@ -41,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import zlib
 from collections import deque
 from typing import Optional, Sequence
 
@@ -65,22 +81,40 @@ class Arrival:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A length-distribution profile: scale factors applied to the base
+    """A traffic profile: length scale factors applied to the base
     heavy-tailed prompt/output draws, tagged with the registry arch that
-    induced it."""
+    induced it — plus an optional shared-header content pool
+    (``shared_prefixes`` headers x ``prefix_tokens`` tokens) modelling
+    the deployment's common system prompt / few-shot preamble."""
 
     name: str
     prompt_scale: float
     output_scale: float
+    shared_prefixes: int = 0       # pool size; 0 = length-only scenario
+    prefix_tokens: int = 0         # header length in tokens
+
+    def __post_init__(self):
+        if self.shared_prefixes < 0 or self.prefix_tokens < 0:
+            raise ValueError(f"negative prefix pool geometry: {self}")
+        if bool(self.shared_prefixes) != bool(self.prefix_tokens):
+            raise ValueError(
+                "shared_prefixes and prefix_tokens must be both zero or "
+                f"both positive, got {self.shared_prefixes}/"
+                f"{self.prefix_tokens}")
 
 
-def scenario_spread(arch_ids: Optional[Sequence[str]] = None
+def scenario_spread(arch_ids: Optional[Sequence[str]] = None, *,
+                    shared_prefixes: int = 0, prefix_tokens: int = 0
                     ) -> tuple[Scenario, ...]:
     """One scenario per registry architecture, length scales spread over
     [0.5x, 2.0x] by the arch's reduced attention geometry (layers x heads x
     head_dim — a deterministic, config-derived proxy for how long that
     arch's deployments run). The spread is what keeps the traffic mix from
-    collapsing to one effective length distribution."""
+    collapsing to one effective length distribution. ``shared_prefixes``/
+    ``prefix_tokens`` give EVERY scenario in the spread its own header
+    pool of that geometry (the headers themselves still differ per
+    scenario — each pool is seeded off the scenario name); the zero
+    default keeps the spread length-only, exactly PR 7's behavior."""
     ids = tuple(arch_ids) if arch_ids is not None else registry.ARCH_IDS
     sizes = {}
     for a in ids:
@@ -96,7 +130,9 @@ def scenario_spread(arch_ids: Optional[Sequence[str]] = None
     return tuple(
         Scenario(name=a, prompt_scale=_scale(sizes[a]),
                  # outputs skew shorter than prompts but keep the spread
-                 output_scale=0.5 + 0.5 * _scale(sizes[a]))
+                 output_scale=0.5 + 0.5 * _scale(sizes[a]),
+                 shared_prefixes=shared_prefixes,
+                 prefix_tokens=prefix_tokens)
         for a in ids)
 
 
@@ -119,7 +155,15 @@ def poisson_arrivals(n_requests: int, rate: float, *, seed: int, vocab: int,
     ``rate`` requests per virtual tick, each with bounded-Pareto prompt and
     output lengths scaled by a per-request scenario drawn uniformly from
     ``scenarios`` (default: the full registry spread). Deterministic in
-    ``seed``; token ids uniform over ``vocab``."""
+    ``seed``; token ids uniform over ``vocab``.
+
+    Scenarios carrying a shared-prefix pool overlay one of their headers
+    onto each request's prompt head (the body keeps the request-private
+    draw, and at least the final token always stays private). Headers and
+    header picks come from per-scenario rngs seeded ``(seed,
+    crc32(name))`` so the main stream is consumed identically whether any
+    scenario has a pool or not — ticks, lengths, scenario assignment and
+    body tokens never move when pools are switched on."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     if not min_prompt <= max_prompt:
@@ -128,6 +172,15 @@ def poisson_arrivals(n_requests: int, rate: float, *, seed: int, vocab: int,
         raise ValueError(f"bad output bounds [{min_output}, {max_output}]")
     scen = tuple(scenarios) if scenarios is not None else scenario_spread()
     rng = np.random.default_rng(seed)
+    headers: dict = {}      # scenario index -> (header tuples, pick rng)
+    for j, s in enumerate(scen):
+        if s.shared_prefixes:
+            hrng = np.random.default_rng(
+                [seed, zlib.crc32(s.name.encode())])
+            headers[j] = (tuple(
+                tuple(int(t) for t in rng_row)
+                for rng_row in hrng.integers(
+                    0, vocab, (s.shared_prefixes, s.prefix_tokens))), hrng)
     gaps = rng.exponential(1.0 / rate, n_requests)
     ticks = np.floor(np.cumsum(gaps)).astype(np.int64)
     plen = _bounded_pareto(rng, alpha, min_prompt, max_prompt, n_requests)
@@ -141,6 +194,12 @@ def poisson_arrivals(n_requests: int, rate: float, *, seed: int, vocab: int,
         o = int(np.clip(round(olen[i] * s.output_scale),
                         min_output, max_output))
         prompt = tuple(int(t) for t in rng.integers(0, vocab, p))
+        if which[i] in headers:
+            pool, hrng = headers[which[i]]
+            head = pool[int(hrng.integers(0, len(pool)))]
+            k = min(len(head), p - 1)   # last token stays request-private
+            if k > 0:
+                prompt = head[:k] + prompt[k:]
         out.append(Arrival(arrival_tick=int(ticks[i]), prompt=prompt,
                            max_new=o, scenario=s.name))
     return tuple(out)

@@ -1,0 +1,423 @@
+"""Refcounted copy-on-write page sharing: the prefix cache end-to-end.
+
+Pool layer: content-addressed registration/matching at page granularity,
+attach by refcount bump, detach-not-scrub on free, CoW on append into a
+shared tail, share-aware footprint projection, and quarantine refusing
+referenced pages. Engine layer: prefix-aware admission shrinks both page
+demand and prefill compute while greedy tokens stay BIT-IDENTICAL to the
+cache-off run (sharing is a storage optimization, never a numerics
+change). Plus the satellite regressions: the over-precheck (a request
+shed for capacity a prefix hit would have satisfied), scheduler RAR
+co-scheduling over shared pages, chaos invariants under sharing, and the
+8-shard cross-shard admission arc (subprocess, forced host devices).
+
+Pool geometry below: 8 pages x 4 tokens (direct pool tests) or
+page_tokens == seq_tile == 8 with max_len=32/64 (engine tests).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.memory.paged_kv import PagedPool, PoolCapacityError
+from repro.models import init_params
+from repro.serve.chaos import InvariantViolation, check_invariants
+from repro.serve.engine import MultiPortEngine
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _pool(**kw):
+    return PagedPool.create(n_pages=8, page_tokens=4, word_width=8,
+                            num_banks=4, **kw)
+
+
+def _vecs(tokens):
+    """Deterministic token -> word embedding for content checks."""
+    toks = np.asarray(tokens, np.float32)
+    return toks[:, None] + np.arange(8, dtype=np.float32) / 8.0
+
+
+def _seed_registered(pool, seq, tokens):
+    pool.cycle(prefill={"seq": seq, "vectors": _vecs(tokens)})
+    pool.register_prefix(seq, tokens)
+
+
+# ---- pool: registration, matching, attach ---------------------------------
+
+def test_match_full_and_partial_pages():
+    pool = _pool()
+    toks = list(range(10, 20))                       # 10 tokens: 2.5 pages
+    _seed_registered(pool, 1, toks)
+    m = pool.match_prefix(toks)
+    assert m.tokens == 10 and len(m.pages) == 3      # 2 full + partial tail
+    assert m.full_pages == 2
+    # a prompt agreeing on 6 tokens matches 1 full page + 2-token partial
+    m2 = pool.match_prefix(toks[:6] + [99, 98])
+    assert m2.tokens == 6 and m2.full_pages == 1 and len(m2.pages) == 2
+    # divergence inside the first page: no full page, partial head only
+    m3 = pool.match_prefix(toks[:3] + [99])
+    assert m3.tokens == 3 and m3.full_pages == 0
+    assert pool.match_prefix([99, 98, 97]) is None
+    # the limit cap (engine passes len(prompt) - 1)
+    m4 = pool.match_prefix(toks, limit=8)
+    assert m4.tokens == 8 and m4.full_pages == 2 and len(m4.pages) == 2
+
+
+def test_attach_bumps_refcounts_and_free_detaches():
+    pool = _pool()
+    toks = list(range(30, 40))
+    _seed_registered(pool, 1, toks)
+    m = pool.match_prefix(toks)
+    pool.attach_prefix(2, m)
+    assert pool.lengths[2] == 10 and pool.tables[2] == list(m.pages)
+    assert all(pool.page_refcount(p) == 2 for p in m.pages)
+    # attached words read back identically to the registrant's
+    np.testing.assert_allclose(
+        pool.gather_words(2, np.arange(10)), _vecs(toks), atol=1e-6)
+    # freeing the REGISTRANT detaches: no page dies, index survives via seq 2
+    assert pool.free(1) == []
+    assert all(pool.page_refcount(p) == 1 for p in m.pages)
+    assert pool.match_prefix(toks).pages == m.pages
+    # freeing the last holder kills the pages and their index entries
+    assert sorted(pool.free(2)) == sorted(m.pages)
+    assert pool.match_prefix(toks) is None
+    assert pool.free_page_count == 8
+    assert not pool.refcounts and not pool.page_reg and not pool.prefix_index
+
+
+def test_attach_requires_fresh_sequence():
+    pool = _pool()
+    _seed_registered(pool, 1, list(range(8)))
+    m = pool.match_prefix(list(range(8)))
+    pool.cycle(prefill={"seq": 2, "vectors": _vecs([50, 51])})
+    with pytest.raises(ValueError, match="already holds pages"):
+        pool.attach_prefix(2, m)
+
+
+def test_cow_on_append_into_shared_tail():
+    """Appending into a refcount>1 partial page copies the live words to a
+    fresh page in the same traversal and remaps ONLY the appender; the
+    other holder's reads are untouched."""
+    pool = _pool()
+    toks = list(range(60, 66))                       # 6 tokens: 1.5 pages
+    _seed_registered(pool, 1, toks)
+    pool.attach_prefix(2, pool.match_prefix(toks))
+    shared_tail = pool.tables[2][1]
+    pool.cycle(append={"seq": 2, "vectors": _vecs([77])})
+    assert pool.cow_copies == 1 and pool.cow_words == 2
+    assert pool.tables[2][1] != shared_tail          # remapped
+    assert pool.tables[1][1] == shared_tail          # registrant untouched
+    assert pool.page_refcount(shared_tail) == 1
+    np.testing.assert_allclose(
+        pool.gather_words(2, np.arange(7)), _vecs(toks + [77]), atol=1e-6)
+    np.testing.assert_allclose(
+        pool.gather_words(1, np.arange(6)), _vecs(toks), atol=1e-6)
+
+
+def test_project_write_pages_carries_the_cow_page():
+    """The scheduler's write footprint must contain the PHYSICAL page the
+    commit will write — the fresh CoW page, never the shared one."""
+    pool = _pool()
+    toks = list(range(40, 46))
+    _seed_registered(pool, 1, toks)
+    pool.attach_prefix(2, pool.match_prefix(toks))
+    shared_tail = pool.tables[2][1]
+    foot = pool.project_write_pages([(2, 1)])[0]
+    assert shared_tail not in foot
+    pool.cycle(append={"seq": 2, "vectors": _vecs([88])})
+    assert pool.tables[2][1] in foot                 # projection == commit
+
+
+def test_admission_precheck_subtracts_matched_pages():
+    """Satellite 1 (pool half): worst-case demand subtracts the FULLY
+    matched pages; the partial tail is offset by its CoW replacement."""
+    pool = _pool()
+    toks = list(range(8))                            # 2 full pages
+    _seed_registered(pool, 1, toks)
+    pool.cycle(prefill={"seq": 9, "vectors": _vecs(range(100, 116))})  # 4 pg
+    assert pool.free_page_count == 2
+    m = pool.match_prefix(toks + [50], limit=8)
+    assert m.full_pages == 2
+    # worst 12 words -> 3 pages; without the match this cannot fit
+    with pytest.raises(PoolCapacityError):
+        pool.admission_precheck(2, 12)
+    pool.admission_precheck(2, 12, prefix=m)         # 3 - 2 matched: fits
+    # partial-tail arithmetic: 7 matched of 8-token prompt, worst 12
+    m2 = pool.match_prefix(toks[:7] + [60], limit=7)
+    assert m2.tokens == 7 and m2.full_pages == 1
+    pool.admission_precheck(3, 12, prefix=m2)        # 3 - 1 = 2 pages: fits
+
+
+def test_quarantine_refuses_referenced_page():
+    pool = _pool()
+    _seed_registered(pool, 1, list(range(4)))
+    page = pool.tables[1][0]
+    # corrupt the books deliberately: a mapped page on the free list
+    pool.free_by_shard[0].append(page)
+    with pytest.raises(ValueError, match="refcount"):
+        pool.quarantine(8)
+    pool.free_by_shard[0].remove(page)
+    pool.quarantine(8)                               # clean books: fine
+
+
+def test_pending_cow_counted_in_capacity_check():
+    """The transactional capacity check reserves the CoW replacement page,
+    so a full pool rejects the append instead of failing mid-copy."""
+    pool = _pool()
+    toks = list(range(70, 76))                       # 1.5 pages
+    _seed_registered(pool, 1, toks)
+    pool.attach_prefix(2, pool.match_prefix(toks))
+    # BOTH holders would CoW — neither owns the shared tail exclusively
+    assert pool.pending_cow_pages(2) == 1 and pool.pending_cow_pages(1) == 1
+    pool.cycle(prefill={"seq": 9, "vectors": _vecs(range(100, 124))})  # 6 pg
+    assert pool.free_page_count == 0
+    with pytest.raises(PoolCapacityError):
+        pool.cycle(append={"seq": 2, "vectors": _vecs([77])})
+    assert pool.tables[2][1] == pool.tables[1][1]    # nothing moved
+    pool.free(9)
+    pool.cycle(append={"seq": 2, "vectors": _vecs([77])})
+    assert pool.cow_copies == 1
+
+
+# ---- engine: identity, hit path, over-precheck regression -----------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_slots", kw["slots"])
+    return MultiPortEngine(params, cfg, max_len=32, seq_tile=8,
+                           chunk_tokens=8, page_tokens=8,
+                           kernel_mode="reference", **kw)
+
+
+def _staggered(eng):
+    """One registrant decoding while two sharers arrive: b repeats the
+    prompt exactly, c diverges after 10 tokens (partial-page match)."""
+    prompt = list(range(7, 19))                      # 12 tokens
+    a = eng.submit(prompt, max_new=8)
+    for _ in range(4):                               # a registers, keeps going
+        eng.step()
+    b = eng.submit(prompt, max_new=4)
+    c = eng.submit(prompt[:10] + [99, 98], max_new=4)
+    eng.run()
+    return [r.generated for r in (a, b, c)], eng
+
+
+def test_engine_tokens_bit_identical_and_hits(served):
+    cfg, params = served
+    t_off, e_off = _staggered(_engine(params, cfg, prefix_cache=False))
+    t_on, e_on = _staggered(_engine(params, cfg, prefix_cache=True))
+    assert t_on == t_off                             # never a numerics change
+    assert e_on.prefix_stats["hits"] >= 2            # b full, c partial
+    assert e_on.pool.cow_copies >= 1                 # partial tails diverge
+    assert e_on.prefill_tokens < e_off.prefill_tokens
+    assert e_off.prefix_stats["hits"] == 0 and e_off.pool.cow_copies == 0
+    # full drain: every page home, no refcount/index residue
+    for eng in (e_on, e_off):
+        assert eng.pool.free_page_count == eng.pool.plan.n_pages
+        assert not eng.pool.refcounts and not eng.pool.prefix_index
+        check_invariants(eng)
+
+
+def test_shed_for_capacity_a_prefix_hit_satisfies(served):
+    """Satellite 1 (engine half): under a squeeze, the cache-off precheck
+    sheds a request whose demand a prefix hit covers; cache-on admits it
+    with tokens identical to an unsqueezed oracle."""
+    cfg, params = served
+    prompt = list(range(20, 28))                     # 8 tokens == 1 page
+
+    def scenario(prefix_cache):
+        eng = _engine(params, cfg, prefix_cache=prefix_cache,
+                      capacity_retry_limit=2)
+        a = eng.submit(prompt, max_new=6)            # worst 13 -> 2 pages
+        while eng.pool.lengths.get(a.rid, 0) < 9:    # 2 pages held, 0 reserved
+            eng.step()
+        assert eng.pool.free_page_count == 6
+        eng.pool.quarantine(5)                       # 1 page left
+        b = eng.submit(prompt + [40, 41], max_new=2)  # worst 11 -> 2 pages
+        eng.run()
+        return a, b, eng
+
+    a_off, b_off, e_off = scenario(False)
+    assert b_off.shed_reason == "capacity" and not b_off.generated
+    a_on, b_on, e_on = scenario(True)
+    assert b_on.shed_reason is None and len(b_on.generated) == 2
+    assert e_on.pool.prefix_hits >= 1
+    assert a_on.generated == a_off.generated
+    oracle = _engine(params, cfg)
+    ob = oracle.submit(prompt + [40, 41], max_new=2)
+    oracle.run()
+    assert b_on.generated == ob.generated
+
+
+# ---- scheduler: shared pages are RAR, CoW pages are write-private ---------
+
+def test_shared_page_reads_co_schedule_as_rar():
+    from repro.core.ports import READ, WRITE
+    from repro.serve.scheduler import PhaseTxn, PortTxn, conflicts, plan
+
+    a = PhaseTxn(1, "decode-a", (PortTxn(1, READ, frozenset({3})),))
+    b = PhaseTxn(2, "decode-b", (PortTxn(2, READ, frozenset({3})),))
+    assert conflicts(a, b) is None                   # shared page: RAR
+    sched = plan([a, b], mode="ooo")
+    assert len(sched.traversals) == 1 and sched.co_scheduled
+    # a CoW write goes to the FRESH page, so a writer whose footprint held
+    # the shared page would be a WAR split — the pool never produces that
+    w = PhaseTxn(3, "append", (PortTxn(0, WRITE, frozenset({3})),))
+    assert conflicts(a, w) == "war"
+    w_cow = PhaseTxn(3, "append", (PortTxn(0, WRITE, frozenset({7})),))
+    assert conflicts(a, w_cow) is None
+
+
+# ---- chaos: refcount invariants under sharing -----------------------------
+
+def test_check_invariants_catches_refcount_drift(served):
+    cfg, params = served
+    eng = _engine(params, cfg, prefix_cache=True)
+    prompt = list(range(7, 19))
+    a = eng.submit(prompt, max_new=8)
+    for _ in range(4):
+        eng.step()
+    b = eng.submit(prompt, max_new=4)
+    eng.step()
+    assert any(rc > 1 for rc in eng.pool.refcounts.values())
+    check_invariants(eng)                            # sharing is consistent
+    shared = max(eng.pool.refcounts, key=eng.pool.refcounts.get)
+    eng.pool.refcounts[shared] += 1                  # inject drift
+    with pytest.raises(InvariantViolation, match="multiplicity"):
+        check_invariants(eng)
+    eng.pool.refcounts[shared] -= 1
+    eng.pool.refcounts[999] = 1                      # rc for unmapped page
+    with pytest.raises(InvariantViolation, match="retained"):
+        check_invariants(eng)
+    del eng.pool.refcounts[999]
+    eng.run()
+    check_invariants(eng)
+    assert a.generated and b.generated
+
+
+def test_chaos_run_with_prefix_cache(served):
+    """A seeded fault plan over shared-prefix traffic: every audit passes
+    with refcounted pages live, including squeezes (quarantine vs shared
+    pages) and cancels (detach through the normal evict path)."""
+    from repro.serve.chaos import ChaosHarness, FaultPlan
+    from repro.serve.traffic import drive, poisson_arrivals, scenario_spread
+
+    cfg, params = served
+    sp = scenario_spread(shared_prefixes=2, prefix_tokens=8)
+    arrivals = poisson_arrivals(
+        12, 0.25, seed=11, vocab=cfg.vocab, max_prompt=20,
+        max_output=4, min_prompt=10, scenarios=sp)
+    eng = _engine(params, cfg, prefix_cache=True)
+    harness = ChaosHarness(FaultPlan.generate(5, horizon=60, n_faults=4))
+    res = drive(eng, arrivals, on_cycle=harness)
+    harness.finalize(eng)
+    assert harness.invariant_checks >= 5
+    assert res.served + res.shed + res.cancelled == len(arrivals)
+    assert eng.pool.prefix_lookups > 0
+
+
+# ---- 8-shard cross-shard admission (satellite 4) --------------------------
+
+def test_full_home_shard_admits_via_cross_shard_prefix():
+    """A full home shard with a matching prefix on another shard admits by
+    sharing where the cache-off engine sheds on PoolCapacityError retries —
+    and the shared run's tokens match the unsharded, unsqueezed oracle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import jax
+        from repro.configs import registry
+        from repro.launch.mesh import make_kv_mesh
+        from repro.models import init_params
+        from repro.serve.engine import MultiPortEngine
+
+        cfg = registry.get("tinyllama-1.1b", reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        base = list(range(2, 18))                    # 16 tokens = 2 pages
+        tail = [99, 98]
+
+        oracle = MultiPortEngine(params, cfg, slots=2, max_slots=2,
+                                 max_len=64, seq_tile=8, chunk_tokens=8,
+                                 kernel_mode="reference")
+        ob = oracle.submit(base + tail, max_new=2)
+        oracle.run()
+
+        def sharded(prefix_cache):
+            eng = MultiPortEngine(params, cfg, slots=4, max_slots=4,
+                                  max_len=64, seq_tile=8, chunk_tokens=8,
+                                  kernel_mode="reference",
+                                  mesh=make_kv_mesh(8),
+                                  prefix_cache=prefix_cache,
+                                  capacity_retry_limit=2)
+            assert eng.pool.plan.pages_per_shard == 4    # 32 pages
+            a = eng.submit(base, max_new=6)              # worst 21 -> 3 pg
+            while eng.pool.lengths.get(a.rid, 0) < 17:   # 3 pages, 0 reserved
+                eng.step()
+            home = eng.pool.home_of(a.rid)
+            keep = [0] * 8
+            keep[home] = 1
+            eng.pool.quarantine(4, keep_free=keep)       # 1 free on home only
+            b = eng.submit(base + tail, max_new=2)       # worst 19 -> 3 pg
+            eng.run(max_cycles=1000)
+            return a, b, eng, home
+
+        a0, b0, e0, _ = sharded(False)
+        assert b0.shed_reason == "capacity" and not b0.generated
+        a1, b1, e1, home = sharded(True)
+        assert b1.shed_reason is None
+        assert e1.pool.prefix_hits == 1
+        assert b1.generated == ob.generated
+        assert a1.generated == a0.generated
+        print("PREFIX-SHARD-OK")
+    """)], capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "PREFIX-SHARD-OK" in r.stdout
+
+
+# ---- traffic: shared-prefix pools -----------------------------------------
+
+def test_shared_prefix_pools_seeded_and_roundtrip(tmp_path):
+    from repro.serve.traffic import (poisson_arrivals, scenario_spread,
+                                     trace_arrivals, write_trace)
+    kw = dict(rate=0.5, seed=3, vocab=256, max_prompt=40, max_output=10,
+              min_prompt=26)
+    base = poisson_arrivals(40, **kw)
+    sp = scenario_spread(shared_prefixes=2, prefix_tokens=24)
+    on = poisson_arrivals(40, **kw, scenarios=sp)
+    assert on == poisson_arrivals(40, **kw, scenarios=sp)    # seeded
+    for a, b in zip(base, on):
+        # main rng stream untouched: everything but the header identical
+        assert (a.arrival_tick, len(a.prompt), a.max_new, a.scenario) == \
+               (b.arrival_tick, len(b.prompt), b.max_new, b.scenario)
+        assert a.prompt[24:] == b.prompt[24:]
+    heads = {}
+    for a in on:
+        heads[a.prompt[:24]] = heads.get(a.prompt[:24], 0) + 1
+    assert sum(c for c in heads.values() if c >= 2) >= len(on) // 2
+    assert all(len(a.prompt) > 24 for a in on)       # tail always private
+    path = str(tmp_path / "trace.jsonl")
+    write_trace(path, on)
+    assert trace_arrivals(path, vocab=256) == on     # round-trippable
+
+
+def test_scenario_prefix_geometry_validated():
+    from repro.serve.traffic import Scenario
+    with pytest.raises(ValueError, match="both"):
+        Scenario("x", 1.0, 1.0, shared_prefixes=2, prefix_tokens=0)
+    with pytest.raises(ValueError, match="negative"):
+        Scenario("x", 1.0, 1.0, shared_prefixes=-1, prefix_tokens=4)

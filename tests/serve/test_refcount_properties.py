@@ -1,0 +1,103 @@
+"""Property suite: refcount invariants under arbitrary share/CoW traffic.
+
+Hypothesis drives random interleavings of the pool's five ownership-
+changing operations — prefill a fresh sequence, register its prefix,
+match+attach a sharer, append (which may copy-on-write a shared tail),
+and free (detach or die) — and after EVERY operation checks the books:
+
+* refcounts equal table multiplicity exactly, for every mapped page;
+* free ∪ quarantined ∪ mapped-with-multiplicity partitions capacity
+  (no page both free and mapped, none lost, none double-freed);
+* the prefix index only registers live pages;
+* every sequence's committed words read back as the token content that
+  produced them — CoW never corrupts either side of a split.
+
+Follows the repo's ``importorskip`` pattern: tier-1 skips cleanly when
+the hypothesis dev extra is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.memory.paged_kv import PagedPool, PoolCapacityError
+
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+
+def _vecs(tokens):
+    toks = np.asarray(tokens, np.float32)
+    return toks[:, None] + np.arange(8, dtype=np.float32) / 8.0
+
+
+def _audit(pool, toks_by_seq):
+    mult = {}
+    for t in pool.tables.values():
+        for p in t:
+            mult[p] = mult.get(p, 0) + 1
+    assert pool.refcounts == mult, "refcounts != table multiplicity"
+    free = pool.free_pages
+    quar = list(pool.quarantined_pages)
+    assert len(set(free + quar)) == len(free) + len(quar)
+    assert not (set(free) | set(quar)) & set(mult)
+    assert set(free) | set(quar) | set(mult) == set(range(pool.plan.n_pages))
+    assert set(pool.page_reg) <= set(mult)
+    for seq, toks in toks_by_seq.items():
+        got = pool.gather_words(seq, np.arange(pool.lengths[seq]))
+        np.testing.assert_allclose(got, _vecs(toks), atol=1e-6)
+
+
+OPS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 7), st.integers(1, 9)),
+    min_size=1, max_size=25)
+
+
+@hyp.settings(max_examples=20, deadline=None,
+              suppress_health_check=[hyp.HealthCheck.too_slow])
+@hyp.given(ops=OPS, seed=st.integers(0, 2**16))
+def test_refcount_books_balance_under_any_interleaving(ops, seed):
+    pool = PagedPool.create(n_pages=8, page_tokens=4, word_width=8,
+                            num_banks=4)
+    rng = np.random.default_rng(seed)
+    toks_by_seq: dict = {}
+    next_seq = 0
+    for kind, pick, count in ops:
+        live = sorted(toks_by_seq)
+        if kind == 0:                                    # fresh prefill
+            toks = [int(t) for t in rng.integers(0, 50, count)]
+            try:
+                pool.cycle(prefill={"seq": next_seq, "vectors": _vecs(toks)})
+            except PoolCapacityError:
+                continue
+            toks_by_seq[next_seq] = toks
+            next_seq += 1
+        elif kind == 1 and live:                         # register prefix
+            seq = live[pick % len(live)]
+            pool.register_prefix(seq, toks_by_seq[seq])
+        elif kind == 2 and live:                         # match + attach
+            donor = live[pick % len(live)]
+            toks = toks_by_seq[donor] + [int(t) for t in
+                                         rng.integers(0, 50, 2)]
+            m = pool.match_prefix(toks)
+            if m is None:
+                continue
+            pool.attach_prefix(next_seq, m)
+            toks_by_seq[next_seq] = toks[:m.tokens]
+            next_seq += 1
+        elif kind == 3 and live:                         # append (maybe CoW)
+            seq = live[pick % len(live)]
+            new = [int(t) for t in rng.integers(0, 50, 1 + count % 3)]
+            try:
+                pool.cycle(append={"seq": seq, "vectors": _vecs(new)})
+            except PoolCapacityError:
+                continue
+            toks_by_seq[seq] = toks_by_seq[seq] + new
+        elif kind == 4 and live:                         # free (detach/die)
+            seq = live[pick % len(live)]
+            dead = pool.free(seq)
+            assert len(set(dead)) == len(dead), "page double-freed"
+            del toks_by_seq[seq]
+        _audit(pool, toks_by_seq)
+    for seq in sorted(toks_by_seq):                      # full drain
+        pool.free(seq)
+    assert pool.free_page_count == 8
+    assert not pool.refcounts and not pool.page_reg and not pool.prefix_index
