@@ -4,7 +4,7 @@
 # flags live in this file instead of drifting apart across workflow YAML —
 # and a local repro is the same command CI ran:
 #
-#     benchmarks/ci_gates.sh engine   # bench-engine/v5 ratio/tile gates
+#     benchmarks/ci_gates.sh engine   # bench-engine/v6 ratio/tile/split gates
 #     benchmarks/ci_gates.sh serve    # bench-serve/v3 latency-SLO +
 #                                     # overload-sweep + prefix-mix gates
 #     benchmarks/ci_gates.sh chaos    # seeded fault injection: invariant
@@ -29,7 +29,8 @@ case "${1:?usage: ci_gates.sh engine|serve|chaos}" in
       --min-traversal-ratio 1.9 \
       --enforce-tile-bound --min-tile-ratio 3.9 \
       --enforce-single-trace --max-kv-balance 1.25 \
-      --min-coschedule-frac 0.75
+      --min-coschedule-frac 0.75 \
+      --min-split-speedup 2.0
     ;;
   serve)
     # open-loop latency SLOs in virtual-clock ticks (deterministic:

@@ -47,20 +47,31 @@ fraction of multi-phase cycles, and the per-mix traversal histogram
 (e.g. ``3-port[2W+1R|...]``) against the rigid one-traversal-per-phase
 ``'static'`` walk and against reduced port budgets (``max_ports`` = 2, 1).
 
+A seventh section (this schema revision) measures SPLIT-KV FLASH-DECODE on
+a LONG-CONTEXT workload: one near-capacity prompt among short ones makes a
+single row's serial tile chain the critical path of every steady decode
+step. ``num_kv_splits`` partitions each row's live range into grid-parallel
+partial-attention banks (combined by a second LSE pass), so the critical
+path shrinks to ``ceil(chain / splits) + 1`` while the tiles SERVICED stay
+identical — the latency proxy (critical-path tiles per steady decode step)
+is what improves, the bandwidth accounting is unchanged, and greedy decode
+stays token-identical at every split count.
+
 CI gate (see .github/workflows/ci.yml bench-smoke and benchmarks/README.md):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/engine_bench.py --json BENCH_engine.json \
         --min-traversal-ratio 1.9 --enforce-tile-bound --min-tile-ratio 3.9 \
         --enforce-single-trace --max-kv-balance 1.25 \
-        --min-coschedule-frac 0.75
+        --min-coschedule-frac 0.75 --min-split-speedup 2.0
 
-writes the ``bench-engine/v5`` record and exits non-zero if the fused-vs-
+writes the ``bench-engine/v6`` record and exits non-zero if the fused-vs-
 reference steady-decode traversal ratio, the steady-decode tile budget
 (ceil((cache_len+1)/seq_tile) per step), the bounded-vs-unbounded tile
 ratio at cache_len = S_max/8, the single-trace property of the dynamic-grid
-decode path, the sharded per-device tile-read balance, or the scheduler's
-co-scheduled-cycle fraction / traversals-per-cycle advantage regresses.
+decode path, the sharded per-device tile-read balance, the scheduler's
+co-scheduled-cycle fraction / traversals-per-cycle advantage, or the
+split-KV critical-path speedup on the long-context sweep regresses.
 """
 from __future__ import annotations
 
@@ -435,6 +446,62 @@ def run_schedule(prompt_lens=SCHEDULE_PROMPT_LENS, max_new: int = 10,
     return out
 
 
+SPLIT_S_MAX = 128
+SPLIT_COUNTS = (1, 2, 4)
+SPLIT_PROMPT_LENS = (88, 6, 6, 6)
+
+
+def run_split(prompt_lens=SPLIT_PROMPT_LENS, max_new: int = 4,
+              splits=SPLIT_COUNTS) -> dict:
+    """Split-KV flash-decode on a long-context sweep: ONE near-capacity
+    prompt among short ones makes its serial tile chain (ceil(cache_len /
+    seq_tile) tiles, walked in order for the online-softmax dependency) the
+    critical path of every steady decode step. ``num_kv_splits`` breaks the
+    chain into grid-parallel partial-attention banks plus one LSE-combine
+    pass, so the latency proxy — critical-path tiles per steady decode step
+    — drops toward ``ceil(chain / splits) + 1`` while tiles SERVICED (the
+    bandwidth accounting the tile-bound gate budgets) are identical at
+    every split count, and greedy decode stays token-identical."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(6)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in prompt_lens]
+    out = {"s_max": SPLIT_S_MAX, "seq_tile": TILE_SEQ,
+           "prompt_lens": list(prompt_lens), "max_new": max_new,
+           "per_splits": {}}
+    tokens = {}
+    for ns in splits:
+        eng = MultiPortEngine(params, cfg, slots=len(prompts),
+                              max_len=SPLIT_S_MAX, seq_tile=TILE_SEQ,
+                              chunk_tokens=8, num_kv_splits=ns)
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        t0 = time.perf_counter()
+        done = eng.run(max_cycles=2000)
+        dt = time.perf_counter() - t0
+        assert len(done) == len(prompts)
+        tokens[ns] = {r.rid: tuple(r.generated) for r in done}
+        steady = max(eng.steady_decode_steps, 1)
+        out["per_splits"][str(ns)] = {
+            "seconds": dt,
+            "critical_tiles_per_step": (eng.steady_decode_critical_tiles
+                                        / steady),
+            "tile_reads_per_step": (eng.steady_decode_tile_reads / steady),
+            "within_tile_bound": (eng.steady_decode_tile_reads
+                                  <= eng.steady_decode_tile_bound),
+        }
+    base = out["per_splits"][str(splits[0])]
+    best = out["per_splits"][str(max(splits))]
+    out["tokens_match"] = all(t == tokens[splits[0]]
+                              for t in tokens.values())
+    # the split path must not change WHAT is read, only how it is chained
+    out["tile_reads_match"] = all(
+        x["tile_reads_per_step"] == base["tile_reads_per_step"]
+        for x in out["per_splits"].values())
+    out["split_speedup"] = (base["critical_tiles_per_step"]
+                            / max(best["critical_tiles_per_step"], 1e-9))
+    return out
+
+
 def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
                requests: int = 4) -> dict:
     """Retrace accounting across a cache-length sweep: the SAME engine
@@ -467,7 +534,7 @@ def run_traces(prompt_lens=(6, 20, 40), max_new: int = 4,
 
 
 def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict,
-           sc: dict) -> None:
+           sc: dict, sk: dict) -> None:
     print("# serving engine: fused multi-port vs reference vs single-port "
           "(claim C1)")
     print("mode,cycles,seconds,tokens,cycles/token,pool_traversals,"
@@ -535,6 +602,18 @@ def report(r: dict, pf: dict, tl: dict, tr: dict, kv: dict,
               f"{x['coschedule_frac']:.2f},{mixes}")
     print(f"tokens_match,{sc['tokens_match']}")
     print()
+    print("# split-KV flash-decode: critical-path tiles per steady decode "
+          f"step vs num_kv_splits (prompts {sk['prompt_lens']}, "
+          f"S_max={sk['s_max']}, seq_tile={sk['seq_tile']})")
+    print("num_kv_splits,critical_tiles/step,tile_reads/step,"
+          "within_tile_bound")
+    for ns, x in sk["per_splits"].items():
+        print(f"{ns},{x['critical_tiles_per_step']:.2f},"
+              f"{x['tile_reads_per_step']:.2f},{x['within_tile_bound']}")
+    print(f"split_speedup,{sk['split_speedup']:.2f}")
+    print(f"tokens_match,{sk['tokens_match']}")
+    print(f"tile_reads_match,{sk['tile_reads_match']}")
+    print()
     print(f"# data-parallel KV: pool page-aligned over {kv['kv_shards']} "
           f"device(s) of {kv['available_devices']} visible "
           f"(S_max={kv['s_max']}, seq_tile={kv['seq_tile']})")
@@ -555,7 +634,7 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the bench-engine/v5 record (BENCH_engine.json)")
+                    help="write the bench-engine/v6 record (BENCH_engine.json)")
     ap.add_argument("--min-traversal-ratio", type=float, default=None,
                     help="exit non-zero if fused-vs-reference steady-decode "
                          "traversal ratio drops below this gate")
@@ -582,6 +661,13 @@ def main(argv=None) -> None:
                          "or any sharded headline gate (traversal/tile/"
                          "trace/token identity) regresses; skipped with a "
                          "warning when only one device is visible")
+    ap.add_argument("--min-split-speedup", type=float, default=None,
+                    help="exit non-zero if split-KV decode's critical-path "
+                         "latency proxy on the long-context sweep improves "
+                         "by less than this factor at the largest split "
+                         "count, if the split path changes the serviced "
+                         "tile accounting, or if any split count disagrees "
+                         "on tokens")
     args = ap.parse_args(argv)
 
     r = run(args.requests, args.max_new)
@@ -590,7 +676,8 @@ def main(argv=None) -> None:
     tr = run_traces()
     kv = run_kv_balance()
     sc = run_schedule()
-    report(r, pf, tl, tr, kv, sc)
+    sk = run_split()
+    report(r, pf, tl, tr, kv, sc, sk)
 
     # the gate combines the engine's accounting invariant with the DIRECT
     # kernel-measured serviced-tile probe (the part that can actually catch
@@ -603,7 +690,7 @@ def main(argv=None) -> None:
         per_tok = [pf["per_batch"][str(n)]["traversals_per_token"]
                    for n in PREFILL_BATCHES]
         record = {
-            "schema": "bench-engine/v5",
+            "schema": "bench-engine/v6",
             "config": {"arch": "tinyllama-1.1b", "reduced": True,
                        "requests": args.requests, "max_new": args.max_new,
                        "seq_tile": TILE_SEQ, "s_max": TILE_S_MAX},
@@ -615,6 +702,7 @@ def main(argv=None) -> None:
             "traces": tr,
             "kv": kv,
             "schedule": sc,
+            "split": sk,
             "gate": {
                 "min_traversal_ratio": args.min_traversal_ratio,
                 "traversal_ratio": r["traversal_ratio"],
@@ -635,6 +723,10 @@ def main(argv=None) -> None:
                 "traversals_per_cycle_static":
                     sc["traversals_per_cycle_static"],
                 "schedule_tokens_match": sc["tokens_match"],
+                "min_split_speedup": args.min_split_speedup,
+                "split_speedup": sk["split_speedup"],
+                "split_tokens_match": sk["tokens_match"],
+                "split_tile_reads_match": sk["tile_reads_match"],
             },
         }
         with open(args.json, "w") as f:
@@ -731,6 +823,20 @@ def main(argv=None) -> None:
                   f"cycles (min {args.min_coschedule_frac}) and committed "
                   f"{ooo_tc:.3f} traversals/cycle vs static {static_tc:.3f}, "
                   f"tokens identical across schedule configs")
+    if args.min_split_speedup is not None:
+        sp = sk["split_speedup"]
+        if (sp < args.min_split_speedup or not sk["tokens_match"]
+                or not sk["tile_reads_match"]):
+            print(f"GATE FAIL: split-KV — speedup {sp:.2f} (min "
+                  f"{args.min_split_speedup}), tokens_match "
+                  f"{sk['tokens_match']}, tile_reads_match "
+                  f"{sk['tile_reads_match']}", file=sys.stderr)
+            failed = True
+        else:
+            print(f"GATE OK: split-KV critical-path speedup {sp:.2f}x >= "
+                  f"{args.min_split_speedup} at num_kv_splits="
+                  f"{max(SPLIT_COUNTS)}, tokens identical and serviced "
+                  f"tiles unchanged across split counts")
     if failed:
         sys.exit(1)
 

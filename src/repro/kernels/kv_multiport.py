@@ -48,6 +48,31 @@ with the live sequence length instead of the allocated capacity:
 
 Grid: (batch, live_tiles); accumulators in VMEM scratch, persisted across
 the inner grid dimension.
+
+SPLIT-KV FLASH-DECODE (``num_kv_splits > 1``): the serial R-port walk above
+makes one long sequence bound the whole batch's step latency — its live
+tiles form a single dependent accumulation chain. The split path breaks the
+chain in two stages, the single-device half of sequence-parallel decode:
+
+  * stage 1 partitions each sequence's OWN live range into
+    ``num_kv_splits`` contiguous runs of ``ceil(live_tiles / splits)``
+    tiles (per-row bounds from the prefetched length, so ragged batches
+    split evenly); each run is an independent partial online-softmax
+    emitting ``(acc, m, l)`` into per-split outputs laid out on the same
+    word geometry (``[B, splits * Hp, Dp]`` acc + ``[B, splits * Hp,
+    LANE]`` stats). The W-port append, the ``pl.when`` tile skip and the
+    dead-row sentinel all carry over unchanged — the append tile belongs
+    to exactly one split, skipped tiles are no-ops of that split's
+    softmax, and a dead row leaves every split empty (``m = -inf``).
+  * stage 2 is a cheap LSE-combine over the splits (running-max rescale:
+    ``acc *= exp(m_old - m_new)``), one program per batch row.
+
+Per-step latency becomes O(live_tiles / splits) + O(splits) instead of
+O(live_tiles); serviced-tile counts are IDENTICAL to the serial walk (the
+same tiles are touched, just on parallel chains), so the engine's
+accounting and the ``--enforce-tile-bound`` gate hold verbatim.
+``num_kv_splits=1`` dispatches the serial kernel itself — the bit-exact
+oracle the property suite pins the split path against.
 """
 from __future__ import annotations
 
@@ -58,7 +83,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import (LANE, SUBLANE, iota, pack_words, pad_dim,
+from repro.kernels.tiling import (LANE, SUBLANE, clamp_seq_tile, iota,
+                                  live_tile_bound, pack_words, pad_dim,
                                   restore_live, slice_live, unpack_words,
                                   word_pad)
 
@@ -151,11 +177,152 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
         t_ref[bb, 0] = n_scr[0, 0]
 
 
+def _split_kernel(len_ref, q_ref, k_ref, v_ref, new_k_ref, new_v_ref,
+                  out_k_ref, out_v_ref, acc_ref, stats_ref, t_ref,
+                  m_scr, l_scr, acc_scr, n_scr, *, seq_tile: int, hkv: int,
+                  g: int, dp: int, scale: float, length_mask: bool,
+                  num_kv_splits: int):
+    """Stage 1 of split-KV decode: the serial kernel's W/R service with the
+    online-softmax state FANNED OUT over ``num_kv_splits`` independent
+    accumulator banks. Tile ``t`` of a row whose post-append live range is
+    ``row_tiles`` tiles feeds bank ``t // ceil(row_tiles / splits)`` — a
+    per-row contiguous partition, so ragged batches split each row's OWN
+    length evenly rather than the batch max. Nothing else moves: the W-port
+    append lands in whichever bank owns its tile, skipped tiles pass the
+    cache through untouched, and a dead row (``p < 0``) leaves every bank
+    at its ``m = -inf`` init. The final grid step spills all banks as
+    per-split ``(acc, m, l)`` partials for the combine kernel."""
+    bb = pl.program_id(0)
+    t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)          # static OR the dynamic live bound
+    h = hkv * g
+    ns = num_kv_splits
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+
+    p = len_ref[bb]                                       # append pos (SMEM)
+    tile_start = t * seq_tile
+    touched = (tile_start <= p) if length_mask else (p >= 0)
+
+    # owner bank: per-ROW contiguous split of the row's own live tiles
+    row_tiles = live_tile_bound(p + 1, seq_tile)
+    per_split = jnp.maximum(live_tile_bound(row_tiles, ns), 1)
+    row0 = jnp.clip(t // per_split, 0, ns - 1) * h
+
+    @pl.when(touched)
+    def _service():
+        n_scr[0, 0] += 1                                  # serviced-tile count
+        f32 = jnp.float32
+        pos = tile_start + iota(seq_tile)                 # global positions [T]
+
+        k_tile = k_ref[0]                                 # [T, hkv * Dp]
+        v_tile = v_ref[0]
+
+        # --- W slot (priority A): append new token if it lands in this tile -
+        hit = (pos == p)                                  # [T]
+        k_tile = jnp.where(hit[:, None], new_k_ref[0, 0][None, :], k_tile)
+        v_tile = jnp.where(hit[:, None], new_v_ref[0, 0][None, :], v_tile)
+        out_k_ref[0] = k_tile                             # write-thru (aliased)
+        out_v_ref[0] = v_tile
+
+        # --- R slot (priority B): partial softmax into the OWNER bank ------
+        q = q_ref[0].astype(f32)                          # [Hp, Dp]
+        dots = (((1,), (1,)), ((), ()))
+        s = jnp.concatenate(
+            [jax.lax.dot_general(q[hk * g:(hk + 1) * g],
+                                 k_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                                 dots, preferred_element_type=f32)
+             for hk in range(hkv)], axis=0) * scale       # [H, T]
+        valid = (pos <= p)[None, :]                       # new token included
+        s = jnp.where(valid, s, -jnp.inf)
+
+        m_prev = m_scr[pl.ds(row0, h), 0]                 # [H]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        pr = jnp.exp(s - m_new[:, None])
+        pr = jnp.where(valid, pr, 0.0)                    # [H, T]
+        l_scr[pl.ds(row0, h), 0] = (l_scr[pl.ds(row0, h), 0] * alpha
+                                    + pr.sum(axis=-1))
+        pv = jnp.concatenate(
+            [jax.lax.dot_general(pr[hk * g:(hk + 1) * g],
+                                 v_tile[:, hk * dp:(hk + 1) * dp].astype(f32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=f32)
+             for hk in range(hkv)], axis=0)               # [H, Dp]
+        acc_scr[pl.ds(row0, h), :] = (acc_scr[pl.ds(row0, h), :]
+                                      * alpha[:, None] + pv)
+        m_scr[pl.ds(row0, h), 0] = m_new
+
+    @pl.when(jnp.logical_not(touched))
+    def _pass_through():
+        out_k_ref[0] = k_ref[0]
+        out_v_ref[0] = v_ref[0]
+
+    @pl.when(t == n_tiles - 1)
+    def _finalize():
+        # spill every bank as (acc, m, l) partials on the word geometry:
+        # acc [ns*Hp, Dp]; stats [ns*Hp, LANE] with col 0 = m, col 1 = l.
+        # Head-pad rows carry m = -inf / l = 0 so the combine sees them as
+        # empty, same as a bank no tile ever fed.
+        hp = acc_ref.shape[1] // ns
+        accs, stats = [], []
+        for si in range(ns):
+            a = acc_scr[si * h:(si + 1) * h, :]
+            m = m_scr[si * h:(si + 1) * h, 0]
+            l = l_scr[si * h:(si + 1) * h, 0]
+            if hp > h:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((hp - h, dp), a.dtype)], axis=0)
+                m = jnp.concatenate(
+                    [m, jnp.full((hp - h,), -jnp.inf, m.dtype)], axis=0)
+                l = jnp.concatenate(
+                    [l, jnp.zeros((hp - h,), l.dtype)], axis=0)
+            accs.append(a)
+            stats.append(jnp.concatenate(
+                [m[:, None], l[:, None],
+                 jnp.zeros((hp, LANE - 2), jnp.float32)], axis=1))
+        acc_ref[0] = jnp.concatenate(accs, axis=0)
+        stats_ref[0] = jnp.concatenate(stats, axis=0)
+        t_ref[bb, 0] = n_scr[0, 0]
+
+
+def _combine_kernel(acc_ref, stats_ref, o_ref, *, num_kv_splits: int):
+    """Stage 2 of split-KV decode: LSE-combine the per-split partials with
+    the running-max rescale (``acc *= exp(m_old - m_new)``). One program per
+    batch row; O(splits) work against stage 1's O(live_tiles / splits). An
+    empty split (``m = -inf``) contributes weight 0, and a fully-dead row
+    (every split empty) divides 0 by the 1e-30 floor — zeros, exactly the
+    serial kernel's dead-row output."""
+    hp, dp = o_ref.shape[1], o_ref.shape[2]
+    m_run = jnp.full((hp,), -jnp.inf, jnp.float32)
+    l_run = jnp.zeros((hp,), jnp.float32)
+    a_run = jnp.zeros((hp, dp), jnp.float32)
+    for si in range(num_kv_splits):
+        m_s = stats_ref[0, si * hp:(si + 1) * hp, 0]
+        l_s = stats_ref[0, si * hp:(si + 1) * hp, 1]
+        a_s = acc_ref[0, si * hp:(si + 1) * hp, :]
+        m_new = jnp.maximum(m_run, m_s)
+        # guard: both-empty keeps m at -inf without exp(-inf - -inf) = nan
+        safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - safe), 0.0)
+        beta = jnp.where(jnp.isfinite(m_s), jnp.exp(m_s - safe), 0.0)
+        a_run = a_run * alpha[:, None] + a_s * beta[:, None]
+        l_run = l_run * alpha + l_s * beta
+        m_run = m_new
+    o_ref[0] = (a_run
+                / jnp.maximum(l_run, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
 def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                         new_k: jax.Array, new_v: jax.Array,
                         cache_len: jax.Array, *, seq_tile: int = 128,
                         live_len: int | None = None, length_mask: bool = True,
-                        dynamic_grid: bool = False,
+                        dynamic_grid: bool = False, num_kv_splits: int = 1,
                         return_tiles: bool = False, interpret: bool = True
                         ) -> tuple[jax.Array, ...]:
     """One decode step for a batch of sequences.
@@ -183,6 +350,12 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                 static prefix — one trace services every cache length.
                 Requires ``length_mask`` (the per-sequence skip is what
                 keeps rows shorter than the batch max exact).
+      num_kv_splits: > 1 switches to the two-stage split-KV path (see the
+                module docstring): stage 1 accumulates each row's live tiles
+                into ``num_kv_splits`` independent partial-softmax banks,
+                stage 2 LSE-combines them. 1 (the default) launches the
+                serial kernel itself — the bit-exact oracle. Serviced-tile
+                counts and cache updates are identical either way.
       return_tiles: also return the KERNEL-MEASURED count of serviced tiles
                 per sequence ([B] int32) — the ground truth the host-side
                 tile accounting is pinned against in tests.
@@ -203,7 +376,7 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     hp = word_pad(h, SUBLANE)
     wp = hkv * dp
     scale = 1.0 / (d ** 0.5)
-    seq_tile = max(1, min(seq_tile, s))
+    seq_tile = clamp_seq_tile(s, seq_tile)
 
     # word layout: [B, Sp, hkv * Dp], Sp a whole tile count
     ck_w = pack_words(cache_k, seq_tile)
@@ -218,8 +391,9 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 
     lens = cache_len.astype(jnp.int32)
     if dynamic_grid:
-        # live bound from the scalar lengths: one trace, any cache length
-        n_tiles = jnp.clip((jnp.max(lens) + seq_tile) // seq_tile,
+        # live bound from the scalar lengths: one trace, any cache length;
+        # the post-append live range is [0, max(len) + 1) exclusive
+        n_tiles = jnp.clip(live_tile_bound(jnp.max(lens) + 1, seq_tile),
                            1, grid_tiles)
     else:
         n_tiles = grid_tiles
@@ -228,52 +402,112 @@ def fused_append_attend(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     nk_w = pad_dim(new_k, 2, dp).reshape(b, 1, wp)        # [B, 1, wp]
     nv_w = pad_dim(new_v, 2, dp).reshape(b, 1, wp)
 
-    kernel = functools.partial(_kernel, seq_tile=seq_tile, hkv=hkv, g=g,
-                               dp=dp, scale=scale, length_mask=length_mask)
-    # block SHAPES come from the same geometry table the Mosaic lint test
-    # checks (decode_block_specs) — the lint cannot drift from the launch
-    blocks = {nm: blk
-              for nm, blk, _ in decode_block_specs(b, bound, h, hkv, d,
-                                                   seq_tile)}
+    ns = max(1, int(num_kv_splits))
     per_b = lambda bb, t, L: (bb, 0, 0)       # noqa: E731 — batch-resident
     per_tile = lambda bb, t, L: (bb, t, 0)    # noqa: E731 — cache traversal
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,                            # lens -> SMEM
-        grid=(b, n_tiles),
-        in_specs=[
-            pl.BlockSpec(blocks["q"], per_b),
-            pl.BlockSpec(blocks["cache_k"], per_tile),
-            pl.BlockSpec(blocks["cache_v"], per_tile),
-            pl.BlockSpec(blocks["new_k"], per_b),
-            pl.BlockSpec(blocks["new_v"], per_b),
-        ],
-        out_specs=[
-            pl.BlockSpec(blocks["out_k"], per_tile),
-            pl.BlockSpec(blocks["out_v"], per_tile),
-            pl.BlockSpec(blocks["attn_out"], per_b),
-            # serviced-tile counts: [B, LANE] int32 so the accounting
-            # output is itself (8,128)-tileable (col 0 carries the count)
-            pl.BlockSpec(blocks["tiles"], lambda bb, t, L: (0, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((h, 1), jnp.float32),            # m
-            pltpu.VMEM((h, 1), jnp.float32),            # l
-            pltpu.VMEM((h, dp), jnp.float32),           # acc
-            pltpu.VMEM((1, 1), jnp.int32),              # serviced tiles
-        ],
-    )
-    out_k, out_v, out, tiles = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct(ck_w.shape, ck_w.dtype),
-            jax.ShapeDtypeStruct(cv_w.shape, cv_w.dtype),
-            jax.ShapeDtypeStruct((b, hp, dp), q.dtype),
-            jax.ShapeDtypeStruct((b, LANE), jnp.int32),
-        ],
-        input_output_aliases={2: 0, 3: 1},              # caches in-place
-        interpret=interpret,
-    )(lens, qp, ck_w, cv_w, nk_w, nv_w)
+    if ns == 1:
+        kernel = functools.partial(_kernel, seq_tile=seq_tile, hkv=hkv, g=g,
+                                   dp=dp, scale=scale,
+                                   length_mask=length_mask)
+        # block SHAPES come from the same geometry table the Mosaic lint test
+        # checks (decode_block_specs) — the lint cannot drift from the launch
+        blocks = {nm: blk
+                  for nm, blk, _ in decode_block_specs(b, bound, h, hkv, d,
+                                                       seq_tile)}
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,                        # lens -> SMEM
+            grid=(b, n_tiles),
+            in_specs=[
+                pl.BlockSpec(blocks["q"], per_b),
+                pl.BlockSpec(blocks["cache_k"], per_tile),
+                pl.BlockSpec(blocks["cache_v"], per_tile),
+                pl.BlockSpec(blocks["new_k"], per_b),
+                pl.BlockSpec(blocks["new_v"], per_b),
+            ],
+            out_specs=[
+                pl.BlockSpec(blocks["out_k"], per_tile),
+                pl.BlockSpec(blocks["out_v"], per_tile),
+                pl.BlockSpec(blocks["attn_out"], per_b),
+                # serviced-tile counts: [B, LANE] int32 so the accounting
+                # output is itself (8,128)-tileable (col 0 carries the count)
+                pl.BlockSpec(blocks["tiles"], lambda bb, t, L: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((h, 1), jnp.float32),        # m
+                pltpu.VMEM((h, 1), jnp.float32),        # l
+                pltpu.VMEM((h, dp), jnp.float32),       # acc
+                pltpu.VMEM((1, 1), jnp.int32),          # serviced tiles
+            ],
+        )
+        out_k, out_v, out, tiles = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct(ck_w.shape, ck_w.dtype),
+                jax.ShapeDtypeStruct(cv_w.shape, cv_w.dtype),
+                jax.ShapeDtypeStruct((b, hp, dp), q.dtype),
+                jax.ShapeDtypeStruct((b, LANE), jnp.int32),
+            ],
+            input_output_aliases={2: 0, 3: 1},          # caches in-place
+            interpret=interpret,
+        )(lens, qp, ck_w, cv_w, nk_w, nv_w)
+    else:
+        # two-stage split-KV: the launch geometry comes from the split
+        # extension of the same lint-checked table
+        blocks = {nm: blk
+                  for nm, blk, _ in split_block_specs(b, bound, h, hkv, d,
+                                                      seq_tile, ns)}
+        kernel = functools.partial(_split_kernel, seq_tile=seq_tile, hkv=hkv,
+                                   g=g, dp=dp, scale=scale,
+                                   length_mask=length_mask, num_kv_splits=ns)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,                        # lens -> SMEM
+            grid=(b, n_tiles),
+            in_specs=[
+                pl.BlockSpec(blocks["q"], per_b),
+                pl.BlockSpec(blocks["cache_k"], per_tile),
+                pl.BlockSpec(blocks["cache_v"], per_tile),
+                pl.BlockSpec(blocks["new_k"], per_b),
+                pl.BlockSpec(blocks["new_v"], per_b),
+            ],
+            out_specs=[
+                pl.BlockSpec(blocks["out_k"], per_tile),
+                pl.BlockSpec(blocks["out_v"], per_tile),
+                pl.BlockSpec(blocks["acc_partial"], per_b),
+                pl.BlockSpec(blocks["lse_partial"], per_b),
+                pl.BlockSpec(blocks["tiles"], lambda bb, t, L: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((ns * h, 1), jnp.float32),   # m, per bank
+                pltpu.VMEM((ns * h, 1), jnp.float32),   # l, per bank
+                pltpu.VMEM((ns * h, dp), jnp.float32),  # acc, per bank
+                pltpu.VMEM((1, 1), jnp.int32),          # serviced tiles
+            ],
+        )
+        out_k, out_v, acc, stats, tiles = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct(ck_w.shape, ck_w.dtype),
+                jax.ShapeDtypeStruct(cv_w.shape, cv_w.dtype),
+                jax.ShapeDtypeStruct((b, ns * hp, dp), jnp.float32),
+                jax.ShapeDtypeStruct((b, ns * hp, LANE), jnp.float32),
+                jax.ShapeDtypeStruct((b, LANE), jnp.int32),
+            ],
+            input_output_aliases={2: 0, 3: 1},          # caches in-place
+            interpret=interpret,
+        )(lens, qp, ck_w, cv_w, nk_w, nv_w)
+        out = pl.pallas_call(
+            functools.partial(_combine_kernel, num_kv_splits=ns),
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec(blocks["acc_partial"], lambda bb: (bb, 0, 0)),
+                pl.BlockSpec(blocks["lse_partial"], lambda bb: (bb, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(blocks["attn_out"], lambda bb: (bb, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, hp, dp), q.dtype),
+            interpret=interpret,
+        )(acc, stats)
     out_k, out_v = restore_live(full_k, full_v, out_k, out_v)
     out_k = unpack_words(out_k, s, hkv, d)
     out_v = unpack_words(out_v, s, hkv, d)
@@ -303,4 +537,21 @@ def decode_block_specs(b: int, s: int, h: int, hkv: int, d: int,
         ("out_v", (1, tile, wp), (b, sp, wp)),
         ("attn_out", (1, hp, dp), (b, hp, dp)),
         ("tiles", (b, LANE), (b, LANE)),
+    ]
+
+
+def split_block_specs(b: int, s: int, h: int, hkv: int, d: int,
+                      seq_tile: int, num_kv_splits: int
+                      ) -> list[tuple[str, tuple, tuple]]:
+    """The split-KV launch geometry: the serial decode table plus the
+    stage-1 partial outputs / stage-2 inputs. The per-split banks stack on
+    the head axis (``num_kv_splits * Hp`` rows), so both extra arrays keep
+    a lane-aligned minor dim (Dp for acc, LANE for the (m, l) stats) and a
+    SUBLANE-aligned second-minor — same lint surface, one more knob."""
+    ns = max(1, int(num_kv_splits))
+    dp = word_pad(d)
+    hp = word_pad(h, SUBLANE)
+    return decode_block_specs(b, s, h, hkv, d, seq_tile) + [
+        ("acc_partial", (1, ns * hp, dp), (b, ns * hp, dp)),
+        ("lse_partial", (1, ns * hp, LANE), (b, ns * hp, LANE)),
     ]

@@ -46,7 +46,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import (LANE, SUBLANE, iota, pack_words, pad_dim,
+from repro.kernels.tiling import (LANE, SUBLANE, clamp_seq_tile, iota,
+                                  live_tile_bound, pack_words, pad_dim,
                                   restore_live, slice_live, unpack_words,
                                   word_pad)
 
@@ -199,7 +200,7 @@ def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
     cp = word_pad(c, SUBLANE)
     wp = hkv * dp
     scale = 1.0 / (d ** 0.5)
-    seq_tile = max(1, min(seq_tile, s))
+    seq_tile = clamp_seq_tile(s, seq_tile)
 
     ck_w = pack_words(cache_k, seq_tile)                  # [B, Sp, wp]
     cv_w = pack_words(cache_v, seq_tile)
@@ -214,9 +215,10 @@ def fused_chunk_append_attend(q: jax.Array, cache_k: jax.Array,
     offs = offset.astype(jnp.int32)
     clens = chunk_len.astype(jnp.int32)
     if dynamic_grid:
-        # live bound from the prefetched scalars: dead rows contribute 0
+        # live bound from the prefetched scalars: dead rows contribute 0;
+        # ``last`` is the exclusive end of each row's post-append range
         last = jnp.where(offs >= 0, offs + jnp.maximum(clens - 1, 0) + 1, 0)
-        n_tiles = jnp.clip((jnp.max(last) + seq_tile - 1) // seq_tile,
+        n_tiles = jnp.clip(live_tile_bound(jnp.max(last), seq_tile),
                            1, grid_tiles)
     else:
         n_tiles = grid_tiles

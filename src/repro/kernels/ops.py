@@ -98,14 +98,15 @@ def _kv_shard_wrap(kernel, mesh, mesh_axis: str, batch: int, n_in: int,
 
 @functools.partial(jax.jit, static_argnames=("seq_tile", "live_len",
                                              "length_mask", "dynamic_grid",
-                                             "interpret", "mesh", "mesh_axis",
-                                             "port_mix"))
+                                             "num_kv_splits", "interpret",
+                                             "mesh", "mesh_axis", "port_mix"))
 def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                            new_k: jax.Array, new_v: jax.Array,
                            cache_len: jax.Array, *, seq_tile: int = 128,
                            live_len: int | None = None,
                            length_mask: bool = True,
                            dynamic_grid: bool = False,
+                           num_kv_splits: int = 1,
                            interpret: bool = True,
                            mesh=None, mesh_axis: str = "kv",
                            port_mix: str = "wr"):
@@ -121,9 +122,14 @@ def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 
     ``dynamic_grid=True`` bounds the traversal with the runtime live-tile
     count instead of the static ``live_len`` prefix — one trace serves every
-    cache length. ``mesh`` (with a ``mesh_axis`` axis) runs the traversal
-    under ``shard_map`` over the batch axis: per-shard SMEM scalars,
-    per-shard live-tile bounds (see ``_kv_shard_wrap``)."""
+    cache length. ``num_kv_splits > 1`` runs the two-stage split-KV path
+    (grid-parallel partial attention + LSE combine; 1 is the serial
+    bit-exact oracle) — the ``"w+r"`` two-pass oracle has no traversal to
+    split and ignores it. ``mesh`` (with a ``mesh_axis`` axis) runs the
+    traversal under ``shard_map`` over the batch axis: per-shard SMEM
+    scalars, per-shard live-tile bounds (see ``_kv_shard_wrap``); both
+    split stages live inside the wrapped launch, so per-shard split bounds
+    come from the shard-local lengths for free."""
     if port_mix == "w+r":
         from repro.kernels import ref
         return ref.decode_attention_ref(q, cache_k, cache_v, new_k, new_v,
@@ -132,7 +138,9 @@ def fused_decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
         raise ValueError(f"unknown port_mix: {port_mix!r}")
     kernel = functools.partial(kvmp.fused_append_attend, seq_tile=seq_tile,
                                live_len=live_len, length_mask=length_mask,
-                               dynamic_grid=dynamic_grid, interpret=interpret)
+                               dynamic_grid=dynamic_grid,
+                               num_kv_splits=num_kv_splits,
+                               interpret=interpret)
     kernel = _kv_shard_wrap(kernel, mesh, mesh_axis, q.shape[0],
                             n_in=6, n_out=3)
     return kernel(q, cache_k, cache_v, new_k, new_v, cache_len)

@@ -40,6 +40,46 @@ def word_pad(n: int, unit: int = LANE) -> int:
     return -(-int(n) // unit) * unit
 
 
+def live_tile_bound(last_exclusive, seq_tile: int):
+    """Tiles covering positions ``[0, last_exclusive)`` — the ONE live-tile
+    bound formula shared by the decode, chunked-prefill and split-KV
+    traversals.
+
+    ``last_exclusive`` is always the EXCLUSIVE end of the live range: the
+    decode kernel passes ``max(cache_len) + 1`` (the append position is
+    live after the in-traversal write), the chunk kernel passes
+    ``max(offset + chunk_len)``, and the split-KV partial-attention path
+    passes each row's own post-append length. The two kernels used to
+    inline algebraically-equal but textually-different forms of this
+    ceil-div (inclusive ``(last + tile) // tile`` vs exclusive
+    ``(last + tile - 1) // tile``) — exactly how a future edit breaks one
+    silently. Accepts ints and traced jnp scalars alike; callers clip the
+    result to their grid capacity (and to >= 1 for all-dead batches)."""
+    return (last_exclusive + seq_tile - 1) // seq_tile
+
+
+def clamp_seq_tile(s: int, seq_tile: int) -> int:
+    """The kernels' launch-time tile clamp ``max(1, min(seq_tile, s))`` —
+    no longer silent. A configured tile larger than the traversed capacity
+    diverges from what the launcher validated against the engine's
+    ``final_stage_ladder`` (and from the host-side tile accounting), so the
+    first time a given ``(s, seq_tile)`` pair clamps DOWN, a warning names
+    both sizes through the same once-per-geometry machinery as
+    :func:`fit_seq_tile`."""
+    t = max(1, min(seq_tile, s))
+    if t != seq_tile:
+        key = ("clamp", s, seq_tile)
+        if key not in _fit_warned:
+            _fit_warned.add(key)
+            warnings.warn(
+                f"seq_tile {seq_tile} exceeds the traversed capacity {s}; "
+                f"clamping to {t} — the launch geometry no longer matches "
+                f"the validated --seq-tile (validate against "
+                f"final_stage_ladder, or pass seq_tile <= capacity)",
+                stacklevel=2)
+    return t
+
+
 def fit_seq_tile(s: int, seq_tile: int) -> int:
     """Largest divisor of ``s`` that is <= ``seq_tile``, preferring
     SUBLANE-aligned divisors (Mosaic sublane geometry) over raw size.

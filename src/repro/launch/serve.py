@@ -57,6 +57,13 @@ def main() -> None:
                          "(one jit retrace per power-of-two tile bucket) "
                          "instead of the dynamic-grid kernels whose single "
                          "trace serves every cache length")
+    ap.add_argument("--num-kv-splits", type=int, default=1,
+                    help="split-KV flash-decode: run each sequence's decode "
+                         "traversal as this many grid-parallel partial-"
+                         "attention chains plus an LSE-combine step, so a "
+                         "long context no longer bounds the step latency "
+                         "(1 = today's serial traversal, the bit-exact "
+                         "oracle; pallas decode only)")
     ap.add_argument("--kv-shards", type=int, default=1,
                     help="shard the paged KV pool page-aligned across this "
                          "many devices (data-parallel KV: device-aware page "
@@ -138,9 +145,15 @@ def main() -> None:
         print(f"--seq-tile {seq_tile} exceeds --max-len {args.max_len}; "
               f"clamping to {args.max_len} (the engine's own clamp)")
         seq_tile = args.max_len
+    if args.num_kv_splits < 1:
+        raise SystemExit(f"--num-kv-splits must be >= 1, "
+                         f"got {args.num_kv_splits}")
     grid = "bucketed" if args.no_dynamic_grid else "dynamic-grid"
     print(f"length-bounded staging buckets (seq_tile={seq_tile}, "
           f"S_max={args.max_len}, {grid}): {list(buckets)}")
+    if args.num_kv_splits > 1:
+        print(f"split-KV flash-decode: {args.num_kv_splits} partial chains "
+              f"per sequence + LSE combine (pallas decode path)")
     mesh = None
     if args.kv_shards > 1:
         try:
@@ -159,6 +172,7 @@ def main() -> None:
                           seq_tile=seq_tile,
                           length_bound=not args.no_length_bound,
                           dynamic_grid=not args.no_dynamic_grid,
+                          num_kv_splits=args.num_kv_splits,
                           interpret=not args.no_interpret,
                           mesh=mesh,
                           schedule_mode=args.schedule_mode,

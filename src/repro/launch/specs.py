@@ -76,6 +76,24 @@ def kv_pool_specs(mesh: Mesh, *, n_pages: int, page_tokens: int,
             NamedSharding(mesh, pspec))
 
 
+def kv_split_partial_specs(cfg: ArchConfig, batch: int,
+                           num_kv_splits: int) -> dict:
+    """No-allocation stand-ins for the split-KV decode intermediates: the
+    stage-1 partial accumulators (``[B, splits * Hp, Dp]`` f32) and LSE
+    stats (``[B, splits * Hp, LANE]`` f32, col 0 = running max, col 1 =
+    denominator) that stage 2 combines — per attention layer, scratch the
+    dry-run can size without launching a kernel. Geometry is read off the
+    SAME lint-checked table the kernel launches from
+    (``kv_multiport.split_block_specs``), so a drift there shows up here."""
+    from repro.kernels.kv_multiport import split_block_specs
+
+    table = {nm: arr for nm, _, arr in split_block_specs(
+        batch, 1, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_, 1,
+        num_kv_splits)}
+    return {"acc_partial": sds(table["acc_partial"], jnp.float32),
+            "lse_partial": sds(table["lse_partial"], jnp.float32)}
+
+
 def params_shapes(cfg: ArchConfig) -> PyTree:
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     return jax.eval_shape(lambda k: init_params(k, cfg), key)

@@ -189,7 +189,8 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                      mrope_sections=(16, 24, 24),
                      kernel_mode: Literal["reference", "multiport"] = "reference",
                      seq_tile: int = 128, length_mask: bool = True,
-                     dynamic_grid: bool = False, interpret: bool = True,
+                     dynamic_grid: bool = False, num_kv_splits: int = 1,
+                     interpret: bool = True,
                      mesh=None, mesh_axis: str = "kv",
                      port_mix: str = "wr",
                      compute_dtype=None):
@@ -199,9 +200,11 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
     The multiport path traverses ``seq_tile``-sized cache tiles and, under
     ``length_mask``, skips tiles past each sequence's live length — callers
     additionally bound S_max itself by staging a bucketed live prefix.
-    ``mesh`` runs the fused traversal under ``shard_map`` over the batch
-    axis (data-parallel KV: each device's kernel sees only its own
-    sequences' SMEM scalars and live-tile bound).
+    ``num_kv_splits > 1`` breaks each sequence's traversal into that many
+    grid-parallel partial-attention chains (split-KV flash-decode; 1 is
+    the serial oracle). ``mesh`` runs the fused traversal under
+    ``shard_map`` over the batch axis (data-parallel KV: each device's
+    kernel sees only its own sequences' SMEM scalars and live-tile bound).
     """
     b = x.shape[0]
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, compute_dtype)
@@ -224,7 +227,8 @@ def attention_decode(p: dict, x: jax.Array, cache_k: jax.Array,
         out, cache_k, cache_v = ops.fused_decode_attention(
             q1, cache_k, cache_v, new_k, new_v, cache_len,
             seq_tile=seq_tile, length_mask=length_mask,
-            dynamic_grid=dynamic_grid, interpret=interpret,
+            dynamic_grid=dynamic_grid, num_kv_splits=num_kv_splits,
+            interpret=interpret,
             mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
     else:
         from repro.kernels import ref

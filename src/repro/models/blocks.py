@@ -104,6 +104,7 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
                              cfg: ArchConfig, kernel_mode: str = "reference",
                              seq_tile: int = 128, length_mask: bool = True,
                              dynamic_grid: bool = False,
+                             num_kv_splits: int = 1,
                              interpret: bool = True,
                              mesh=None, mesh_axis: str = "kv",
                              port_mix: str = "wr"):
@@ -114,7 +115,8 @@ def transformer_block_decode(p: dict, x, cache_k, cache_v, cache_len,
         pos_embed=cfg.pos_embed, rope_theta=cfg.rope_theta,
         mrope_sections=tuple(cfg.mrope_sections), kernel_mode=kernel_mode,
         seq_tile=seq_tile, length_mask=length_mask,
-        dynamic_grid=dynamic_grid, interpret=interpret,
+        dynamic_grid=dynamic_grid, num_kv_splits=num_kv_splits,
+        interpret=interpret,
         mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix,
         compute_dtype=cfg.cdtype)
     x = x + h

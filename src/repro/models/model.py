@@ -239,6 +239,7 @@ def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
 def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
                 *, kernel_mode: str = "reference", seq_tile: int = 128,
                 length_mask: bool = True, dynamic_grid: bool = False,
+                num_kv_splits: int = 1,
                 interpret: bool = True, mesh=None,
                 mesh_axis: str = "kv",
                 port_mix: str = "wr") -> tuple[PyTree, jax.Array]:
@@ -247,6 +248,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
     ``seq_tile``/``length_mask`` bound the multiport kernel's traversal to
     live cache tiles; callers bound the allocated length itself by passing a
     state whose caches hold a bucketed live prefix (the engine does both).
+    ``num_kv_splits > 1`` runs each attention layer's traversal as split-KV
+    flash-decode (grid-parallel partials + LSE combine; 1 = serial oracle).
     ``mesh`` (data-parallel KV) runs the fused traversal under ``shard_map``
     over the batch axis — per-device SMEM scalars and live-tile bounds.
     """
@@ -259,7 +262,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 pl, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                dynamic_grid=dynamic_grid, interpret=interpret,
+                dynamic_grid=dynamic_grid, num_kv_splits=num_kv_splits,
+                interpret=interpret,
                 mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
@@ -284,7 +288,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: PyTree, batch: dict,
             h, ck, cv = B.transformer_block_decode(
                 shared, h, ck, cv, state["len"], cfg, kernel_mode=kernel_mode,
                 seq_tile=seq_tile, length_mask=length_mask,
-                dynamic_grid=dynamic_grid, interpret=interpret,
+                dynamic_grid=dynamic_grid, num_kv_splits=num_kv_splits,
+                interpret=interpret,
                 mesh=mesh, mesh_axis=mesh_axis, port_mix=port_mix)
 
             def inner(hh, ys):

@@ -317,6 +317,13 @@ class ChaosHarness:
             fault = self._due.popleft()
             {"squeeze": self._squeeze, "cancel": self._cancel,
              "stall": self._stall}[fault.kind](eng, fault, now)
+            # injection-tick vs plan-tick audit: drive() only calls the
+            # hook on cycles that actually step, so a fault due inside an
+            # idle fast-forward fires at the first REAL cycle after it —
+            # the drift stamp makes that residual (and any regression in
+            # the drive() ordering) visible instead of silent
+            self.injected[-1].update(plan_tick=fault.tick,
+                                     drift=now - fault.tick)
             self._audit(eng)
 
     def finalize(self, eng) -> None:
@@ -328,6 +335,8 @@ class ChaosHarness:
             fault = self._due.popleft()
             {"squeeze": self._squeeze, "cancel": self._cancel,
              "stall": self._stall}[fault.kind](eng, fault, eng.vclock)
+            self.injected[-1].update(plan_tick=fault.tick,
+                                     drift=eng.vclock - fault.tick)
             self._audit(eng)
         if self._release_tick is not None:
             eng.pool.release_quarantine()

@@ -290,6 +290,7 @@ class MultiPortEngine:
                  greedy: bool = True, page_tokens: int = 8,
                  seq_tile: int = 128, length_bound: bool = True,
                  dynamic_grid: bool = True, interpret: bool = True,
+                 num_kv_splits: int = 1,
                  mesh=None, kv_axis: str = "kv",
                  schedule_mode: str = "ooo", max_ports: int = MAX_PORTS,
                  max_queue_depth: Optional[int] = None,
@@ -308,6 +309,9 @@ class MultiPortEngine:
                 f"max_ports must be in 1..{MAX_PORTS}, got {max_ports}")
         if seq_tile < 1:
             raise ValueError(f"seq_tile must be >= 1, got {seq_tile}")
+        if num_kv_splits < 1:
+            raise ValueError(
+                f"num_kv_splits must be >= 1, got {num_kv_splits}")
         self.params, self.cfg = params, cfg
         # per-cycle port-mix scheduling (see serve/scheduler.py): "ooo"
         # packs non-hazarding phases into shared pool traversals; "static"
@@ -350,6 +354,12 @@ class MultiPortEngine:
         # retrace-per-bucket) fallback and the --seq-tile validation surface.
         self.dynamic_grid = (dynamic_grid and self._fused_compute
                              and length_bound)
+        # split-KV flash-decode: each decode traversal's R-port chain runs
+        # as num_kv_splits grid-parallel partial-softmax chains plus one
+        # LSE-combine step (see kernels/kv_multiport.py). Only the fused
+        # pallas compute has a traversal to split — the two-pass reference
+        # oracle stays serial so splits never change its tokens
+        self.num_kv_splits = num_kv_splits if self._fused_compute else 1
         self._stage_buckets = self.final_stage_ladder(max_len, seq_tile)
         self.stage_lens_seen: set = set()
         # padded batch rows carry the Pallas kernels' dead-row sentinel
@@ -457,6 +467,12 @@ class MultiPortEngine:
         self.decode_tile_reads = 0
         self.steady_decode_tile_reads = 0
         self.steady_decode_tile_bound = 0   # sum of ceil((len+1)/seq_tile)
+        # critical-path chain: per step, the longest single dependent
+        # accumulation chain (longest row's tiles; / num_kv_splits + 1
+        # under split-KV) — the steady-step LATENCY proxy the bench's
+        # split-speedup gate reads, vs tile_reads' total-traffic proxy
+        self.decode_critical_tiles = 0
+        self.steady_decode_critical_tiles = 0
         self.prefill_tile_reads = 0
         # per-device attribution of the same R-port tiles (device = the
         # sequence's home shard == its kernel shard): the balance surface
@@ -481,11 +497,13 @@ class MultiPortEngine:
         # the fused kernels only shard when the mesh is non-trivial; the jnp
         # reference ignores the mesh (it is the sharded-pool oracle)
         kmesh = mesh if self.n_kv_shards > 1 else None
+        nsp = self.num_kv_splits
         self._decode = jax.jit(
             lambda p, s, b: decode_step(p, cfg, s, b, kernel_mode=attn_mode,
                                         seq_tile=tile,
                                         length_mask=length_bound,
                                         dynamic_grid=dyn,
+                                        num_kv_splits=nsp,
                                         interpret=interpret,
                                         mesh=kmesh, mesh_axis=kv_axis,
                                         port_mix=pmix))
@@ -760,16 +778,26 @@ class MultiPortEngine:
         return rpd * n, row_of, groups
 
     def _tiles_touched(self, needs_by_dev: list, stage_s: int,
-                       bounded: bool) -> tuple[int, int, list]:
+                       bounded: bool, splits: int = 1
+                       ) -> tuple[int, int, list, int]:
         """(tiles the kernel's R port touches, ideal ceil-bound, per-device
-        tile reads) summed over the traversals of the per-device
-        live-length groups against a ``stage_s``-long staging cache. The
-        dynamic grid is bounded PER DEVICE — each shard's traversal stops
-        at ITS OWN live-tile count. Unbounded traversals touch every grid
-        tile."""
+        tile reads, critical-path chain) summed over the traversals of the
+        per-device live-length groups against a ``stage_s``-long staging
+        cache. The dynamic grid is bounded PER DEVICE — each shard's
+        traversal stops at ITS OWN live-tile count. Unbounded traversals
+        touch every grid tile.
+
+        The CRITICAL chain is the step's latency proxy: batch rows (and
+        devices) are grid-parallel, so a step takes as long as its longest
+        single dependent accumulation chain. Serially that is the longest
+        row's tile count; under split-KV (``splits > 1``) each row's chain
+        shortens to ``ceil(chain / splits)`` partial chains running in
+        parallel plus one LSE-combine step. Total tiles touched are
+        UNCHANGED by splits — same tiles, parallel chains — which is why
+        the tile-bound gate needs no split awareness."""
         tile = fit_seq_tile(stage_s, self.seq_tile)
         grid_full = stage_s // tile
-        per_dev, bound_total = [], 0
+        per_dev, bound_total, critical = [], 0, 0
         for needs in needs_by_dev:
             grid = grid_full
             if bounded and self.dynamic_grid and needs:
@@ -779,7 +807,12 @@ class MultiPortEngine:
             touched = bound if bounded else grid * len(needs)
             per_dev.append(touched)
             bound_total += bound
-        return sum(per_dev), bound_total, per_dev
+            for n in needs:
+                chain = min(-(-n // tile), grid) if bounded else grid
+                if splits > 1:
+                    chain = -(-chain // splits) + 1       # + the combine
+                critical = max(critical, chain)
+        return sum(per_dev), bound_total, per_dev, critical
 
     def _kv_words(self, cache_k, cache_v, slot: int, t0: int, t1: int
                   ) -> np.ndarray:
@@ -963,7 +996,7 @@ class MultiPortEngine:
         lg = np.asarray(logits)
         # the chunk kernel masks dead tiles per sequence; the jnp reference
         # reads the whole staged cache densely per chunk
-        touched, _, per_dev = self._tiles_touched(
+        touched, _, per_dev, _ = self._tiles_touched(
             [[need_of[s] for s in g] for g in groups], stage_s,
             bounded=self._fused_compute)
         self.prefill_tile_reads += touched
@@ -1034,7 +1067,7 @@ class MultiPortEngine:
         return self.slot_len[slot] + (1 if slot in self._pending else 0)
 
     def _dispatch_decode(self, active: list, gathered: list
-                         ) -> tuple[int, int, list, _InFlight]:
+                         ) -> tuple[int, int, list, int, _InFlight]:
         """Dispatch one fused decode step for all active slots over staging
         caches assembled from the pool gather — WITHOUT forcing the device
         results (JAX async dispatch): retirement (``_retire``) happens at
@@ -1051,8 +1084,9 @@ class MultiPortEngine:
         with the pool's page placement.
 
         Returns (R-port tiles touched, ideal per-slot ceil tile bound,
-        per-device tile reads, the in-flight handle) — tile accounting is
-        pure host arithmetic over live lengths, so it needs no results."""
+        per-device tile reads, critical-path chain, the in-flight handle)
+        — tile accounting is pure host arithmetic over live lengths, so it
+        needs no results."""
         nl, _, hkv, hd = self._kv_dims
         if self.n_kv_shards == 1:
             nb = _bucket(len(self.slot_req), lo=self._init_slots)
@@ -1092,10 +1126,10 @@ class MultiPortEngine:
                              state=st, logits=logits,
                              rids={i: self.slot_req[i].rid for i in active})
         bounded = self._fused_compute and self.length_bound
-        tiles, bound, per_dev = self._tiles_touched(
+        tiles, bound, per_dev, crit = self._tiles_touched(
             [[need_of[i] for i in g] for g in groups], stage_s,
-            bounded=bounded)
-        return tiles, bound, per_dev, inflight
+            bounded=bounded, splits=self.num_kv_splits)
+        return tiles, bound, per_dev, crit, inflight
 
     def _retire(self, inf: _InFlight) -> None:
         """Force an in-flight decode cycle's device results and fold them
@@ -1316,10 +1350,11 @@ class MultiPortEngine:
         if active:
             self.decode_steps += 1
             self.decode_traversals += dt
-            tiles, bound, per_dev, inflight = self._dispatch_decode(
+            tiles, bound, per_dev, crit, inflight = self._dispatch_decode(
                 active, gathered)
             self._inflight = inflight
             self.decode_tile_reads += tiles
+            self.decode_critical_tiles += crit
             for d, t in enumerate(per_dev):
                 self.decode_tile_reads_by_dev[d] += t
             if appends:
@@ -1327,6 +1362,7 @@ class MultiPortEngine:
                 self.steady_decode_traversals += dt
                 self.steady_decode_tile_reads += tiles
                 self.steady_decode_tile_bound += bound
+                self.steady_decode_critical_tiles += crit
                 for d, t in enumerate(per_dev):
                     self.steady_decode_tile_reads_by_dev[d] += t
 

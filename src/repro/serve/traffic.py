@@ -241,8 +241,13 @@ def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000,
     wall)`` pair); latency stamps land on the engine's request objects and
     shed requests land in ``eng.shed`` with their reason. ``on_cycle``
     (the chaos harness's injection point) is called with the engine after
-    each cycle's arrivals are submitted, BEFORE the macro-cycle runs — a
-    fault injected there shapes the very cycle it is due in."""
+    each cycle's arrivals are submitted and ONLY on cycles that will
+    actually step a macro-cycle, immediately before that step — a fault
+    injected there shapes the very cycle it is due in. Idle fast-forwards
+    deliberately skip it: injecting before discovering there is no pending
+    work would land the fault on a cycle that never runs a traversal, so
+    its effective tick silently drifts past ``advance_idle``'s jump (the
+    harness stamps any residual drift on each injected record)."""
     pending = deque(arrivals)
     qdepth: list[int] = []
     t0 = time.perf_counter()
@@ -250,8 +255,6 @@ def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000,
         while pending and pending[0].arrival_tick <= eng.vclock:
             a = pending.popleft()
             eng.submit(list(a.prompt), a.max_new, arrival_tick=a.arrival_tick)
-        if on_cycle is not None:
-            on_cycle(eng)
         if not eng.pending_work():
             if pending:
                 # idle until the next scheduled arrival — the virtual
@@ -261,6 +264,8 @@ def drive(eng, arrivals: Sequence[Arrival], max_cycles: int = 20_000,
                 continue
             eng.flush()
             continue
+        if on_cycle is not None:
+            on_cycle(eng)
         eng.step()
         qdepth.append(eng.admission.ready_depth(eng.vclock))
         if eng.cycles >= max_cycles:

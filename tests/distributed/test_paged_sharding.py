@@ -92,6 +92,52 @@ def test_sharded_engine_token_identical(n_dev):
     assert f"TOKENS-OK {n_dev}" in out
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4, 8])
+def test_sharded_split_kv_token_identical(n_dev):
+    """Split-KV flash-decode under data-parallel KV: with both split
+    stages inside the shard_map'd launch, each device partitions ITS rows'
+    live ranges from shard-local lengths — greedy decode stays
+    token-identical to the unsharded SERIAL oracle at every device count,
+    and split counts never perturb the per-device tile accounting."""
+    out = run_py(f"""
+        import jax, numpy as np
+        from repro.configs import registry
+        from repro.launch.mesh import make_kv_mesh
+        from repro.models import init_params
+        from repro.serve.engine import MultiPortEngine
+
+        cfg = registry.get("tinyllama-1.1b", reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(23)
+        # ragged prompts: one long among shorts, so shards see uneven
+        # live lengths (the per-shard split-bound case)
+        prompts = [list(rng.integers(0, cfg.vocab, n))
+                   for n in (24, 3, 11, 5)]
+
+        def serve(mesh, splits):
+            eng = MultiPortEngine(params, cfg, slots=4, max_slots=8,
+                                  max_len=64, chunk_tokens=8, seq_tile=8,
+                                  kernel_mode="pallas", mesh=mesh,
+                                  num_kv_splits=splits)
+            for p in prompts:
+                eng.submit(list(p), max_new=4)
+            done = eng.run(max_cycles=1000)
+            assert len(done) == len(prompts)
+            return eng, {{r.rid: tuple(r.generated) for r in done}}
+
+        _, oracle = serve(None, 1)
+        mesh = make_kv_mesh({n_dev})
+        for splits in (1, 4):
+            eng, toks = serve(mesh, splits)
+            assert toks == oracle, (splits, toks, oracle)
+            assert eng.n_kv_shards == {n_dev}
+            assert sum(eng.steady_decode_tile_reads_by_dev) == \\
+                eng.steady_decode_tile_reads
+        print("SPLIT-SHARD-OK", {n_dev})
+    """)
+    assert f"SPLIT-SHARD-OK {n_dev}" in out
+
+
 def test_kv_shard_plan_page_aligned():
     """The shard plan never lets a page straddle a boundary: pools round UP
     to whole pages per shard, and a hand-built misaligned plan is

@@ -18,7 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.kv_multiport import decode_block_specs, fused_append_attend
+from repro.kernels.kv_multiport import (decode_block_specs,
+                                        fused_append_attend,
+                                        split_block_specs)
 from repro.kernels.kv_prefill_chunk import (chunk_block_specs,
                                             fused_chunk_append_attend)
 from repro.kernels.tiling import LANE, SUBLANE, check_block
@@ -47,6 +49,22 @@ def test_kernel_blocks_mosaic_aligned(name, b, c, h, hkv, d, s_max, tile):
             errs = check_block(blk, arr)
             assert not errs, (name, stage, nm, errs)
             assert len(blk) <= 4, (name, stage, nm, blk)
+
+
+@pytest.mark.parametrize("splits", [2, 3, 4, 8])
+@pytest.mark.parametrize("name,b,c,h,hkv,d,s_max,tile", GEOMETRIES)
+def test_split_kernel_blocks_mosaic_aligned(name, b, c, h, hkv, d, s_max,
+                                            tile, splits):
+    """The split-KV launch table (serial table + the stage-1 partial
+    acc/LSE blocks, stacked per-split on the head axis) stays
+    (8,128)/f32-tileable at every stage length and split count."""
+    stages = set(seq_tile_buckets(s_max, min(tile, s_max))) | {s_max}
+    for stage in stages:
+        for nm, blk, arr in split_block_specs(b, stage, h, hkv, d, tile,
+                                              splits):
+            errs = check_block(blk, arr)
+            assert not errs, (name, stage, splits, nm, errs)
+            assert len(blk) <= 4, (name, stage, splits, nm, blk)
 
 
 @pytest.mark.parametrize("n_dev", [1, 2, 4, 8])

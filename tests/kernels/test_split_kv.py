@@ -1,0 +1,138 @@
+"""Split-KV flash-decode: the two-stage (grid-parallel partial attention +
+LSE combine) path against the serial traversal it parallelizes.
+
+The contract under test (see kernels/kv_multiport.py):
+
+* ``num_kv_splits=1`` IS the serial kernel — bit-identical, same trace;
+* ``num_kv_splits>1`` agrees with serial within fp tolerance on every
+  ragged batch shape (dead rows, rows shorter than one split, append at a
+  tile edge), on both the dynamic-grid and static-prefix launches;
+* cache updates and serviced-tile counts are identical either way (the
+  same tiles are touched, just on parallel chains);
+* the configured-``seq_tile > S_max`` clamp is no longer silent.
+
+A hypothesis property suite widens the sweep when hypothesis is installed
+(importorskip pattern, in test_split_kv_properties.py so CI without it
+still runs these parametrized cases).
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tiling
+from repro.kernels.kv_multiport import fused_append_attend
+
+
+def _case(rng, b=3, s=64, hkv=2, g=2, d=16):
+    h = hkv * g
+    return (jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32))
+
+
+def _run(args, lens, *, splits, tile=8, dynamic=True, **kw):
+    return fused_append_attend(*args, jnp.asarray(lens, jnp.int32),
+                               seq_tile=tile, dynamic_grid=dynamic,
+                               num_kv_splits=splits, return_tiles=True, **kw)
+
+
+def _assert_split_matches_serial(args, lens, splits, **kw):
+    ref = _run(args, lens, splits=1, **kw)
+    got = _run(args, lens, splits=splits, **kw)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               rtol=2e-6, atol=2e-6)   # attention out
+    for a, b in zip(ref[1:], got[1:]):                 # caches + tile counts
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+LENS_CASES = [
+    [0, 17, 60],        # ragged: fresh row, mid row, near-capacity row
+    [-1, 17, -1],       # dead-row sentinels around a live row
+    [5, 5, 5],          # every row shorter than one split at high splits
+    [63, 0, 31],        # append at the last slot of the last tile
+    [7, 8, 9],          # straddling one tile boundary (tile=8)
+]
+
+
+@pytest.mark.parametrize("splits", [2, 3, 4, 8])
+@pytest.mark.parametrize("lens", LENS_CASES, ids=[str(c) for c in LENS_CASES])
+def test_split_matches_serial_dynamic_grid(rng, lens, splits):
+    _assert_split_matches_serial(_case(rng), lens, splits)
+
+
+@pytest.mark.parametrize("splits", [2, 4])
+def test_split_matches_serial_static_prefix(rng, splits):
+    """The bucketed (dynamic_grid=False) launch splits identically — the
+    split partition is per-row arithmetic, not a grid-shape property."""
+    _assert_split_matches_serial(_case(rng), [0, 17, 60], splits,
+                                 dynamic=False, live_len=61)
+
+
+def test_split_one_is_bit_exact(rng):
+    """num_kv_splits=1 dispatches the serial kernel itself: bitwise equal,
+    not merely close."""
+    args = _case(rng)
+    ref = fused_append_attend(*args, jnp.asarray([0, 17, 60], jnp.int32),
+                              seq_tile=8, dynamic_grid=True)
+    one = fused_append_attend(*args, jnp.asarray([0, 17, 60], jnp.int32),
+                              seq_tile=8, dynamic_grid=True, num_kv_splits=1)
+    for a, b in zip(ref, one):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_dead_rows_zero_output(rng):
+    """A dead row leaves every split bank empty: the combine emits exactly
+    the serial kernel's zeros, and zero tiles are serviced."""
+    out, _, _, tiles = _run(_case(rng), [-1, 17, -1], splits=4)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+    assert list(np.asarray(tiles)) == [0, 3, 0]
+
+
+def test_split_more_splits_than_tiles(rng):
+    """Rows whose live range is shorter than one tile per split: surplus
+    banks stay empty (m = -inf) and the combine ignores them."""
+    _assert_split_matches_serial(_case(rng), [0, 1, 2], 8)
+
+
+def test_split_partial_specs_match_kernel_geometry():
+    """launch.specs.kv_split_partial_specs must stay in sync with the
+    stage-1 spill geometry the kernel actually launches (read off the same
+    lint-checked table): per-split banks stacked on the padded head axis,
+    word-padded depth / LANE-wide stats, f32 regardless of q dtype."""
+    from repro.configs import registry
+    from repro.kernels.tiling import LANE, SUBLANE, word_pad
+    from repro.launch.specs import kv_split_partial_specs
+
+    cfg = registry.get("tinyllama-1.1b", reduced=True)
+    specs = kv_split_partial_specs(cfg, batch=4, num_kv_splits=4)
+    hp = word_pad(cfg.n_heads, SUBLANE)
+    assert specs["acc_partial"].shape == (4, 4 * hp,
+                                          word_pad(cfg.head_dim_))
+    assert specs["lse_partial"].shape == (4, 4 * hp, LANE)
+    assert all(s.dtype == jnp.float32 for s in specs.values())
+
+
+def test_oversize_seq_tile_clamps_with_warning(rng):
+    """Satellite regression: configured seq_tile > S_max used to clamp
+    silently inside the kernel wrapper; now the clamp warns once (through
+    the shared tiling machinery) and the result is unchanged."""
+    args = _case(rng, s=24)
+    lens = jnp.asarray([0, 10, 23], jnp.int32)
+    tiling._fit_warned.clear()
+    with pytest.warns(UserWarning, match="exceeds the traversed capacity"):
+        big = fused_append_attend(*args, lens, seq_tile=128,
+                                  dynamic_grid=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # once per geometry
+        again = fused_append_attend(*args, lens, seq_tile=128,
+                                    dynamic_grid=True)
+    ref = fused_append_attend(*args, lens, seq_tile=24, dynamic_grid=True)
+    for a, b, c in zip(big, again, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-6, atol=2e-6)

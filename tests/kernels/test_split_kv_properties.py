@@ -1,0 +1,46 @@
+"""Hypothesis property suite for split-KV flash-decode (importorskip
+pattern, per the ROADMAP's property-testing direction): split-KV ≡ serial
+decode within fp tolerance over random ``num_kv_splits`` ∈ {1..8} × ragged
+``cache_len`` — dead rows (-1 sentinel) and rows shorter than one split
+included — with bit-identical cache updates and serviced-tile counts.
+
+Whole-module skip when hypothesis is absent; the deterministic parametrized
+cases in test_split_kv.py cover the same contract without it.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.kernels.kv_multiport import fused_append_attend  # noqa: E402
+
+
+def _run(lens, splits, seed):
+    rng = np.random.default_rng(seed)
+    b, s, hkv, g, d = len(lens), 64, 2, 2, 16
+    args = (jnp.asarray(rng.normal(size=(b, hkv * g, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32))
+    return fused_append_attend(*args, jnp.asarray(lens, jnp.int32),
+                               seq_tile=8, dynamic_grid=True,
+                               num_kv_splits=splits, return_tiles=True)
+
+
+@hyp.given(
+    splits=st.integers(min_value=1, max_value=8),
+    lens=st.lists(st.integers(min_value=-1, max_value=63),
+                  min_size=1, max_size=5),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@hyp.settings(deadline=None, max_examples=30)
+def test_split_kv_equals_serial_property(splits, lens, seed):
+    ref = _run(lens, 1, seed)
+    got = _run(lens, splits, seed)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               rtol=2e-6, atol=2e-6)   # attention out
+    for a, b in zip(ref[1:], got[1:]):                 # caches + tile counts
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

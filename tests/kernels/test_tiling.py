@@ -1,5 +1,6 @@
-"""Tiling helpers: aligned-divisor tile clamping (with its one-time warning)
-and the exact word-layout pad/crop round trip."""
+"""Tiling helpers: the single-sourced live-tile bound, aligned-divisor tile
+clamping (with its one-time warnings) and the exact word-layout pad/crop
+round trip."""
 import warnings
 
 import jax.numpy as jnp
@@ -7,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import tiling
-from repro.kernels.tiling import (LANE, SUBLANE, fit_seq_tile, pack_words,
-                                  unpack_words, word_pad)
+from repro.kernels.tiling import (LANE, SUBLANE, clamp_seq_tile, fit_seq_tile,
+                                  live_tile_bound, pack_words, unpack_words,
+                                  word_pad)
 
 
 def test_word_pad():
@@ -17,6 +19,61 @@ def test_word_pad():
     assert word_pad(LANE + 1) == 2 * LANE
     assert word_pad(3, SUBLANE) == SUBLANE
     assert word_pad(16, SUBLANE) == 16
+
+
+@pytest.mark.parametrize("seq_tile", [1, 8, 16, 128])
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_live_tile_bound_off_by_one_edges(seq_tile, k):
+    """The ONE ceil-div bound both kernels (and the split path) share,
+    pinned at the off-by-one edges: an exclusive end one short of a tile
+    boundary (a whole tile fewer when the tile is a single token), exactly
+    on it, and one past it."""
+    assert live_tile_bound(k * seq_tile - 1, seq_tile) == \
+        (k if seq_tile > 1 else k - 1)
+    assert live_tile_bound(k * seq_tile, seq_tile) == k
+    assert live_tile_bound(k * seq_tile + 1, seq_tile) == k + 1
+
+
+def test_live_tile_bound_degenerate_and_traced():
+    assert live_tile_bound(0, 8) == 0          # empty live range
+    assert live_tile_bound(1, 8) == 1
+    # accepts traced/array scalars (the dynamic-grid path feeds jnp.max)
+    got = live_tile_bound(jnp.int32(17), 8)
+    assert int(got) == 3
+
+
+def test_live_tile_bound_matches_both_historic_forms():
+    """Regression for the split-brain this helper replaced: the decode
+    kernel's inclusive ``(last + tile) // tile`` over ``max(lens)`` and the
+    chunk kernel's exclusive ``(last + tile - 1) // tile`` must BOTH equal
+    the shared bound on their own inputs."""
+    for tile in (1, 4, 8, 128):
+        for length in range(0, 3 * tile + 2):
+            # decode: append position == length, live end is length + 1
+            assert live_tile_bound(length + 1, tile) == \
+                (length + tile) // tile
+            # chunk: exclusive last == length
+            assert live_tile_bound(length, tile) == \
+                (length + tile - 1) // tile
+
+
+def test_clamp_seq_tile_warns_once_then_silent():
+    """Satellite regression: a configured seq_tile larger than the
+    traversed capacity used to clamp silently — now it warns once per
+    (s, seq_tile) geometry and stays silent after."""
+    tiling._fit_warned.clear()
+    with pytest.warns(UserWarning, match="exceeds the traversed capacity"):
+        assert clamp_seq_tile(24, 128) == 24
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # second call must stay silent
+        assert clamp_seq_tile(24, 128) == 24
+
+
+def test_clamp_seq_tile_in_range_is_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert clamp_seq_tile(64, 16) == 16
+        assert clamp_seq_tile(64, 64) == 64
 
 
 def test_fit_seq_tile_divisible_is_silent():

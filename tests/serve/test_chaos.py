@@ -18,7 +18,7 @@ from repro.models import init_params
 from repro.serve.chaos import (KINDS, ChaosHarness, Fault, FaultPlan,
                                InvariantViolation, check_invariants)
 from repro.serve.engine import MultiPortEngine
-from repro.serve.traffic import drive, poisson_arrivals
+from repro.serve.traffic import Arrival, drive, poisson_arrivals
 
 
 @pytest.fixture(scope="module")
@@ -147,6 +147,49 @@ def test_chaos_stall_preserves_tokens(served):
     drive(eng, arrivals, on_cycle=harness)
     harness.finalize(eng)
     assert eng.stalled_retirements > 0               # the stall really bit
+    assert ({r.rid: tuple(r.generated) for r in eng.finished}
+            == {r.rid: tuple(r.generated) for r in ref.finished})
+
+
+def test_fault_in_idle_stretch_fires_on_real_cycle(served):
+    """Satellite regression (injection-tick vs plan-tick): a fault whose
+    plan tick lands inside an idle stretch used to be injected on a cycle
+    that never ran a traversal — drive() called the hook before
+    discovering there was no pending work, so the fault's effect was
+    consumed by the idle fast-forward and its effective tick silently
+    drifted. Now the hook fires ONLY on cycles that step: the fault lands
+    on the first real macro-cycle after the gap, with its plan tick and
+    residual drift stamped on the injected record."""
+    cfg, params = served
+    arrivals = (Arrival(arrival_tick=0, prompt=(5, 7, 11, 13), max_new=2),
+                Arrival(arrival_tick=500, prompt=(3, 9, 2, 6), max_new=2))
+    ref = _engine(params, cfg)
+    drive(ref, arrivals)
+
+    # plan tick 400: strictly inside the idle gap between the clusters
+    plan = FaultPlan(seed=0, faults=(
+        Fault(tick=400, kind="stall", magnitude=2),))
+    harness = ChaosHarness(plan)
+    seen = []
+
+    def hook(eng):
+        seen.append((eng.vclock, eng.pending_work()))
+        harness(eng)
+
+    eng = _engine(params, cfg)
+    drive(eng, arrivals, on_cycle=hook)
+    harness.finalize(eng)
+
+    # the hook only ever fires on cycles with real work to step
+    assert seen and all(pw for _, pw in seen)
+    # and the plan tick really fell where no stepping cycle's clock landed
+    assert all(not (400 <= v < 500) for v, _ in seen)
+    rec = next(i for i in harness.injected if i["kind"] == "stall")
+    assert rec["plan_tick"] == 400
+    assert rec["tick"] >= 500                # first REAL cycle after the gap
+    assert rec["drift"] == rec["tick"] - 400 > 0
+    assert eng.retire_stall_cycles == 0      # the stall drained in-run
+    # faults move WHEN, never WHAT: tokens identical to the fault-free run
     assert ({r.rid: tuple(r.generated) for r in eng.finished}
             == {r.rid: tuple(r.generated) for r in ref.finished})
 

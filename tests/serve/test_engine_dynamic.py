@@ -52,6 +52,37 @@ def test_dynamic_grid_single_trace_token_identical(setup):
     assert ed.steady_decode_tile_reads == eb.steady_decode_tile_reads
 
 
+def test_split_kv_serving_token_identical(setup):
+    """Split-KV decode end-to-end: greedy tokens are identical across
+    num_kv_splits, schedule modes and kernel modes; the same tiles are
+    serviced (splits parallelize chains, they never add work) while the
+    critical-path latency proxy strictly shrinks."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (3, 9, 18, 30)]
+    e1, t1 = _run(cfg, params, prompts, seq_tile=8)
+    e4, t4 = _run(cfg, params, prompts, seq_tile=8, num_kv_splits=4)
+    _, ts = _run(cfg, params, prompts, seq_tile=8, num_kv_splits=2,
+                 schedule_mode="static")
+    er, tr = _run(cfg, params, prompts, seq_tile=8, num_kv_splits=4,
+                  kernel_mode="reference")
+    assert t1 == t4 == ts == tr
+    # the reference (two-pass jnp) path has no split stage: forced off
+    assert er.num_kv_splits == 1 and e4.num_kv_splits == 4
+    # identical tile accounting — the bound gate needs no split-awareness
+    assert e4.steady_decode_tile_reads == e1.steady_decode_tile_reads
+    assert e4.steady_decode_tile_bound == e1.steady_decode_tile_bound
+    # but the longest per-row chain (the latency proxy) got shorter
+    assert (e4.steady_decode_critical_tiles
+            < e1.steady_decode_critical_tiles)
+
+
+def test_split_kv_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        MultiPortEngine(params, cfg, slots=2, max_len=64, num_kv_splits=0)
+
+
 def test_dynamic_grid_off_for_reference_mode(setup):
     cfg, params = setup
     eng = MultiPortEngine(params, cfg, slots=2, max_len=64,
